@@ -1,0 +1,263 @@
+"""One benchmark per paper table/figure (EXPERIMENTS.md §Repro).
+
+Fig 7(a) type inference  -> table_type_inference
+Fig 7(b) heuristic rules -> table_rbo
+Fig 7(c) CBO vs plans    -> table_cbo
+Fig 7(d) LDBC workloads  -> table_ldbc
+Fig 8(a) data scaling    -> table_scaling
+Fig 9/10 money mule      -> table_money_mule
+
+Each returns a list of row dicts and appends CSV lines to the shared
+collector. "OT" = exceeded the row cap (the paper's 1h timeout analogue).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import queries as Q
+from repro.core.cbo import random_plan
+from repro.core.gopt import GOpt
+from repro.core.physical import ExpandNode, JoinNode, ScanNode, plan_signature
+from repro.graphdb.ldbc import generate_ldbc
+
+OT = float("nan")
+ROW_CAP = 8_000_000
+
+
+def _time_exec(gopt, opt, repeats=3, **kw) -> tuple[float, int]:
+    """(best wall seconds, result count or -1 on OT)."""
+    best = None
+    count = -1
+    for _ in range(repeats):
+        try:
+            t0 = time.perf_counter()
+            tbl, stats = gopt.execute(opt, max_rows=ROW_CAP, **kw)
+            dt = time.perf_counter() - t0
+        except (RuntimeError, MemoryError):
+            return OT, -1
+        best = dt if best is None else min(best, dt)
+        if tbl.nrows:
+            first = tbl.cols[list(tbl.cols)[0]]
+            count = int(first[0]) if first.shape[0] == 1 else tbl.nrows
+    return best, count
+
+
+def _fmt(x: float) -> str:
+    return "OT" if x != x else f"{x*1e6:.0f}"
+
+
+class Collector:
+    def __init__(self):
+        self.lines: list[str] = []
+
+    def add(self, name: str, us: float, derived: str = ""):
+        self.lines.append(f"{name},{_fmt(us)},{derived}")
+        print(f"{name},{_fmt(us)},{derived}", flush=True)
+
+
+def make_gopt(sf: float, seed: int = 7) -> GOpt:
+    return GOpt(generate_ldbc(sf=sf, seed=seed))
+
+
+# ---------------------------------------------------------------- Fig 7(a)
+def table_type_inference(gopt: GOpt, coll: Collector):
+    rows = []
+    for name, text in Q.QT.items():
+        on = gopt.optimize(text, type_inference=True)
+        t_on, c_on = _time_exec(gopt, on)
+        off = gopt.optimize(text, type_inference=False)
+        t_off, c_off = _time_exec(gopt, off)
+        assert c_on == c_off or c_off == -1, (name, c_on, c_off)
+        speedup = (t_off / t_on) if t_off == t_off else float("inf")
+        coll.add(f"typeinf/{name}/on", t_on, f"count={c_on}")
+        coll.add(f"typeinf/{name}/off", t_off, f"speedup={speedup:.1f}x")
+        rows.append({"query": name, "on_s": t_on, "off_s": t_off,
+                     "speedup": speedup, "count": c_on})
+    return rows
+
+
+# ---------------------------------------------------------------- Fig 7(b)
+def table_rbo(gopt: GOpt, coll: Collector):
+    rows = []
+    modes = {
+        "Qr1": ("trim", {}), "Qr2": ("trim", {}),
+        "Qr3": ("fuse", {}), "Qr4": ("fuse", {}),
+        "Qr5": ("filter", {}), "Qr6": ("filter", {}),
+    }
+    for name, text in Q.QR.items():
+        params = Q.QR_PARAMS.get(name)
+        rule, _ = modes[name]
+        if rule == "trim":
+            on = gopt.optimize(text, params)
+            t_on, c_on = _time_exec(gopt, on, trim_fields=True)
+            t_off, c_off = _time_exec(gopt, on, trim_fields=False)
+        elif rule == "fuse":
+            on = gopt.optimize(text, params)
+            t_on, c_on = _time_exec(gopt, on, fuse_expand=True)
+            t_off, c_off = _time_exec(gopt, on, fuse_expand=False)
+        else:  # FilterIntoMatchRule: rbo off keeps SELECT at the end
+            on = gopt.optimize(text, params, rbo=True)
+            t_on, c_on = _time_exec(gopt, on)
+            off = gopt.optimize(text, params, rbo=False)
+            t_off, c_off = _time_exec(gopt, off)
+        assert c_on == c_off or -1 in (c_on, c_off), (name, c_on, c_off)
+        speedup = (t_off / t_on) if t_off == t_off else float("inf")
+        coll.add(f"rbo/{name}/{rule}-on", t_on, f"count={c_on}")
+        coll.add(f"rbo/{name}/{rule}-off", t_off, f"speedup={speedup:.1f}x")
+        rows.append({"query": name, "rule": rule, "on_s": t_on,
+                     "off_s": t_off, "speedup": speedup})
+    return rows
+
+
+# ---------------------------------------------------------------- Fig 7(c)
+def table_cbo(gopt: GOpt, coll: Collector, n_random: int = 10):
+    import random as _r
+    rows = []
+    for name, text in Q.QC.items():
+        opt = gopt.optimize(text)
+        t_gopt, c = _time_exec(gopt, opt)
+        # Neo4j-style low-order plan
+        neo = gopt.neo4j_style_plan(opt.logical.pattern())
+        opt_neo = type(opt)(opt.logical, neo, 0.0)
+        t_neo, c_neo = _time_exec(gopt, opt_neo)
+        # random plans
+        rng = _r.Random(42)
+        t_rand = []
+        for i in range(n_random):
+            rp = random_plan(opt.logical.pattern(), rng)
+            t_r, _c = _time_exec(gopt, type(opt)(opt.logical, rp, 0.0),
+                                 repeats=1)
+            t_rand.append(t_r)
+        finite = [t for t in t_rand if t == t]
+        mean_rand = float(np.mean(finite)) if finite else OT
+        n_ot = sum(1 for t in t_rand if t != t)
+        coll.add(f"cbo/{name}/gopt", t_gopt,
+                 f"count={c};plan={plan_signature(opt.physical)}")
+        coll.add(f"cbo/{name}/neo4j-style", t_neo,
+                 f"x{(t_neo/t_gopt) if t_neo==t_neo else float('inf'):.1f}")
+        coll.add(f"cbo/{name}/random-mean", mean_rand,
+                 f"n_ot={n_ot}/{n_random}")
+        rows.append({"query": name, "gopt_s": t_gopt, "neo4j_s": t_neo,
+                     "rand_mean_s": mean_rand, "rand_ot": n_ot})
+    return rows
+
+
+# ---------------------------------------------------------------- Fig 7(d)
+def table_ldbc(gopt: GOpt, coll: Collector, n_random: int = 5):
+    import random as _r
+    rows = []
+    for name, text in Q.QIC.items():
+        params = Q.QIC_PARAMS[name]
+        opt = gopt.optimize(text, params)
+        t_gopt, c = _time_exec(gopt, opt)
+        neo = gopt.neo4j_style_plan(opt.logical.pattern())
+        t_neo, _ = _time_exec(gopt, type(opt)(opt.logical, neo, 0.0))
+        rng = _r.Random(7)
+        t_rand = []
+        for _i in range(n_random):
+            rp = random_plan(opt.logical.pattern(), rng)
+            t_r, _c = _time_exec(gopt, type(opt)(opt.logical, rp, 0.0),
+                                 repeats=1)
+            t_rand.append(t_r)
+        finite = [t for t in t_rand if t == t]
+        coll.add(f"ldbc/{name}/gopt", t_gopt, f"rows={c}")
+        coll.add(f"ldbc/{name}/neo4j-style", t_neo,
+                 f"x{(t_neo/t_gopt) if t_neo==t_neo else float('inf'):.1f}")
+        rand_mean = float(np.mean(finite)) if finite else OT
+        coll.add(f"ldbc/{name}/random-mean", rand_mean,
+                 f"n_ot={n_random-len(finite)}/{n_random}")
+        rows.append({"query": name, "gopt_s": t_gopt, "neo4j_s": t_neo,
+                     "rand_mean_s": rand_mean})
+    return rows
+
+
+# ---------------------------------------------------------------- Fig 8(a)
+def table_scaling(coll: Collector, sfs=(0.3, 1.0, 3.0)):
+    rows = []
+    base: dict[str, float] = {}
+    for sf in sfs:
+        gopt = make_gopt(sf)
+        for name, text in list(Q.QIC.items())[:4]:
+            opt = gopt.optimize(text, Q.QIC_PARAMS[name])
+            t, _ = _time_exec(gopt, opt)
+            if sf == sfs[0]:
+                base[name] = t
+            coll.add(f"scaling/sf{sf}/{name}", t,
+                     f"rel={t/base[name]:.2f}x" if base.get(name) else "")
+            rows.append({"sf": sf, "query": name, "t_s": t})
+    return rows
+
+
+# ---------------------------------------------------------------- Fig 9/10
+def table_money_mule(gopt: GOpt, coll: Collector, hops: int = 3):
+    rng = np.random.default_rng(11)
+    n_person = gopt.store.v_count["PERSON"]
+    rows = []
+    settings = [(3, 400), (400, 3), (30, 30), (2, 1500), (800, 800)]
+    for si, (n1, n2) in enumerate(settings):
+        S1 = sorted(rng.choice(n_person, size=n1, replace=False).tolist())
+        S2 = sorted(rng.choice(n_person, size=n2, replace=False).tolist())
+        params = {"S1": S1, "S2": S2, "hops": hops}
+        opt = gopt.optimize(Q.MONEY_MULE, params)
+        t_gopt, c = _time_exec(gopt, opt, repeats=2)
+        pattern = opt.logical.pattern()
+        # alternatives: join at every split position 0..hops (0/hops =
+        # single-direction expansion)
+        aliases = ["p1"] + [f"__k#{h}_h{0}_0" for h in range(hops)]
+        # reconstruct hop aliases from the expanded pattern
+        chain = _path_aliases(pattern, "p1", "p2")
+        alts = {}
+        for pos in range(0, hops + 1):
+            alts[f"({pos},{hops-pos})"] = _split_plan(pattern, chain, pos)
+        best_alt, results = None, {}
+        for k, plan in alts.items():
+            t_alt, _ = _time_exec(gopt, type(opt)(opt.logical, plan, 0.0),
+                                  repeats=1)
+            results[k] = t_alt
+            if t_alt == t_alt and (best_alt is None or t_alt < best_alt):
+                best_alt = t_alt
+        coll.add(f"moneymule/ST{si+1}/gopt", t_gopt,
+                 f"|S1|={n1};|S2|={n2};count={c};"
+                 f"plan={plan_signature(opt.physical)}")
+        for k, t in results.items():
+            coll.add(f"moneymule/ST{si+1}/alt{k}", t, "")
+        rows.append({"setting": si, "gopt_s": t_gopt, "alts": results})
+    return rows
+
+
+def _path_aliases(pattern, start, end):
+    """Order path vertices from start to end."""
+    chain = [start]
+    prev = None
+    cur = start
+    while cur != end:
+        for e in pattern.adjacent(cur):
+            o = e.other(cur)
+            if o != prev:
+                chain.append(o)
+                prev, cur = cur, o
+                break
+    return chain
+
+
+def _split_plan(pattern, chain, pos):
+    """Plan joining a left expansion of `pos` hops from p1 with a right
+    expansion of the rest from p2; pos 0/len = single direction."""
+    def left_deep(order):
+        node = ScanNode(order[0])
+        bound = {order[0]}
+        for a in order[1:]:
+            edges = [e for e in pattern.adjacent(a) if e.other(a) in bound]
+            node = ExpandNode(node, a, edges)
+            bound.add(a)
+        return node
+    if pos == 0:
+        return left_deep(list(reversed(chain)))
+    if pos == len(chain) - 1:
+        return left_deep(chain)
+    join_alias = chain[pos]
+    left = left_deep(chain[:pos + 1])
+    right = left_deep(list(reversed(chain[pos:])))
+    return JoinNode(left, right, (join_alias,))

@@ -1,0 +1,42 @@
+"""Baseline vs optimized sweep comparison (§Perf closing table).
+
+    PYTHONPATH=src python -m benchmarks.perf_compare \
+        dryrun_results.json dryrun_results_optimized.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main():
+    base_p = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    opt_p = (sys.argv[2] if len(sys.argv) > 2
+             else "dryrun_results_optimized.json")
+    base = {(r["arch"], r["shape"], r["mesh"]): r
+            for r in json.load(open(base_p))}
+    opt = {(r["arch"], r["shape"], r["mesh"]): r
+           for r in json.load(open(opt_p))}
+    print("| arch | shape | mem GB (base->opt) | T_m s | T_x s | note |")
+    print("|---|---|---|---|---|---|")
+    for key in base:
+        if key[2] != "16x16":
+            continue
+        b, o = base.get(key), opt.get(key)
+        if not (b and o and b["status"] == "OK" and o["status"] == "OK"):
+            continue
+        bm = b["bytes_per_device"]["total_gb"]
+        om = o["bytes_per_device"]["total_gb"]
+        brf, orf = b.get("roofline", {}), o.get("roofline", {})
+        note = ""
+        if abs(bm - om) / max(bm, 1e-9) > 0.03:
+            note = f"{bm/max(om,1e-9):.1f}x mem"
+        print(f"| {key[0]} | {key[1]} | {bm:.1f} -> {om:.1f} | "
+              f"{brf.get('t_memory_s', 0):.3g} -> "
+              f"{orf.get('t_memory_s', 0):.3g} | "
+              f"{brf.get('t_collective_s', 0):.3g} -> "
+              f"{orf.get('t_collective_s', 0):.3g} | {note} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Benchmark queries — the paper's Appendix A adapted to the LDBC-SNB
+schema subset in repro.core.schema (PLACE split into CITY/COUNTRY; MESSAGE is
+the POST|COMMENT union, written out explicitly)."""
+
+# ---- Q_t[1..5]: type-inference evaluation (paper Listing 1) --------------
+QT = {
+    "Qt1": "Match (p)<-[:HASCREATOR]-(m)<-[:CONTAINEROF]-(f) "
+           "Return count(p)",
+    "Qt2": "Match (p)-[]->(o:ORGANISATION)-[]->(c:COUNTRY) Return count(p)",
+    "Qt3": "Match (p)<-[:ISLOCATEDIN]-(x)-[]->(t:TAG) Return count(p)",
+    "Qt4": "Match (p1)<-[]-(p2:POST), (p1)<-[:HASMODERATOR]-(f)-[]->(p2) "
+           "Return count(p1)",
+    "Qt5": "Match (p1:POST)-[]->(p2), (p2)-[]->(c:CITY) Return count(p2)",
+}
+
+# ---- Q_r[1..6]: RBO rules (paper Listing 2) ------------------------------
+# Qr1/2 -> FieldTrimRule; Qr3/4 -> ExpandGetVFusionRule;
+# Qr5/6 -> FilterIntoMatchRule
+QR = {
+    "Qr1": ("Match (message:COMMENT|POST)-[:HASCREATOR]->(person:PERSON), "
+            "(message)-[:HASTAG]->(tag:TAG), "
+            "(person)-[:HASINTEREST]->(tag) Return count(person)"),
+    "Qr2": ("Match (p:COMMENT)-[]->(p2:PERSON)-[]->(c:CITY), "
+            "(p)<-[]-(message), (message)-[]->(tag:TAG) Return count(c)"),
+    "Qr3": ("Match (author:PERSON)<-[:HASCREATOR]-(msg1:POST|COMMENT) "
+            "Return count(author)"),
+    "Qr4": ("Match (author:PERSON)<-[:HASCREATOR]-(msg1:POST|COMMENT) "
+            "Where msg1.length > $len Return count(author)"),
+    "Qr5": ("Match (p1:PERSON)-[:KNOWS]->(p2:PERSON) "
+            "Where p1.id = $id1 and p2.id = $id2 Return count(p1)"),
+    "Qr6": ("Match (p1:PERSON)-[:KNOWS]->(p2:PERSON)-[:LIKES]->"
+            "(comment:COMMENT) Where p1.id = $id1 and p2.id = $id2 and "
+            "comment.length > $len Return count(p1)"),
+}
+QR_PARAMS = {"Qr4": {"len": 128}, "Qr5": {"id1": 3, "id2": 7},
+             "Qr6": {"id1": 3, "id2": 7, "len": 64}}
+
+# ---- Q_c[1..4(a|b)]: CBO (paper Listing 3) -------------------------------
+QC = {
+    "Qc1a": ("Match (message:POST|COMMENT)-[:HASCREATOR]->(person:PERSON), "
+             "(message)-[:HASTAG]->(tag:TAG), "
+             "(person)-[:HASINTEREST]->(tag) Return count(person)"),
+    "Qc1b": ("Match (message:PERSON|FORUM)-[:KNOWS|HASMODERATOR]->"
+             "(person:PERSON), (message)-[]->(tag:TAG), "
+             "(person)-[]->(tag) Return count(person)"),
+    "Qc2a": ("Match (person1:PERSON)-[:LIKES]->(message:POST|COMMENT), "
+             "(message)-[:HASCREATOR]->(person2:PERSON), "
+             "(person1)<-[:HASMODERATOR]-(place:FORUM), "
+             "(person2)<-[:HASMODERATOR]-(place) Return count(person1)"),
+    "Qc2b": ("Match (person1:PERSON)-[:LIKES]->(message:POST), "
+             "(message)<-[:CONTAINEROF]-(person2:FORUM), "
+             "(person1)-[:KNOWS|HASINTEREST]->(place:PERSON|TAG), "
+             "(person2)-[:HASMODERATOR|HASTAG]->(place) "
+             "Return count(person1)"),
+    "Qc3a": ("Match (person1:PERSON)<-[:HASCREATOR]-(comment:COMMENT), "
+             "(comment)-[:REPLYOF]->(post:POST), "
+             "(post)<-[:CONTAINEROF]-(forum:FORUM), "
+             "(forum)-[:HASMEMBER]->(person2:PERSON) Return count(person1)"),
+    "Qc3b": ("Match (p:COMMENT)-[]->(pp:PERSON)-[]->(ct:CITY), "
+             "(p)<-[]-(message), (message)-[]->(tag:TAG) Return count(p)"),
+    "Qc4a": ("Match (forum:FORUM)-[:CONTAINEROF]->(post:POST), "
+             "(forum)-[:HASMEMBER]->(person1:PERSON), "
+             "(forum)-[:HASMEMBER]->(person2:PERSON), "
+             "(person1)-[:KNOWS]->(person2), "
+             "(person1)-[:LIKES]->(post), "
+             "(person2)-[:LIKES]->(post) Return count(person1)"),
+    "Qc4b": ("Match (forum:FORUM)-[:HASTAG]->(post:TAG), "
+             "(forum)-[:HASMODERATOR]->(person1:PERSON), "
+             "(forum)-[:HASMODERATOR|CONTAINEROF]->(person2:PERSON|POST), "
+             "(person1)-[:KNOWS|LIKES]->(person2), "
+             "(person1)-[:HASINTEREST]->(post), "
+             "(person2)-[:HASINTEREST|HASTAG]->(post) "
+             "Return count(person1)"),
+}
+
+# ---- LDBC-interactive-complex-like workload ------------------------------
+# The official IC queries use WITH/OPTIONAL; these keep each query's pattern
+# core + relational tail inside the supported subset.
+QIC = {
+    "ic1": ("MATCH (p:PERSON)-[:KNOWS*2]-(friend:PERSON) "
+            "WHERE p.id = $pid RETURN friend, count(p) AS c "
+            "ORDER BY c DESC LIMIT 20"),
+    "ic3": ("MATCH (p:PERSON)-[:KNOWS]-(friend:PERSON), "
+            "(friend)<-[:HASCREATOR]-(m:POST|COMMENT), "
+            "(m)-[:HASTAG]->(t:TAG) WHERE p.id = $pid "
+            "RETURN friend, count(m) AS cnt ORDER BY cnt DESC LIMIT 20"),
+    "ic5": ("MATCH (p:PERSON)-[:KNOWS]-(friend:PERSON), "
+            "(friend)<-[:HASMEMBER]-(f:FORUM), "
+            "(f)-[:CONTAINEROF]->(post:POST), "
+            "(post)-[:HASCREATOR]->(friend) WHERE p.id = $pid "
+            "RETURN f, count(post) AS posts ORDER BY posts DESC LIMIT 20"),
+    "ic6": ("MATCH (p:PERSON)-[:KNOWS*2]-(friend:PERSON), "
+            "(friend)<-[:HASCREATOR]-(post:POST), "
+            "(post)-[:HASTAG]->(t:TAG) WHERE p.id = $pid "
+            "RETURN t, count(post) AS cnt ORDER BY cnt DESC LIMIT 10"),
+    "ic11": ("MATCH (p:PERSON)-[:KNOWS]-(friend:PERSON), "
+             "(friend)-[:WORKAT]->(org:ORGANISATION), "
+             "(org)-[:ISLOCATEDIN]->(c:COUNTRY) WHERE p.id = $pid "
+             "RETURN friend, org, count(c) AS n ORDER BY n LIMIT 10"),
+    "ic12": ("MATCH (p:PERSON)-[:KNOWS]-(friend:PERSON), "
+             "(friend)<-[:HASCREATOR]-(comment:COMMENT), "
+             "(comment)-[:REPLYOF]->(post:POST), (post)-[:HASTAG]->(t:TAG), "
+             "(t)-[:HASTYPE]->(tc:TAGCLASS) WHERE p.id = $pid "
+             "RETURN friend, count(comment) AS cnt "
+             "ORDER BY cnt DESC LIMIT 20"),
+}
+QIC_PARAMS = {k: {"pid": 5} for k in QIC}
+
+MONEY_MULE = ("MATCH (p1:PERSON)-[k:KNOWS*$hops]-(p2:PERSON) "
+              "WHERE p1.id IN $S1 and p2.id IN $S2 RETURN count(p1)")

@@ -1,0 +1,67 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md §Dry-run and
+§Roofline markdown tables.
+
+    PYTHONPATH=src python -m benchmarks.report dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _gb(x) -> str:
+    return f"{x/2**30:.2f}"
+
+
+def render(results: list[dict]) -> str:
+    out = []
+    out.append("### Dry-run matrix (lower+compile per cell)\n")
+    out.append("| arch | shape | mesh | status | bytes/device (GB) | "
+               "compile (s) | collectives |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in results:
+        if r["status"] == "OK":
+            mem = _gb(sum(r["bytes_per_device"][k]
+                          for k in ("arguments", "outputs", "temps")))
+            colls = ""
+            if "roofline" in r:
+                colls = ",".join(
+                    f"{k.replace('all-','a-').replace('collective-','c-')}:"
+                    f"{v/2**30:.2f}GB"
+                    for k, v in sorted(
+                        r["roofline"].get("collectives", {}).items()))
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+                       f"{mem} | {r['compile_s']} | {colls} |")
+        elif r["status"] == "SKIPPED":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | "
+                       f"— | — | {r['reason'][:60]} |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | "
+                       f"— | — | {r.get('error','')[:60]} |")
+    out.append("")
+    out.append("### Roofline terms (single-pod 16x16, per chip, seconds)\n")
+    out.append("| arch | shape | T_compute | T_memory | T_collective | "
+               "dominant | MODEL_FLOPS/HLO_FLOPS | roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in results:
+        if r["status"] != "OK" or r["mesh"] != "16x16" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.3g} | "
+            f"{rf['t_memory_s']:.3g} | {rf['t_collective_s']:.3g} | "
+            f"{rf['dominant']} | {rf['useful_flops_ratio']:.3f} | "
+            f"{rf['roofline_fraction']:.4f} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    print(render(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""GNN minibatch training fed by the paper-engine's CSR substrate.
+
+The fanout sampler (graphdb/sampler.py) runs on the same sorted-CSR arrays
+GOpt's pattern engine expands — the point of contact between the paper's
+system and the assigned GNN architectures. Trains GAT on sampled subgraphs
+of a power-law graph (the ``minibatch_lg`` shape, reduced for CPU).
+
+    PYTHONPATH=src python examples/gnn_sampling.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax                                       # noqa: E402
+import jax.numpy as jnp                          # noqa: E402
+import numpy as np                               # noqa: E402
+
+from repro.graphdb.sampler import random_power_law_graph, sample_fanout  # noqa: E402
+from repro.models.gnn import gat                 # noqa: E402
+from repro.train import optimizer as opt_mod     # noqa: E402
+
+
+def main():
+    n_nodes, d_feat, n_classes = 20_000, 32, 8
+    csr = random_power_law_graph(n_nodes, avg_degree=12, seed=0)
+    rng = np.random.default_rng(0)
+    # node features carry the label signal so sampling-based training learns
+    feats = rng.normal(size=(n_nodes, d_feat)).astype(np.float32)
+    labels = (feats[:, :n_classes].argmax(axis=1)).astype(np.int32)
+
+    cfg = gat.GATConfig(d_feat=d_feat, n_classes=n_classes, n_heads=4,
+                        d_hidden=16)
+    params = gat.init_params(cfg, jax.random.PRNGKey(0))
+    acfg = opt_mod.AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=200,
+                               weight_decay=0.0)
+    ost = opt_mod.init(acfg, params)
+    step = jax.jit(gat.make_train_step(cfg, acfg))
+
+    max_nodes, max_edges = 4096, 16384
+    for it in range(120):
+        seeds = rng.choice(n_nodes, size=256, replace=False)
+        nodes, edges, n_n, n_e = sample_fanout(
+            csr, seeds, fanouts=[10, 5], rng=rng,
+            max_nodes=max_nodes, max_edges=max_edges)
+        # standard GAT practice: add self-loops so nodes see themselves
+        free = max_edges - n_e
+        if free > 0:
+            self_n = min(n_n, free)
+            edges[0, n_e:n_e + self_n] = np.arange(self_n)
+            edges[1, n_e:n_e + self_n] = np.arange(self_n)
+        sub_feats = np.zeros((max_nodes, d_feat), np.float32)
+        sub_labels = np.full(max_nodes, -1, np.int32)
+        sub_feats[:n_n] = feats[nodes[:n_n]]
+        sub_labels[:n_n] = labels[nodes[:n_n]]
+        batch = {"node_feat": jnp.asarray(sub_feats),
+                 "edges": jnp.asarray(edges),
+                 "labels": jnp.asarray(sub_labels)}
+        params, ost, m = step(params, ost, batch)
+        if it % 10 == 0:
+            print(f"iter {it:3d}: sampled {n_n} nodes / {n_e} edges  "
+                  f"loss={float(m['loss']):.4f} acc={float(m['acc']):.3f}")
+    assert float(m["acc"]) > 0.3, "sampled training should beat chance"
+    print(f"final acc {float(m['acc']):.3f} (chance {1/n_classes:.3f})")
+
+
+if __name__ == "__main__":
+    main()

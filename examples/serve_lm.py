@@ -1,0 +1,43 @@
+"""Batched LM serving with continuous-batching-lite (serve/engine.py):
+requests of different lengths share a fixed slot pool + one KV cache; decode
+advances every active slot per tick, finished slots refill from the queue.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax                                   # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+import numpy as np                           # noqa: E402
+
+from repro.models import transformer as tfm  # noqa: E402
+from repro.serve.engine import Request, ServeEngine  # noqa: E402
+
+
+def main():
+    cfg = tfm.TransformerConfig(
+        name="serve-demo", n_layers=4, d_model=128, n_heads=8, n_kv_heads=4,
+        d_ff=512, vocab_size=512, block_q=32, block_kv=32,
+        dtype=jnp.float32)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, n_slots=4, max_len=96, eos_id=-1)
+
+    rng = np.random.default_rng(0)
+    for rid in range(10):
+        plen = int(rng.integers(4, 24))
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, 512, plen).astype(np.int32),
+                           max_tokens=int(rng.integers(4, 12))))
+    done = eng.run()
+    print(f"served {len(done)} requests in {eng.ticks} decode ticks "
+          f"(continuous batching over 4 slots)")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"  req {r.rid}: prompt_len={len(r.prompt)} "
+              f"generated={len(r.out_tokens)} tokens {r.out_tokens[:6]}...")
+    assert len(done) == 10
+
+
+if __name__ == "__main__":
+    main()

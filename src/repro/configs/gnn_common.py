@@ -1,0 +1,210 @@
+"""Shared ArchBundle implementation for the GNN family.
+
+Every GNN arch must serve all four assigned shapes; citation-style shapes
+(full_graph_sm / minibatch_lg / ogb_products) are node classification over
+dense features, ``molecule`` is batched per-graph energy regression. The
+geometric models (SchNet/NequIP/EquiformerV2) additionally take positions on
+every shape (documented adaptation, DESIGN.md §4). ``minibatch_lg`` lowers the
+train step on the *sampled* subgraph produced by graphdb.sampler (fanout
+15-10 from 1024 seeds); the sampler itself is exercised in tests/examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchBundle, ShapeSpec, dp_axes, ns, sds
+from repro.train import optimizer as opt_mod
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeSpec(
+        "full_graph_sm", "train",
+        {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433, "n_classes": 7}),
+    "minibatch_lg": ShapeSpec(
+        "minibatch_lg", "train",
+        {"n_nodes": 169984, "n_edges": 168960, "d_feat": 602,
+         "n_classes": 41, "note": "sampled subgraph of reddit-scale graph "
+                                  "(232965 nodes), fanout 15-10 x 1024 seeds"}),
+    "ogb_products": ShapeSpec(
+        "ogb_products", "train",
+        {"n_nodes": 2449029, "n_edges": 61859140, "d_feat": 100,
+         "n_classes": 47}),
+    "molecule": ShapeSpec(
+        "molecule", "train",
+        {"n_nodes": 30, "n_edges": 64, "batch": 128}),
+}
+
+SMOKE_SHAPES = {
+    "full_graph_sm": ShapeSpec(
+        "full_graph_sm", "train",
+        {"n_nodes": 64, "n_edges": 256, "d_feat": 24, "n_classes": 5}),
+    "molecule": ShapeSpec(
+        "molecule", "train", {"n_nodes": 8, "n_edges": 16, "batch": 4}),
+}
+
+
+class GNNBundle(ArchBundle):
+    family = "gnn"
+
+    def __init__(self, arch_id: str, module, make_cfg: Callable,
+                 smoke: bool = False, flops_fn: Callable | None = None):
+        """make_cfg(shape_spec, geometric_inputs) -> model config."""
+        self.arch_id = arch_id
+        self.module = module
+        self.make_cfg = make_cfg
+        self.smoke = smoke
+        self.shapes = dict(SMOKE_SHAPES if smoke else GNN_SHAPES)
+        self._flops_fn = flops_fn
+
+    # ----------------------------------------------------------------- cfg
+    def model_cfg(self, shape: str):
+        return self.make_cfg(self.shapes[shape])
+
+    def init_params_abstract(self, shape: str = None):
+        cfg = self.model_cfg(shape)
+        return jax.eval_shape(lambda r: self.module.init_params(cfg, r),
+                              jax.random.PRNGKey(0))
+
+    def adam_cfg(self):
+        return opt_mod.AdamWConfig(lr=1e-3, total_steps=10000,
+                                   weight_decay=0.0)
+
+    def make_step(self, shape: str):
+        return self.module.make_train_step(self.model_cfg(shape),
+                                           self.adam_cfg())
+
+    # -------------------------------------------------------------- inputs
+    def needs_positions(self) -> bool:
+        return self.arch_id != "gat-cora"
+
+    @staticmethod
+    def _pad512(n: int) -> int:
+        """Input shardings need divisibility by the dp axes (<=32); pad all
+        node/edge dims to multiples of 512 (padding encoded as -1 edges /
+        -1 labels / 0 masks, which every model already handles)."""
+        return ((n + 511) // 512) * 512
+
+    def _batch_specs(self, shape: str):
+        d = self.shapes[shape].dims
+        if shape == "molecule":
+            N = self._pad512(d["n_nodes"] * d["batch"])
+            E = self._pad512(d["n_edges"] * d["batch"])
+            batch = {
+                "atom_type": sds((N,), jnp.int32),
+                "positions": sds((N, 3), jnp.float32),
+                "edges": sds((2, E), jnp.int32),
+                "graph_ids": sds((N,), jnp.int32),
+                "energy": sds((d["batch"],), jnp.float32),
+            }
+            if self.arch_id == "gat-cora":
+                batch.pop("positions")
+                batch["labels"] = sds((N,), jnp.int32)
+                batch.pop("energy")
+            return batch
+        N, E = self._pad512(d["n_nodes"]), self._pad512(d["n_edges"])
+        batch = {
+            "node_feat": sds((N, d["d_feat"]), jnp.float32),
+            "edges": sds((2, E), jnp.int32),
+            "labels": sds((N,), jnp.int32),
+            "train_mask": sds((N,), jnp.float32),
+        }
+        if self.needs_positions():
+            batch["positions"] = sds((N, 3), jnp.float32)
+        return batch
+
+    def input_specs(self, shape: str):
+        params = self.init_params_abstract(shape)
+        ost = self.abstract_adam_state(params)
+        return (params, ost, self._batch_specs(shape))
+
+    # ------------------------------------------------------------ shardings
+    def _param_pspec(self, path, leaf):
+        name = "/".join(path)
+        nd = len(leaf.shape)
+        if "so2" in name and nd == 2:       # EquiformerV2 SO(2) mixings
+            return P(None, "model")
+        if "ffn1" in name and nd == 2:
+            return P(None, "model")
+        return P(*([None] * nd))
+
+    def shardings(self, mesh, shape: str):
+        dp = dp_axes(mesh)
+        params = self.init_params_abstract(shape)
+        from repro.configs.base import params_spec_like
+        pshard = params_spec_like(
+            params, lambda path, leaf: ns(mesh, *self._param_pspec(path, leaf)))
+        ost = self.abstract_adam_state(params)
+        oshard = opt_mod.AdamState(
+            step=ns(mesh), mu=pshard, nu=pshard,
+            ef_error=jax.tree.map(lambda _: ns(mesh), ost.ef_error))
+
+        bspec = {}
+        for k, v in self._batch_specs(shape).items():
+            if k == "edges":
+                bspec[k] = ns(mesh, None, dp)
+            elif k == "energy":
+                bspec[k] = ns(mesh, dp)
+            else:
+                bspec[k] = ns(mesh, dp, *([None] * (len(v.shape) - 1)))
+        hints = {
+            "edge_msg": ns(mesh, dp),
+            "node_hidden": ns(mesh, dp),
+        }
+        in_sh = (pshard, oshard, bspec)
+        out_sh = (pshard, oshard, None)
+        return in_sh, out_sh, hints
+
+    # ------------------------------------------------------------- concrete
+    def make_concrete(self, shape: str, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        cfg = self.model_cfg(shape)
+        params = self.module.init_params(cfg, jax.random.PRNGKey(seed))
+        ost = opt_mod.init(self.adam_cfg(), params)
+        specs = self._batch_specs(shape)
+        d = self.shapes[shape].dims
+        n_real = d["n_nodes"] * d.get("batch", 1) if shape == "molecule" \
+            else d["n_nodes"]
+        e_real = d["n_edges"] * d.get("batch", 1) if shape == "molecule" \
+            else d["n_edges"]
+        batch = {}
+        for k, v in specs.items():
+            if k == "edges":
+                arr = np.full(v.shape, -1, np.int32)
+                if shape == "molecule":
+                    g = np.repeat(np.arange(d["batch"]), d["n_edges"])
+                    vals = (rng.integers(0, d["n_nodes"], size=(2, e_real))
+                            + g[None] * d["n_nodes"])
+                else:
+                    vals = rng.integers(0, n_real, size=(2, e_real))
+                arr[:, :e_real] = vals
+                batch[k] = jnp.asarray(arr)
+            elif k == "graph_ids":
+                arr = np.full(v.shape, -1, np.int32)
+                arr[:n_real] = np.repeat(np.arange(d["batch"]), d["n_nodes"])
+                batch[k] = jnp.asarray(arr)
+            elif k == "labels":
+                arr = np.full(v.shape, -1, np.int32)
+                arr[:n_real] = rng.integers(0, max(d.get("n_classes", 16), 2),
+                                            size=n_real)
+                batch[k] = jnp.asarray(arr)
+            elif k == "atom_type":
+                batch[k] = jnp.asarray(rng.integers(
+                    0, 10, size=v.shape).astype(np.int32))
+            elif k == "train_mask":
+                arr = np.zeros(v.shape, np.float32)
+                arr[:n_real] = (rng.random(n_real) < 0.5)
+                batch[k] = jnp.asarray(arr)
+            else:
+                batch[k] = jnp.asarray(
+                    rng.normal(size=v.shape).astype(np.float32))
+        return (params, ost, batch)
+
+    def model_flops(self, shape: str) -> float:
+        if self._flops_fn is None:
+            return 0.0
+        return self._flops_fn(self.model_cfg(shape), self.shapes[shape])

@@ -1,0 +1,243 @@
+"""Shared ArchBundle implementation for the LM transformer family."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ArchBundle, ShapeSpec, dp_axes, map_sds, ns,
+                                params_spec_like, sds, zero1)
+from repro.models import transformer as tfm
+from repro.models.sharding import hint_context
+from repro.train import optimizer as opt_mod
+
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train",
+                          {"seq_len": 4096, "global_batch": 256}),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                             {"seq_len": 32768, "global_batch": 32}),
+    "decode_32k": ShapeSpec("decode_32k", "decode",
+                            {"seq_len": 32768, "global_batch": 128}),
+    "long_500k": ShapeSpec("long_500k", "decode",
+                           {"seq_len": 524288, "global_batch": 1}),
+}
+
+
+def _apply_perf_env(cfg: tfm.TransformerConfig) -> tfm.TransformerConfig:
+    """Perf-iteration knobs via REPRO_LM_PERF=skip,remat,pbf16 (§Perf)."""
+    import os
+    flags = set(filter(None, os.environ.get("REPRO_LM_PERF", "").split(",")))
+    kw = {}
+    if "skip" in flags:
+        kw["causal_block_skip"] = True
+    if "remat" in flags:
+        kw["attn_remat"] = True
+    if "pbf16" in flags:
+        kw["attn_p_bf16"] = True
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+class LMBundle(ArchBundle):
+    family = "lm"
+
+    def __init__(self, cfg: tfm.TransformerConfig, smoke: bool = False,
+                 supports_long: bool = False):
+        self.cfg = _apply_perf_env(cfg)
+        self.arch_id = cfg.name
+        self.smoke = smoke
+        self.shapes = dict(LM_SHAPES)
+        if not supports_long:
+            self.shapes["long_500k"] = dataclasses.replace(
+                self.shapes["long_500k"],
+                skip=("pure full-attention arch: 524k dense global KV "
+                      "out of published scope (DESIGN.md §4)"))
+        if smoke:
+            self.shapes = {
+                "train_4k": ShapeSpec("train_4k", "train",
+                                      {"seq_len": 64, "global_batch": 2}),
+                "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                                         {"seq_len": 64, "global_batch": 2}),
+                "decode_32k": ShapeSpec("decode_32k", "decode",
+                                        {"seq_len": 64, "global_batch": 2}),
+            }
+
+    # ------------------------------------------------------------- abstract
+    def init_params_abstract(self):
+        return jax.eval_shape(
+            lambda r: tfm.init_params(self.cfg, r), jax.random.PRNGKey(0))
+
+    def _cache_abstract(self, batch, max_len):
+        return jax.eval_shape(
+            lambda: tfm.init_kv_cache(self.cfg, batch, max_len))
+
+    def adam_cfg(self):
+        return opt_mod.AdamWConfig(total_steps=10000)
+
+    # ----------------------------------------------------------------- step
+    def make_step(self, shape: str):
+        spec = self.shapes[shape]
+        cfg, acfg = self.cfg, self.adam_cfg()
+        if spec.kind == "train":
+            return tfm.make_train_step(cfg, acfg)
+        if spec.kind == "prefill":
+            return functools.partial(_prefill_step, cfg=cfg)
+        return functools.partial(_decode_step, cfg=cfg)
+
+    def input_specs(self, shape: str):
+        spec = self.shapes[shape]
+        B = spec.dims["global_batch"]
+        S = spec.dims["seq_len"]
+        params = self.init_params_abstract()
+        if spec.kind == "train":
+            ost = self.abstract_adam_state(params)
+            batch = {"tokens": sds((B, S), jnp.int32)}
+            return (params, ost, batch)
+        caches = self._cache_abstract(B, S)
+        if spec.kind == "prefill":
+            # chunked prefill: the engine feeds prompt chunks; lower a
+            # representative full-prompt call
+            tokens = sds((B, S), jnp.int32)
+            return (params, tokens, caches)
+        tokens = sds((B, 1), jnp.int32)
+        return (params, tokens, caches, sds((), jnp.int32))
+
+    # ------------------------------------------------------------ shardings
+    def _param_pspec(self, path, leaf):
+        name = "/".join(path)
+        nd = len(leaf.shape)
+        if "embed" in name:
+            return P("model", None)
+        if "head" in name:
+            return P(None, "model")
+        if "router" in name:
+            return P(None, None, None)
+        if "mlp" in name and nd == 4:        # MoE experts [L, E, D, F]
+            return P(None, "model", None, None)
+        if any(k in name for k in ("wq", "wk", "wv", "w1", "w3")) and nd == 3:
+            return P(None, None, "model")
+        if any(k in name for k in ("wo", "w2")) and nd == 3:
+            return P(None, "model", None)
+        if any(k in name for k in ("bq", "bk", "bv")):
+            return P(None, "model")
+        return P(*([None] * nd))
+
+    def param_shardings(self, mesh):
+        params = self.init_params_abstract()
+        return params_spec_like(
+            params, lambda path, leaf: ns(mesh, *self._param_pspec(path, leaf)))
+
+    def opt_shardings(self, mesh, params_sds, ost_sds):
+        dsize = mesh.shape["data"]
+
+        def spec_of(path, leaf):
+            base = self._param_pspec(path, leaf)
+            return ns(mesh, *zero1(base, leaf.shape, dsize, mesh))
+
+        mu = params_spec_like(ost_sds.mu, spec_of)
+        nu = params_spec_like(ost_sds.nu, spec_of)
+        ef = jax.tree.map(lambda _: ns(mesh), ost_sds.ef_error)
+        return opt_mod.AdamState(step=ns(mesh), mu=mu, nu=nu, ef_error=ef)
+
+    def _kv_divisible(self, mesh) -> bool:
+        return self.cfg.n_kv_heads % mesh.shape["model"] == 0
+
+    def _cache_spec(self, mesh, B):
+        dp = dp_axes(mesh)
+        if self._kv_divisible(mesh):
+            if B == 1:   # long-context: shard the sequence axis over data
+                return ns(mesh, None, None, dp, "model", None)
+            return ns(mesh, None, dp, None, "model", None)
+        # kv heads don't divide the model axis: shard the sequence instead
+        # (ring-decode style psum over sequence shards)
+        if B == 1:
+            return ns(mesh, None, None, dp, None, None)
+        return ns(mesh, None, dp, "model", None, None)
+
+    def hints(self, mesh, kind: str = "train"):
+        dp = dp_axes(mesh)
+        h = {
+            # Megatron sequence parallelism: the residual stream (and the
+            # remat-saved per-layer carries) shard over (dp, model)
+            "act_resid": (ns(mesh, dp, "model", None) if kind != "decode"
+                          else ns(mesh, dp, None, None)),
+            "act_ff": ns(mesh, dp, None, "model"),
+            "logits": ns(mesh, dp, None, "model"),
+            "moe_buf": ns(mesh, "model", None, None),
+            "moe_ff": ns(mesh, "model", None, None),
+            "moe_rows": ns(mesh, dp, None),
+            "moe_eout": ns(mesh, "model", None),
+        }
+        if self._kv_divisible(mesh):
+            h["act_q"] = ns(mesh, dp, None, "model", None, None)
+            h["act_kv"] = ns(mesh, dp, None, "model", None)
+        return h
+
+    def shardings(self, mesh, shape: str):
+        spec = self.shapes[shape]
+        dp = dp_axes(mesh)
+        B = spec.dims["global_batch"]
+        pshard = self.param_shardings(mesh)
+        if spec.kind == "train":
+            params_sds = self.init_params_abstract()
+            ost_sds = self.abstract_adam_state(params_sds)
+            oshard = self.opt_shardings(mesh, params_sds, ost_sds)
+            batch_shard = {"tokens": ns(mesh, dp, None)}
+            in_sh = (pshard, oshard, batch_shard)
+            out_sh = (pshard, oshard, None)   # metrics: let XLA choose
+            return in_sh, out_sh, self.hints(mesh, 'train')
+        cshard = {"k": self._cache_spec(mesh, B),
+                  "v": self._cache_spec(mesh, B)}
+        if spec.kind == "prefill":
+            tok = ns(mesh, dp, None) if B > 1 else ns(mesh, None, dp)
+            in_sh = (pshard, tok, cshard)
+            out_sh = (ns(mesh, dp, "model") if B > 1
+                      else ns(mesh, None, "model"), cshard)
+            return in_sh, out_sh, self.hints(mesh, "prefill")
+        tok = ns(mesh, dp, None) if B > 1 else ns(mesh, None, None)
+        in_sh = (pshard, tok, cshard, ns(mesh))
+        out_sh = (ns(mesh, dp, "model") if B > 1 else ns(mesh, None, "model"),
+                  cshard)
+        return in_sh, out_sh, self.hints(mesh, "decode")
+
+    # ------------------------------------------------------------- concrete
+    def make_concrete(self, shape: str, seed: int = 0):
+        assert self.smoke, "concrete inputs only for smoke bundles"
+        rng = np.random.default_rng(seed)
+        spec = self.shapes[shape]
+        B, S = spec.dims["global_batch"], spec.dims["seq_len"]
+        params = tfm.init_params(self.cfg, jax.random.PRNGKey(seed))
+        if spec.kind == "train":
+            ost = opt_mod.init(self.adam_cfg(), params)
+            batch = {"tokens": jnp.asarray(
+                rng.integers(0, self.cfg.vocab_size, (B, S)), jnp.int32)}
+            return (params, ost, batch)
+        caches = tfm.init_kv_cache(self.cfg, B, S)
+        if spec.kind == "prefill":
+            toks = jnp.asarray(rng.integers(0, self.cfg.vocab_size, (B, S)),
+                               jnp.int32)
+            return (params, toks, caches)
+        toks = jnp.asarray(rng.integers(0, self.cfg.vocab_size, (B, 1)),
+                           jnp.int32)
+        return (params, toks, caches, jnp.int32(S // 2))
+
+    # ------------------------------------------------------------ analytics
+    def model_flops(self, shape: str) -> float:
+        spec = self.shapes[shape]
+        B, S = spec.dims["global_batch"], spec.dims["seq_len"]
+        if spec.kind == "train":
+            return self.cfg.train_flops(B, S)
+        if spec.kind == "prefill":
+            return self.cfg.train_flops(B, S) / 3.0   # forward only
+        return self.cfg.decode_flops(B, S)
+
+
+def _prefill_step(params, tokens, caches, cfg):
+    return tfm.prefill(params, tokens, cfg, caches)
+
+
+def _decode_step(params, tokens, caches, t, cfg):
+    return tfm.decode_step(params, tokens, cfg, caches, t)

@@ -1,0 +1,165 @@
+"""wide-deep [arXiv:1606.07792]: 40 sparse fields, embed_dim 32,
+MLP 1024-512-256, concat interaction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ArchBundle, ShapeSpec, dp_axes, ns,
+                                params_spec_like, sds)
+from repro.models import recsys
+from repro.train import optimizer as opt_mod
+
+SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "train", {"batch": 65536}),
+    "serve_p99": ShapeSpec("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval",
+                                {"batch": 1, "n_candidates": 1_000_000}),
+}
+
+SMOKE_SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "train", {"batch": 64}),
+    "serve_p99": ShapeSpec("serve_p99", "serve", {"batch": 16}),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval",
+                                {"batch": 1, "n_candidates": 512}),
+}
+
+CONFIG = recsys.WideDeepConfig()
+SMOKE = recsys.WideDeepConfig(name="wide-deep-smoke",
+                              vocab_sizes=tuple([512] * 40),
+                              wide_vocab=1024, n_items=512, item_dim=32,
+                              mlp=(64, 32, 16))
+
+
+class RecsysBundle(ArchBundle):
+    family = "recsys"
+    arch_id = "wide-deep"
+
+    def __init__(self, smoke: bool = False):
+        self.smoke = smoke
+        self.cfg = SMOKE if smoke else CONFIG
+        self.shapes = dict(SMOKE_SHAPES if smoke else SHAPES)
+
+    def init_params_abstract(self):
+        return jax.eval_shape(lambda r: recsys.init_params(self.cfg, r),
+                              jax.random.PRNGKey(0))
+
+    def adam_cfg(self):
+        return opt_mod.AdamWConfig(lr=1e-3, total_steps=100000,
+                                   weight_decay=0.0)
+
+    def make_step(self, shape: str):
+        kind = self.shapes[shape].kind
+        cfg = self.cfg
+        if kind == "train":
+            return recsys.make_train_step(cfg, self.adam_cfg())
+        if kind == "serve":
+            return lambda params, batch: recsys.forward(params, batch, cfg)
+        return lambda params, batch: recsys.retrieval_scores(params, batch,
+                                                             cfg)
+
+    def _batch_specs(self, shape: str):
+        d = self.shapes[shape].dims
+        B = d["batch"]
+        cfg = self.cfg
+        base = {
+            "sparse_ids": sds((B, cfg.n_sparse, cfg.max_bag), jnp.int32),
+            "dense": sds((B, cfg.n_dense), jnp.float32),
+        }
+        kind = self.shapes[shape].kind
+        if kind == "retrieval":
+            base["candidate_ids"] = sds((d["n_candidates"],), jnp.int32)
+            return base
+        base["wide_ids"] = sds((B, cfg.n_wide), jnp.int32)
+        if kind == "train":
+            base["labels"] = sds((B,), jnp.float32)
+        return base
+
+    def input_specs(self, shape: str):
+        params = self.init_params_abstract()
+        kind = self.shapes[shape].kind
+        if kind == "train":
+            return (params, self.abstract_adam_state(params),
+                    self._batch_specs(shape))
+        return (params, self._batch_specs(shape))
+
+    def _param_pspec(self, path, leaf):
+        name = "/".join(path)
+        nd = len(leaf.shape)
+        if "table" in name or "items" in name:
+            return P("model", None)
+        if name.endswith("('wide',)") or "wide'" in name:
+            return P("model") if nd == 1 else P(*([None] * nd))
+        return P(*([None] * nd))
+
+    def shardings(self, mesh, shape: str):
+        dp = dp_axes(mesh)
+        params = self.init_params_abstract()
+        pshard = params_spec_like(
+            params, lambda p, l: ns(mesh, *self._param_pspec(p, l)))
+        kind = self.shapes[shape].kind
+        bspec = {}
+        B = self.shapes[shape].dims["batch"]
+        for k, v in self._batch_specs(shape).items():
+            if k == "candidate_ids":
+                bspec[k] = ns(mesh, dp)
+            elif B == 1:       # retrieval: a single query is replicated
+                bspec[k] = ns(mesh, *([None] * len(v.shape)))
+            else:
+                bspec[k] = ns(mesh, dp, *([None] * (len(v.shape) - 1)))
+        hints = {"bag_emb": ns(mesh, dp),
+                 "mlp_hidden": ns(mesh, dp),
+                 "cand_emb": ns(mesh, dp, None)}
+        if kind == "train":
+            ost = self.abstract_adam_state(params)
+            oshard = opt_mod.AdamState(
+                step=ns(mesh), mu=pshard, nu=pshard,
+                ef_error=jax.tree.map(lambda _: ns(mesh), ost.ef_error))
+            return ((pshard, oshard, bspec), (pshard, oshard, None), hints)
+        if kind == "retrieval":
+            return ((pshard, bspec), ns(mesh, dp), hints)
+        return ((pshard, bspec), ns(mesh, dp), hints)
+
+    def make_concrete(self, shape: str, seed: int = 0):
+        cfg = self.cfg
+        d = self.shapes[shape].dims
+        params = recsys.init_params(cfg, jax.random.PRNGKey(seed))
+        kind = self.shapes[shape].kind
+        batch = {k: jnp.asarray(v) for k, v in recsys.synthetic_batch(
+            cfg, d["batch"], seed=seed,
+            with_labels=(kind == "train")).items()}
+        if kind == "retrieval":
+            batch.pop("wide_ids")
+            rng = np.random.default_rng(seed)
+            batch["candidate_ids"] = jnp.asarray(rng.integers(
+                0, cfg.n_items, size=d["n_candidates"]).astype(np.int32))
+            return (params, batch)
+        if kind == "train":
+            return (params, opt_mod.init(self.adam_cfg(), params), batch)
+        return (params, batch)
+
+    def model_flops(self, shape: str) -> float:
+        cfg = self.cfg
+        d = self.shapes[shape].dims
+        B = d["batch"]
+        deep_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+        mlp = 0
+        prev = deep_in
+        for h in cfg.mlp:
+            mlp += 2 * prev * h
+            prev = h
+        bag = cfg.n_sparse * cfg.max_bag * cfg.embed_dim
+        fwd = B * (mlp + bag)
+        kind = self.shapes[shape].kind
+        if kind == "train":
+            return 3.0 * fwd
+        if kind == "retrieval":
+            return fwd + 2.0 * d["n_candidates"] * cfg.item_dim
+        return float(fwd)
+
+
+def bundle(smoke: bool = False) -> RecsysBundle:
+    return RecsysBundle(smoke=smoke)

@@ -1,0 +1,113 @@
+"""GOpt facade — the paper's full pipeline (Fig. 3):
+
+    Cypher/Gremlin -> unified IR -> type inference/validation -> RBO -> CBO
+    -> physical plan -> binding-table engine execution.
+
+``GOpt`` owns the metadata providers (schema + GLogue) and exposes
+``optimize`` / ``execute`` with per-stage switches so benchmarks can ablate
+each technique exactly like the paper's experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import ir
+from repro.core.cardinality import CardEstimator, Statistics
+from repro.core.cbo import GraphOptimizer, low_order_plan, random_plan
+from repro.core.glogue import GLogue
+from repro.core.parser import parse_cypher
+from repro.core.pattern import Pattern, expand_path_edges
+from repro.core.physical import PlanNode, default_left_deep_plan
+from repro.core.rules import DEFAULT_RULES, apply_rules
+from repro.core.type_inference import INVALID, infer_types
+from repro.graphdb.engine import Engine, ExecStats, Table
+from repro.graphdb.storage import GraphStore
+
+
+@dataclasses.dataclass
+class OptimizedQuery:
+    logical: ir.LogicalPlan
+    physical: PlanNode
+    compile_s: float
+    invalid: bool = False
+
+
+class GOpt:
+    def __init__(self, store: GraphStore, glogue_k: int = 3,
+                 build_glogue: bool = True):
+        self.store = store
+        self.schema = store.schema
+        self.stats = Statistics(store)
+        self.glogue = GLogue(store, k=glogue_k) if build_glogue else None
+
+    # ----------------------------------------------------------------- parse
+    def parse(self, query: str, params: dict | None = None) -> ir.LogicalPlan:
+        return parse_cypher(query, self.schema, params)
+
+    # -------------------------------------------------------------- optimize
+    def optimize(self, query: str | ir.LogicalPlan,
+                 params: dict | None = None,
+                 type_inference: bool = True,
+                 rbo: bool = True,
+                 cbo: bool = True,
+                 use_glogue: bool = True,
+                 use_selectivity: bool = True) -> OptimizedQuery:
+        t0 = time.perf_counter()
+        plan = (self.parse(query, params) if isinstance(query, str)
+                else query)
+        pattern = expand_path_edges(plan.pattern(), self.schema)
+        plan.replace_pattern(pattern)
+        if type_inference:
+            inferred = infer_types(pattern, self.schema)
+            if inferred == INVALID:
+                return OptimizedQuery(plan, None, time.perf_counter() - t0,
+                                      invalid=True)
+            pattern = inferred
+            plan.replace_pattern(pattern)
+        if rbo:
+            plan = apply_rules(plan, DEFAULT_RULES)
+            pattern = plan.pattern()
+        est = CardEstimator(self.stats,
+                            self.glogue if use_glogue else None,
+                            use_selectivity=use_selectivity)
+        if cbo:
+            physical = GraphOptimizer(est).optimize(pattern)
+        else:
+            physical = default_left_deep_plan(pattern)
+        return OptimizedQuery(plan, physical, time.perf_counter() - t0)
+
+    # --------------------------------------------------------------- execute
+    def execute(self, opt: OptimizedQuery,
+                fuse_expand: bool | None = None,
+                trim_fields: bool = True,
+                max_rows: int = 100_000_000) -> tuple[Table, ExecStats]:
+        if opt.invalid:
+            return Table.empty(), ExecStats()
+        fuse = (opt.logical.hints.get("fuse_expand", True)
+                if fuse_expand is None else fuse_expand)
+        eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
+                     max_rows=max_rows)
+        return eng.run(opt.logical, opt.physical)
+
+    def run(self, query: str, params: dict | None = None, **kw):
+        return self.execute(self.optimize(query, params, **{
+            k: v for k, v in kw.items()
+            if k in ("type_inference", "rbo", "cbo", "use_glogue",
+                     "use_selectivity")}))
+
+    # ------------------------------------------------------------- baselines
+    def estimator(self, use_glogue: bool = True,
+                  use_selectivity: bool = True) -> CardEstimator:
+        return CardEstimator(self.stats, self.glogue if use_glogue else None,
+                             use_selectivity=use_selectivity)
+
+    def neo4j_style_plan(self, pattern: Pattern) -> PlanNode:
+        """Low-order foil: no type inference assumed done by caller, no
+        GLogue, no WCOJ, independence assumption."""
+        return low_order_plan(pattern, self.estimator(use_glogue=False))
+
+    def random_plans(self, pattern: Pattern, n: int, seed: int = 0):
+        import random as _r
+        rng = _r.Random(seed)
+        return [random_plan(pattern, rng) for _ in range(n)]

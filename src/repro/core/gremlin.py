@@ -1,0 +1,129 @@
+"""Gremlin-style traversal builder (paper §4.2's second frontend).
+
+A fluent builder that constructs the same unified-IR LogicalPlan the Cypher
+parser produces — demonstrating the IR's language independence:
+
+    g(schema).V().as_("v1").out().as_("v2").out("LOCATEDIN", "PRODUCEDIN") \
+        .as_("v3", types=["PLACE"]) \
+        .where(Cmp("=", Prop("v3", "name"), Lit("China"))) \
+        .group_count("v1").plan()
+"""
+from __future__ import annotations
+
+from repro.core import ir
+from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
+from repro.core.schema import GraphSchema
+
+
+class GremlinTraversal:
+    def __init__(self, schema: GraphSchema):
+        self.schema = schema
+        self.pattern = Pattern()
+        self._preds: list = []
+        self._anon = 0
+        self._cur: str | None = None
+        self._pending_edge = None   # (labels, direction)
+
+    def _fresh(self, p):
+        self._anon += 1
+        return f"_{p}{self._anon}"
+
+    def V(self, *types: str) -> "GremlinTraversal":
+        alias = self._fresh("v")
+        self.pattern.add_vertex(alias, self.schema.vertex_constraint(list(types)))
+        self._cur = alias
+        return self
+
+    def _expand(self, labels, direction):
+        self._pending_edge = (list(labels) or None, direction)
+        # materialize target immediately with an anonymous alias; `as_` renames
+        src = self._cur
+        dst = self._fresh("v")
+        self.pattern.add_vertex(dst, self.schema.all_vertex_types())
+        e = PatternEdge(self._fresh("e"), src, dst,
+                        self.schema.edge_constraint(list(labels) or None),
+                        direction, 1)
+        self.pattern.add_edge(e)
+        self._cur = dst
+        self._pending_edge = None
+        return self
+
+    def out(self, *labels):
+        return self._expand(labels, OUT)
+
+    def in_(self, *labels):
+        return self._expand(labels, IN)
+
+    def both(self, *labels):
+        return self._expand(labels, BOTH)
+
+    def as_(self, name: str, types=None) -> "GremlinTraversal":
+        """Rename the current anonymous vertex; optionally constrain types."""
+        old = self._cur
+        if name in self.pattern.vertices:
+            # closing a cycle: merge old into existing alias
+            tgt = self.pattern.vertices[name]
+            ov = self.pattern.vertices.pop(old)
+            tgt.types = tgt.types & ov.types
+            for e in self.pattern.edges:
+                if e.src == old:
+                    e.src = name
+                if e.dst == old:
+                    e.dst = name
+        else:
+            v = self.pattern.vertices.pop(old)
+            v.alias = name
+            self.pattern.vertices[name] = v
+            for e in self.pattern.edges:
+                if e.src == old:
+                    e.src = name
+                if e.dst == old:
+                    e.dst = name
+        if types:
+            v = self.pattern.vertices[name]
+            v.types = v.types & self.schema.vertex_constraint(list(types))
+        self._cur = name
+        return self
+
+    def select(self, name: str) -> "GremlinTraversal":
+        if name not in self.pattern.vertices:
+            raise KeyError(name)
+        self._cur = name
+        return self
+
+    def where(self, pred) -> "GremlinTraversal":
+        self._preds.append(pred)
+        return self
+
+    def has(self, prop: str, value) -> "GremlinTraversal":
+        self._preds.append(ir.Cmp("=", ir.Prop(self._cur, prop), ir.Lit(value)))
+        return self
+
+    # -- terminal steps -----------------------------------------------------
+    def _base_ops(self):
+        ops: list = [ir.MatchPattern(self.pattern)]
+        pred = ir.make_and(self._preds)
+        if pred is not None:
+            ops.append(ir.Select(pred))
+        return ops
+
+    def count(self, alias: str | None = None) -> ir.LogicalPlan:
+        ops = self._base_ops()
+        arg = ir.Var(alias or self._cur)
+        ops.append(ir.GroupBy([], [(ir.Agg("COUNT", arg), "count")]))
+        return ir.LogicalPlan(ops)
+
+    def group_count(self, alias: str) -> ir.LogicalPlan:
+        ops = self._base_ops()
+        ops.append(ir.GroupBy([(ir.Var(alias), alias)],
+                              [(ir.Agg("COUNT", None), "count")]))
+        return ir.LogicalPlan(ops)
+
+    def values(self, *items) -> ir.LogicalPlan:
+        ops = self._base_ops()
+        ops.append(ir.Project([(it, repr(it)) for it in items]))
+        return ir.LogicalPlan(ops)
+
+
+def g(schema: GraphSchema) -> GremlinTraversal:
+    return GremlinTraversal(schema)

@@ -1,0 +1,260 @@
+"""Unified intermediate representation (paper §4.1).
+
+The IR couples a data model (Vertex/Edge/Path + primitives) with graph
+operators (SCAN, EXPAND_EDGE, GET_VERTEX, EXPAND_PATH, MATCH_PATTERN) and
+relational operators (SELECT, PROJECT, GROUP, ORDER, LIMIT, JOIN).  A logical
+plan is a DAG of these operators; for PatRelQuery it is a chain
+``MATCH_PATTERN -> relational ops`` (joins appear inside the pattern part as
+physical operators chosen by the CBO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+from repro.core.pattern import Pattern
+
+# --------------------------------------------------------------------------
+# Expressions
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Prop:
+    """alias.prop — a property of a bound vertex/edge."""
+    alias: str
+    name: str
+
+    def __repr__(self):
+        return f"{self.alias}.{self.name}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Var:
+    """A bound pattern alias itself (vertex/edge id column)."""
+    alias: str
+
+    def __repr__(self):
+        return self.alias
+
+
+@dataclasses.dataclass(frozen=True)
+class Lit:
+    value: Any
+
+    def __repr__(self):
+        return repr(self.value)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cmp:
+    op: str          # = <> < > <= >=
+    lhs: Any
+    rhs: Any
+
+    def __repr__(self):
+        return f"({self.lhs} {self.op} {self.rhs})"
+
+
+@dataclasses.dataclass(frozen=True)
+class InSet:
+    item: Any
+    values: tuple
+
+    def __repr__(self):
+        return f"({self.item} IN {list(self.values)!r})"
+
+
+@dataclasses.dataclass(frozen=True)
+class BoolOp:
+    op: str          # AND OR NOT
+    args: tuple
+
+    def __repr__(self):
+        if self.op == "NOT":
+            return f"(NOT {self.args[0]})"
+        return "(" + f" {self.op} ".join(map(repr, self.args)) + ")"
+
+
+@dataclasses.dataclass(frozen=True)
+class Agg:
+    fn: str          # COUNT SUM MIN MAX AVG
+    arg: Any = None  # None == COUNT(*)
+
+    def __repr__(self):
+        return f"{self.fn}({self.arg if self.arg is not None else '*'})"
+
+
+def expr_aliases(e) -> set[str]:
+    """Pattern aliases referenced by an expression."""
+    if isinstance(e, Prop):
+        return {e.alias}
+    if isinstance(e, Var):
+        return {e.alias}
+    if isinstance(e, Cmp):
+        return expr_aliases(e.lhs) | expr_aliases(e.rhs)
+    if isinstance(e, InSet):
+        return expr_aliases(e.item)
+    if isinstance(e, BoolOp):
+        out: set[str] = set()
+        for a in e.args:
+            out |= expr_aliases(a)
+        return out
+    if isinstance(e, Agg):
+        return expr_aliases(e.arg) if e.arg is not None else set()
+    return set()
+
+
+def expr_props(e) -> set[Prop]:
+    if isinstance(e, Prop):
+        return {e}
+    if isinstance(e, Cmp):
+        return expr_props(e.lhs) | expr_props(e.rhs)
+    if isinstance(e, InSet):
+        return expr_props(e.item)
+    if isinstance(e, BoolOp):
+        out: set[Prop] = set()
+        for a in e.args:
+            out |= expr_props(a)
+        return out
+    if isinstance(e, Agg):
+        return expr_props(e.arg) if e.arg is not None else set()
+    return set()
+
+
+def conjuncts(e) -> list:
+    """Split a predicate into AND-conjuncts."""
+    if isinstance(e, BoolOp) and e.op == "AND":
+        out = []
+        for a in e.args:
+            out.extend(conjuncts(a))
+        return out
+    return [e]
+
+
+def make_and(parts: Sequence) -> Any:
+    parts = [p for p in parts if p is not None]
+    if not parts:
+        return None
+    if len(parts) == 1:
+        return parts[0]
+    return BoolOp("AND", tuple(parts))
+
+
+# --------------------------------------------------------------------------
+# Logical operators
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Op:
+    """Base logical operator."""
+
+
+@dataclasses.dataclass
+class Scan(Op):
+    alias: str
+    types: frozenset
+    elem: str = "V"                     # V | E
+    predicate: Any = None               # fused filter (FilterIntoMatchRule)
+    columns: Optional[frozenset] = None  # needed props (FieldTrimRule)
+
+
+@dataclasses.dataclass
+class ExpandEdge(Op):
+    tag: str
+    alias: str
+    labels: frozenset
+    direction: str                      # OUT | IN | BOTH
+    predicate: Any = None
+    columns: Optional[frozenset] = None
+
+
+@dataclasses.dataclass
+class GetVertex(Op):
+    tag: str
+    alias: str
+    types: frozenset
+    endpoint: str                       # SOURCE | TARGET | OTHER
+    predicate: Any = None
+    columns: Optional[frozenset] = None
+
+
+@dataclasses.dataclass
+class ExpandFused(Op):
+    """EXPAND_EDGE+GET_VERTEX fused by ExpandGetVFusionRule."""
+    tag: str
+    edge_alias: str
+    alias: str
+    labels: frozenset
+    types: frozenset
+    direction: str
+    predicate: Any = None
+    columns: Optional[frozenset] = None
+
+
+@dataclasses.dataclass
+class ExpandPath(Op):
+    tag: str
+    alias: str
+    labels: frozenset
+    direction: str
+    hops: int
+
+
+@dataclasses.dataclass
+class MatchPattern(Op):
+    """Composite operator MATCH_START..MATCH_END; semantically the Pattern."""
+    pattern: Pattern
+
+
+@dataclasses.dataclass
+class Select(Op):
+    predicate: Any
+
+
+@dataclasses.dataclass
+class Project(Op):
+    items: list                          # [(expr, out_name)]
+    distinct: bool = False
+
+
+@dataclasses.dataclass
+class GroupBy(Op):
+    keys: list                           # [(expr, out_name)]
+    aggs: list                           # [(Agg, out_name)]
+
+
+@dataclasses.dataclass
+class OrderBy(Op):
+    items: list                          # [(expr, ascending)]
+    limit: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Limit(Op):
+    n: int
+
+
+@dataclasses.dataclass
+class LogicalPlan:
+    """Chain of operators (MATCH first, relational after)."""
+    ops: list
+    params: dict = dataclasses.field(default_factory=dict)
+    hints: dict = dataclasses.field(default_factory=dict)
+
+    def pattern(self) -> Optional[Pattern]:
+        for op in self.ops:
+            if isinstance(op, MatchPattern):
+                return op.pattern
+        return None
+
+    def replace_pattern(self, pattern: Pattern) -> None:
+        for i, op in enumerate(self.ops):
+            if isinstance(op, MatchPattern):
+                self.ops[i] = MatchPattern(pattern)
+                return
+        raise ValueError("plan has no MATCH_PATTERN")
+
+    def __repr__(self):
+        return "LogicalPlan[\n  " + "\n  ".join(map(repr, self.ops)) + "\n]"

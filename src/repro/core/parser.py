@@ -1,0 +1,330 @@
+"""Cypher-subset frontend (paper §4.2).
+
+Parses PatRelQuery written in Cypher into the unified IR LogicalPlan:
+``MATCH`` clauses become a MATCH_PATTERN (built from SCAN / EXPAND_EDGE /
+GET_VERTEX / EXPAND_PATH parses, kept here directly as the semantically
+equivalent Pattern), ``WHERE`` becomes SELECT, ``RETURN``/``ORDER``/``LIMIT``
+become PROJECT / GROUP / ORDER / LIMIT.
+
+Supported grammar (enough for every query in the paper's Appendix A):
+
+    query     := MATCH path (',' path)* (MATCH ...)* (WHERE expr)?
+                 RETURN [DISTINCT] item (',' item)*
+                 (ORDER BY expr [ASC|DESC] (',' ...)*)? (LIMIT int)?
+    path      := node (edge node)*
+    node      := '(' [alias] [':' NAME ('|' NAME)*] [props] ')'
+    edge      := '-[' [alias] [':' NAME ('|' NAME)*] ['*' int] ']->' etc.
+
+A Gremlin-style builder API is provided by ``repro.core.gremlin``.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.core import ir
+from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
+from repro.core.schema import GraphSchema
+
+_TOKEN_RE = re.compile(r"""
+    (?P<ws>\s+)
+  | (?P<num>\d+\.\d+|\d+)
+  | (?P<str>'[^']*'|"[^"]*")
+  | (?P<param>\$[A-Za-z_][A-Za-z0-9_]*)
+  | (?P<name>[A-Za-z_][A-Za-z0-9_]*)
+  | (?P<op><=|>=|<>|!=|<-|->|=|<|>|\(|\)|\[|\]|\{|\}|,|:|\||\*|\.|-)
+""", re.X)
+
+_KEYWORDS = {"MATCH", "WHERE", "RETURN", "ORDER", "BY", "LIMIT", "AS", "AND",
+             "OR", "NOT", "IN", "DISTINCT", "ASC", "DESC", "COUNT", "SUM",
+             "MIN", "MAX", "AVG"}
+
+
+def _tokenize(text: str):
+    toks = []
+    pos = 0
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if not m:
+            raise SyntaxError(f"cannot tokenize at: {text[pos:pos+20]!r}")
+        pos = m.end()
+        kind = m.lastgroup
+        if kind == "ws":
+            continue
+        val = m.group()
+        if kind == "name" and val.upper() in _KEYWORDS:
+            toks.append(("kw", val.upper()))
+        else:
+            toks.append((kind, val))
+    toks.append(("eof", ""))
+    return toks
+
+
+class CypherParser:
+    def __init__(self, schema: GraphSchema, params: dict | None = None):
+        self.schema = schema
+        self.params = params or {}
+        self._anon = 0
+
+    # ------------------------------------------------------------------ util
+    def _fresh(self, prefix):
+        self._anon += 1
+        return f"_{prefix}{self._anon}"
+
+    def _peek(self):
+        return self.toks[self.i]
+
+    def _next(self):
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def _accept(self, kind, val=None):
+        k, v = self._peek()
+        if k == kind and (val is None or v == val):
+            self.i += 1
+            return v
+        return None
+
+    def _expect(self, kind, val=None):
+        got = self._accept(kind, val)
+        if got is None:
+            raise SyntaxError(f"expected {val or kind}, got {self._peek()}")
+        return got
+
+    def _param(self, name):
+        key = name[1:]
+        if key not in self.params:
+            raise KeyError(f"missing query parameter ${key}")
+        return self.params[key]
+
+    # ----------------------------------------------------------------- parse
+    def parse(self, text: str) -> ir.LogicalPlan:
+        self.toks = _tokenize(text)
+        self.i = 0
+        pattern = Pattern()
+        prop_preds = []
+        while self._accept("kw", "MATCH"):
+            self._parse_path(pattern, prop_preds)
+            while self._accept("op", ","):
+                self._parse_path(pattern, prop_preds)
+        if not pattern.vertices:
+            raise SyntaxError("query must start with MATCH")
+
+        ops: list = [ir.MatchPattern(pattern)]
+
+        where = None
+        if self._accept("kw", "WHERE"):
+            where = self._expr()
+        where = ir.make_and([p for p in prop_preds] + ([where] if where else []))
+        if where is not None:
+            ops.append(ir.Select(where))
+
+        self._expect("kw", "RETURN")
+        distinct = bool(self._accept("kw", "DISTINCT"))
+        items = [self._return_item()]
+        while self._accept("op", ","):
+            items.append(self._return_item())
+
+        has_agg = any(isinstance(e, ir.Agg) for e, _ in items)
+        if has_agg:
+            keys = [(e, n) for e, n in items if not isinstance(e, ir.Agg)]
+            aggs = [(e, n) for e, n in items if isinstance(e, ir.Agg)]
+            ops.append(ir.GroupBy(keys, aggs))
+        else:
+            ops.append(ir.Project(items, distinct=distinct))
+
+        if self._accept("kw", "ORDER"):
+            self._expect("kw", "BY")
+            oitems = [self._order_item(items)]
+            while self._accept("op", ","):
+                oitems.append(self._order_item(items))
+            ops.append(ir.OrderBy(oitems))
+        if self._accept("kw", "LIMIT"):
+            n = int(self._expect("num"))
+            ops.append(ir.Limit(n))
+        self._expect("eof")
+        return ir.LogicalPlan(ops, dict(self.params))
+
+    # ------------------------------------------------------------- patterns
+    def _parse_path(self, pattern: Pattern, prop_preds: list):
+        prev = self._node(pattern, prop_preds)
+        while self._peek() in (("op", "-"), ("op", "<-")):
+            direction, alias, labels, hops = self._edge()
+            nxt = self._node(pattern, prop_preds)
+            triples = self.schema.edge_constraint(labels)
+            if direction == "L":  # <-[..]-  : edge from nxt to prev
+                e = PatternEdge(alias, prev, nxt, triples, IN, hops)
+            elif direction == "R":
+                e = PatternEdge(alias, prev, nxt, triples, OUT, hops)
+            else:
+                e = PatternEdge(alias, prev, nxt, triples, BOTH, hops)
+            pattern.add_edge(e)
+            prev = nxt
+
+    def _node(self, pattern: Pattern, prop_preds: list) -> str:
+        self._expect("op", "(")
+        alias = self._accept("name") or self._fresh("v")
+        types = None
+        if self._accept("op", ":"):
+            types = [self._expect("name").upper()]
+            while self._accept("op", "|"):
+                types.append(self._expect("name").upper())
+        if self._peek() == ("op", "{"):
+            self._next()
+            while True:
+                prop = self._expect("name")
+                self._expect("op", ":")
+                val = self._literal()
+                prop_preds.append(ir.Cmp("=", ir.Prop(alias, prop), ir.Lit(val)))
+                if not self._accept("op", ","):
+                    break
+            self._expect("op", "}")
+        self._expect("op", ")")
+        pattern.add_vertex(alias, self.schema.vertex_constraint(types))
+        return alias
+
+    def _edge(self):
+        """Returns (direction L|R|B, alias, labels|None, hops)."""
+        left = self._accept("op", "<-")
+        if left is None:
+            self._expect("op", "-")
+        alias, labels, hops = None, None, 1
+        if self._accept("op", "["):
+            alias = self._accept("name")
+            if self._accept("op", ":"):
+                labels = [self._expect("name").upper()]
+                while self._accept("op", "|"):
+                    labels.append(self._expect("name").upper())
+            if self._accept("op", "*"):
+                k, v = self._peek()
+                if k == "num":
+                    hops = int(self._next()[1])
+                elif k == "param":
+                    hops = int(self._param(self._next()[1]))
+                else:
+                    raise SyntaxError("EXPAND_PATH needs an explicit hop count")
+            self._expect("op", "]")
+        alias = alias or self._fresh("e")
+        if left:
+            self._expect("op", "-")
+            return "L", alias, labels, hops
+        # either -> or -
+        if self._accept("op", "->"):
+            return "R", alias, labels, hops
+        self._expect("op", "-")
+        return "B", alias, labels, hops
+
+    # ----------------------------------------------------------- expressions
+    def _return_item(self):
+        e = self._expr()
+        name = None
+        if self._accept("kw", "AS"):
+            name = self._expect("name")
+        if name is None:
+            name = repr(e)
+        return (e, name)
+
+    def _order_item(self, ritems):
+        e = self._expr()
+        asc = True
+        if self._accept("kw", "DESC"):
+            asc = False
+        else:
+            self._accept("kw", "ASC")
+        # normalize: ordering by a RETURN expression refers to its output
+        # column (e.g. ORDER BY count(v1) with RETURN count(v1) AS cnt)
+        for re_, rn in ritems:
+            if e == re_:
+                return (ir.Var(rn), asc)
+        return (e, asc)
+
+    def _expr(self):
+        return self._or()
+
+    def _or(self):
+        l = self._and()
+        args = [l]
+        while self._accept("kw", "OR"):
+            args.append(self._and())
+        return args[0] if len(args) == 1 else ir.BoolOp("OR", tuple(args))
+
+    def _and(self):
+        l = self._not()
+        args = [l]
+        while self._accept("kw", "AND"):
+            args.append(self._not())
+        return args[0] if len(args) == 1 else ir.BoolOp("AND", tuple(args))
+
+    def _not(self):
+        if self._accept("kw", "NOT"):
+            return ir.BoolOp("NOT", (self._not(),))
+        return self._cmp()
+
+    def _cmp(self):
+        l = self._atom()
+        k, v = self._peek()
+        if k == "op" and v in ("=", "<>", "!=", "<", ">", "<=", ">="):
+            self._next()
+            r = self._atom()
+            return ir.Cmp("<>" if v == "!=" else v, l, r)
+        if k == "kw" and v == "IN":
+            self._next()
+            return ir.InSet(l, tuple(self._value_list()))
+        return l
+
+    def _value_list(self):
+        k, v = self._peek()
+        if k == "param":
+            self._next()
+            return list(self._param(v))
+        self._expect("op", "[")
+        vals = [self._literal()]
+        while self._accept("op", ","):
+            vals.append(self._literal())
+        self._expect("op", "]")
+        return vals
+
+    def _literal(self):
+        k, v = self._next()
+        if k == "num":
+            return float(v) if "." in v else int(v)
+        if k == "str":
+            return v[1:-1]
+        if k == "param":
+            return self._param(v)
+        raise SyntaxError(f"expected literal, got {v!r}")
+
+    def _atom(self):
+        k, v = self._peek()
+        if k == "num" or k == "str":
+            return ir.Lit(self._literal())
+        if k == "param":
+            self._next()
+            return ir.Lit(self._param(v))
+        if k == "op" and v == "(":
+            self._next()
+            e = self._expr()
+            self._expect("op", ")")
+            return e
+        if k == "kw" and v in ("COUNT", "SUM", "MIN", "MAX", "AVG"):
+            self._next()
+            self._expect("op", "(")
+            self._accept("kw", "DISTINCT")
+            if self._accept("op", "*"):
+                arg = None
+            else:
+                arg = self._expr()
+            self._expect("op", ")")
+            return ir.Agg(v, arg)
+        if k == "name":
+            self._next()
+            if self._accept("op", "."):
+                prop = self._expect("name")
+                return ir.Prop(v, prop)
+            return ir.Var(v)
+        raise SyntaxError(f"unexpected token {v!r} in expression")
+
+
+def parse_cypher(text: str, schema: GraphSchema,
+                 params: dict | None = None) -> ir.LogicalPlan:
+    return CypherParser(schema, params).parse(text)

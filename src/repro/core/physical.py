@@ -1,0 +1,119 @@
+"""Physical pattern-plan algebra (paper §5.3.1).
+
+The CBO decomposes a PATTERN into a tree over two physical operators:
+
+- ``Expand({p_s, +v} -> p_t)`` — vertex expansion; with one edge it's a simple
+  neighbor expansion, with several it is the *expand-and-intersect* step of a
+  worst-case-optimal join;
+- ``Join({p_s1, p_s2} -> p_t)`` — binary pattern join on the common vertices
+  (PatternJoinRule, Eq. 1).
+
+Leaf = Scan of a single pattern vertex. Nodes carry the estimated frequency
+and accumulated cost so plans are inspectable in benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.pattern import Pattern, PatternEdge
+
+
+@dataclasses.dataclass
+class PlanNode:
+    est_frequency: float = dataclasses.field(default=0.0, kw_only=True)
+    est_cost: float = dataclasses.field(default=0.0, kw_only=True)
+
+    def bound_aliases(self) -> frozenset[str]:
+        raise NotImplementedError
+
+    def pretty(self, indent: int = 0) -> str:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class ScanNode(PlanNode):
+    alias: str
+
+    def bound_aliases(self) -> frozenset[str]:
+        return frozenset({self.alias})
+
+    def pretty(self, indent=0):
+        pad = "  " * indent
+        return (f"{pad}Scan({self.alias}) "
+                f"[F={self.est_frequency:.3g} C={self.est_cost:.3g}]")
+
+
+@dataclasses.dataclass
+class ExpandNode(PlanNode):
+    child: PlanNode
+    new_alias: str
+    edges: list[PatternEdge]   # all pattern edges new_alias<->bound vertices
+
+    def bound_aliases(self) -> frozenset[str]:
+        return self.child.bound_aliases() | {self.new_alias}
+
+    def pretty(self, indent=0):
+        pad = "  " * indent
+        kind = "ExpandIntersect" if len(self.edges) > 1 else "Expand"
+        es = ",".join(f"{e.src}->{e.dst}" for e in self.edges)
+        return (f"{pad}{kind}(+{self.new_alias} via {es}) "
+                f"[F={self.est_frequency:.3g} C={self.est_cost:.3g}]\n"
+                + self.child.pretty(indent + 1))
+
+
+@dataclasses.dataclass
+class JoinNode(PlanNode):
+    left: PlanNode
+    right: PlanNode
+    keys: tuple[str, ...]
+
+    def bound_aliases(self) -> frozenset[str]:
+        return self.left.bound_aliases() | self.right.bound_aliases()
+
+    def pretty(self, indent=0):
+        pad = "  " * indent
+        return (f"{pad}Join(keys={list(self.keys)}) "
+                f"[F={self.est_frequency:.3g} C={self.est_cost:.3g}]\n"
+                + self.left.pretty(indent + 1) + "\n"
+                + self.right.pretty(indent + 1))
+
+
+def plan_signature(node: PlanNode) -> str:
+    """Stable string for logging/plan comparison."""
+    if isinstance(node, ScanNode):
+        return f"S({node.alias})"
+    if isinstance(node, ExpandNode):
+        return f"E({plan_signature(node.child)},+{node.new_alias}x{len(node.edges)})"
+    if isinstance(node, JoinNode):
+        return (f"J({plan_signature(node.left)},{plan_signature(node.right)},"
+                f"k={'/'.join(node.keys)})")
+    raise TypeError(node)
+
+
+def default_left_deep_plan(pattern: Pattern,
+                           start: Optional[str] = None) -> PlanNode:
+    """A naive left-deep expansion plan in BFS alias order — the engine's
+    fallback when no CBO plan is supplied, and the 'unoptimized' baseline."""
+    aliases = sorted(pattern.vertices)
+    start = start or aliases[0]
+    node: PlanNode = ScanNode(start)
+    bound = {start}
+    frontier = [start]
+    while len(bound) < len(pattern.vertices):
+        nxt = None
+        for b in list(bound):
+            for e in pattern.adjacent(b):
+                o = e.other(b)
+                if o not in bound:
+                    nxt = o
+                    break
+            if nxt:
+                break
+        if nxt is None:  # disconnected (shouldn't happen for valid patterns)
+            nxt = next(a for a in aliases if a not in bound)
+            raise ValueError("pattern is disconnected")
+        edges = [e for e in pattern.adjacent(nxt) if e.other(nxt) in bound]
+        node = ExpandNode(node, nxt, edges)
+        bound.add(nxt)
+    return node

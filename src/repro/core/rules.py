@@ -1,0 +1,156 @@
+"""Rule-based optimization (paper §5.2, §6).
+
+Hep-style driver: each rule is (condition, action) over the LogicalPlan;
+rules are applied repeatedly until a fixpoint. Implemented rules:
+
+- FilterIntoMatchRule  (graph-relational interplay): single-alias conjuncts of
+  SELECT move into the pattern vertex/edge predicate lists, so the engine
+  filters during expansion.
+- FieldTrimRule        (relational): computes which aliases/properties are
+  live downstream and records them on the plan (`plan.hints['live']`); the
+  engine then never materializes or ships dead columns.
+- ExpandGetVFusionRule (graph): marks EXPAND_EDGE+GET_VERTEX fusable unless a
+  downstream operator needs standalone edge processing
+  (`plan.hints['fuse_expand']`).
+- OrderLimitFuseRule   (relational): ORDER BY followed by LIMIT becomes a
+  top-k OrderBy (partial sort in the engine).
+"""
+from __future__ import annotations
+
+from repro.core import ir
+
+
+class Rule:
+    name = "rule"
+
+    def apply(self, plan: ir.LogicalPlan) -> bool:
+        """Mutates plan; returns True if anything changed."""
+        raise NotImplementedError
+
+
+class FilterIntoMatchRule(Rule):
+    name = "FilterIntoMatchRule"
+
+    def apply(self, plan: ir.LogicalPlan) -> bool:
+        pattern = plan.pattern()
+        if pattern is None:
+            return False
+        changed = False
+        new_ops = []
+        for op in plan.ops:
+            if not isinstance(op, ir.Select):
+                new_ops.append(op)
+                continue
+            keep = []
+            for c in ir.conjuncts(op.predicate):
+                aliases = ir.expr_aliases(c)
+                if len(aliases) != 1:
+                    keep.append(c)
+                    continue
+                a = next(iter(aliases))
+                if a in pattern.vertices:
+                    pattern.vertices[a].predicates.append(c)
+                    changed = True
+                    continue
+                edge = next((e for e in pattern.edges if e.alias == a), None)
+                if edge is not None:
+                    edge.predicates.append(c)
+                    changed = True
+                    continue
+                keep.append(c)
+            pred = ir.make_and(keep)
+            if pred is not None:
+                new_ops.append(ir.Select(pred))
+        if changed:
+            plan.ops[:] = new_ops
+        return changed
+
+
+class FieldTrimRule(Rule):
+    name = "FieldTrimRule"
+
+    def apply(self, plan: ir.LogicalPlan) -> bool:
+        pattern = plan.pattern()
+        if pattern is None:
+            return False
+        live_aliases: set[str] = set()
+        live_props: set[tuple[str, str]] = set()
+
+        def visit(e):
+            live_aliases.update(ir.expr_aliases(e))
+            for p in ir.expr_props(e):
+                live_props.add((p.alias, p.name))
+
+        for op in plan.ops:
+            if isinstance(op, ir.Select):
+                visit(op.predicate)
+            elif isinstance(op, ir.Project):
+                for e, _ in op.items:
+                    visit(e)
+            elif isinstance(op, ir.GroupBy):
+                for e, _ in op.keys:
+                    visit(e)
+                for a, _ in op.aggs:
+                    visit(a)
+            elif isinstance(op, ir.OrderBy):
+                for e, _ in op.items:
+                    visit(e)
+        # pattern-internal predicates (already pushed) count as live too
+        for v in pattern.vertices.values():
+            for p in v.predicates:
+                visit(p)
+        for e in pattern.edges:
+            for p in e.predicates:
+                visit(p)
+        new = {"aliases": frozenset(live_aliases),
+               "props": frozenset(live_props)}
+        if plan.hints.get("live") == new:
+            return False
+        plan.hints["live"] = new
+        return True
+
+
+class ExpandGetVFusionRule(Rule):
+    name = "ExpandGetVFusionRule"
+
+    def apply(self, plan: ir.LogicalPlan) -> bool:
+        if "fuse_expand" in plan.hints:
+            return False
+        # Fusion is legal unless some downstream op needs the edge as a
+        # standalone row stream; with binding tables we can always fuse.
+        plan.hints["fuse_expand"] = True
+        return True
+
+
+class OrderLimitFuseRule(Rule):
+    name = "OrderLimitFuseRule"
+
+    def apply(self, plan: ir.LogicalPlan) -> bool:
+        ops = plan.ops
+        for i in range(len(ops) - 1):
+            if (isinstance(ops[i], ir.OrderBy) and ops[i].limit is None
+                    and isinstance(ops[i + 1], ir.Limit)):
+                ops[i].limit = ops[i + 1].n
+                del ops[i + 1]
+                return True
+        return False
+
+
+DEFAULT_RULES: tuple[Rule, ...] = (
+    FilterIntoMatchRule(),
+    FieldTrimRule(),
+    ExpandGetVFusionRule(),
+    OrderLimitFuseRule(),
+)
+
+
+def apply_rules(plan: ir.LogicalPlan, rules=DEFAULT_RULES,
+                max_iters: int = 10) -> ir.LogicalPlan:
+    """HepPlanner-style fixpoint application. Mutates and returns plan."""
+    for _ in range(max_iters):
+        changed = False
+        for r in rules:
+            changed |= r.apply(plan)
+        if not changed:
+            break
+    return plan

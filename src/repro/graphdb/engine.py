@@ -1,0 +1,416 @@
+"""Binding-table execution engine.
+
+Executes a physical pattern plan (Scan/Expand/ExpandIntersect/Join) followed by
+the relational tail of the unified-IR plan. Intermediate pattern matchings are
+dense integer tables — the TPU-native adaptation of the paper's dataflow
+backend (DESIGN.md §2). The engine also meters the paper's cost-model
+quantities: rows produced per operator (communication cost analogue) and
+per-operator wall time.
+
+Modes (used by the RBO ablation benchmarks):
+- ``fuse_expand``   — ExpandGetVFusionRule on/off: fused neighbor expansion vs
+  EXPAND_EDGE materializing edges then a separate GET_VERTEX gather.
+- ``trim_fields``   — FieldTrimRule on/off: lazy property gathers (trimmed) vs
+  eagerly materializing every property column of every bound alias at each
+  step (what an untrimmed distributed plan ships between workers).
+- filters inside pattern vertices/edges (FilterIntoMatchRule) are honored
+  during expansion when present.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import ir
+from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
+from repro.core.physical import ExpandNode, JoinNode, PlanNode, ScanNode
+from repro.graphdb import vecops
+from repro.graphdb.storage import GraphStore
+
+INT_MIN = np.iinfo(np.int64).min
+
+
+@dataclasses.dataclass
+class Table:
+    cols: dict[str, np.ndarray]
+    nrows: int
+
+    @staticmethod
+    def empty() -> "Table":
+        return Table({}, 0)
+
+    def take(self, idx: np.ndarray) -> "Table":
+        return Table({k: v[idx] for k, v in self.cols.items()}, int(idx.shape[0]))
+
+    def mask(self, m: np.ndarray) -> "Table":
+        return Table({k: v[m] for k, v in self.cols.items()}, int(m.sum()))
+
+    def with_cols(self, new: dict[str, np.ndarray]) -> "Table":
+        cols = dict(self.cols)
+        cols.update(new)
+        return Table(cols, self.nrows)
+
+    @staticmethod
+    def concat(tables: list["Table"]) -> "Table":
+        tables = [t for t in tables if t.nrows > 0]
+        if not tables:
+            return Table.empty()
+        keys = tables[0].cols.keys()
+        return Table({k: np.concatenate([t.cols[k] for t in tables])
+                      for k in keys}, sum(t.nrows for t in tables))
+
+
+@dataclasses.dataclass
+class ExecStats:
+    rows_produced: int = 0          # paper's intermediate-result cost
+    op_rows: list = dataclasses.field(default_factory=list)
+    wall_s: float = 0.0
+
+    def log(self, opname: str, rows: int):
+        self.rows_produced += rows
+        self.op_rows.append((opname, rows))
+
+
+class Engine:
+    def __init__(self, store: GraphStore, fuse_expand: bool = True,
+                 trim_fields: bool = True, max_rows: int = 100_000_000):
+        self.store = store
+        self.fuse_expand = fuse_expand
+        self.trim_fields = trim_fields
+        self.max_rows = max_rows
+        self._tindex = store.triple_index()
+
+    # ================================================================ pattern
+    def _check(self, n):
+        if n > self.max_rows:
+            raise RuntimeError(f"intermediate blow-up: {n} rows > cap")
+
+    def _scan(self, pattern: Pattern, alias: str, stats: ExecStats) -> Table:
+        v = pattern.vertices[alias]
+        parts = []
+        for t in sorted(v.types):
+            lo, hi = self.store.type_range(t)
+            parts.append(np.arange(lo, hi, dtype=np.int64))
+        ids = np.concatenate(parts) if parts else np.zeros(0, np.int64)
+        tbl = Table({alias: ids}, ids.shape[0])
+        tbl = self._apply_fused_predicates(tbl, v.predicates, stats)
+        stats.log(f"SCAN({alias})", tbl.nrows)
+        self._materialize(tbl, alias, pattern)
+        return tbl
+
+    def _orientations(self, e: PatternEdge, from_alias: str):
+        """Yield (csr_kind, triple) pairs for expanding edge ``e`` from
+        ``from_alias``. csr_kind 'out' keys the CSR by the data-edge source."""
+        dirs = [OUT, IN] if e.direction == BOTH else [e.direction]
+        for d in dirs:
+            data_src, data_dst = (e.src, e.dst) if d == OUT else (e.dst, e.src)
+            use_out = from_alias == data_src
+            for t in sorted(e.triples, key=repr):
+                yield ("out" if use_out else "in"), t
+
+    def _expand_edge(self, tbl: Table, pattern: Pattern, e: PatternEdge,
+                     from_alias: str, new_alias: str, stats: ExecStats) -> Table:
+        """Primary expansion: bind new_alias (+ edge alias) from from_alias."""
+        st = self.store
+        src_ids = tbl.cols[from_alias]
+        new_types = pattern.vertices[new_alias].types
+        outs = []
+        for kind, t in self._orientations(e, from_alias):
+            keyed_type = t.src if kind == "out" else t.dst
+            value_type = t.dst if kind == "out" else t.src
+            if value_type not in new_types:
+                continue
+            lo, hi = st.type_range(keyed_type)
+            m = (src_ids >= lo) & (src_ids < hi)
+            if not m.any():
+                continue
+            rows = np.nonzero(m)[0]
+            csr = (st.out_csr if kind == "out" else st.in_csr)[t]
+            ridx, nbr, epos = vecops.expand_csr(
+                csr.indptr, csr.indices, src_ids[rows] - lo, csr.pos,
+                max_out=self.max_rows)
+            part = tbl.take(rows[ridx]).with_cols({
+                new_alias: nbr,
+                f"{e.alias}#t": np.full(nbr.shape, self._tindex[t], np.int64),
+                f"{e.alias}#p": epos,
+            })
+            outs.append(part)
+        out = Table.concat(outs)
+        self._check(out.nrows)
+        return out
+
+    def _intersect_edge(self, tbl: Table, e: PatternEdge, from_alias: str,
+                        cand_alias: str) -> Table:
+        """Membership probe: keep rows where edge (from_alias, cand) exists;
+        bind the edge. Worst-case-optimal intersection step."""
+        st = self.store
+        outs = []
+        src_ids = tbl.cols[from_alias]
+        cand = tbl.cols[cand_alias]
+        for kind, t in self._orientations(e, from_alias):
+            keyed_type = t.src if kind == "out" else t.dst
+            value_type = t.dst if kind == "out" else t.src
+            klo, khi = st.type_range(keyed_type)
+            vlo, vhi = st.type_range(value_type)
+            m = ((src_ids >= klo) & (src_ids < khi) &
+                 (cand >= vlo) & (cand < vhi))
+            if not m.any():
+                continue
+            rows = np.nonzero(m)[0]
+            csr = (st.out_csr if kind == "out" else st.in_csr)[t]
+            local = src_ids[rows] - klo
+            found, pos = vecops.bounded_binary_search(
+                csr.indices, csr.indptr[local], csr.indptr[local + 1],
+                cand[rows])
+            hit = rows[found]
+            if hit.size == 0:
+                continue
+            fpos = pos[found]
+            epos = csr.pos[fpos] if csr.pos is not None else fpos
+            part = tbl.take(hit).with_cols({
+                f"{e.alias}#t": np.full(hit.shape, self._tindex[t], np.int64),
+                f"{e.alias}#p": epos,
+            })
+            outs.append(part)
+        out = Table.concat(outs)
+        self._check(out.nrows)
+        return out
+
+    def _materialize(self, tbl: Table, alias: str, pattern: Pattern):
+        """Untrimmed mode: eagerly attach every property column of ``alias``
+        (FieldTrimRule ablation; the shipped-bytes cost the rule removes)."""
+        if self.trim_fields or tbl.nrows == 0:
+            return
+        v = pattern.vertices.get(alias)
+        if v is None:
+            return
+        props = set()
+        for t in v.types:
+            props |= set(self.store.v_props.get(t, {}))
+        for p in sorted(props):
+            tbl.cols[f"__mat.{alias}.{p}"] = self.store.vertex_prop(
+                tbl.cols[alias], p)
+
+    def _apply_fused_predicates(self, tbl: Table, preds: list,
+                                stats: ExecStats) -> Table:
+        for p in preds or []:
+            if tbl.nrows == 0:
+                break
+            m = self._eval(tbl, p).astype(bool)
+            tbl = tbl.mask(m)
+        return tbl
+
+    def exec_pattern(self, pattern: Pattern, node: PlanNode,
+                     stats: ExecStats) -> Table:
+        if isinstance(node, ScanNode):
+            return self._scan(pattern, node.alias, stats)
+        if isinstance(node, ExpandNode):
+            tbl = self.exec_pattern(pattern, node.child, stats)
+            edges = list(node.edges)
+            # primary expansion via the first edge
+            e0 = edges[0]
+            frm = e0.other(node.new_alias)
+            if self.fuse_expand:
+                tbl = self._expand_edge(tbl, pattern, e0, frm,
+                                        node.new_alias, stats)
+            else:
+                # EXPAND_EDGE then a separate GET_VERTEX pass: endpoint ids
+                # are re-resolved from the edge bindings and re-type-checked
+                # (the work ExpandGetVFusionRule eliminates)
+                tbl = self._expand_edge(tbl, pattern, e0, frm,
+                                        node.new_alias, stats)
+                if tbl.nrows:
+                    nbr = tbl.cols[node.new_alias]
+                    tidx = self.store.type_of_ids(nbr)          # extra pass
+                    types = sorted(self.store._sorted_types())
+                    allowed = np.zeros(len(types), dtype=bool)
+                    for i, t in enumerate(self.store._sorted_types()):
+                        allowed[i] = t in pattern.vertices[
+                            node.new_alias].types
+                    tbl = tbl.mask(allowed[tidx])
+                stats.log(f"GET_VERTEX({node.new_alias})", tbl.nrows)
+            # intersect the remaining edges (WCOJ step)
+            for e in edges[1:]:
+                frm = e.other(node.new_alias)
+                tbl = self._intersect_edge(tbl, e, frm, node.new_alias)
+            v = pattern.vertices[node.new_alias]
+            tbl = self._apply_fused_predicates(tbl, v.predicates, stats)
+            for e in edges:
+                tbl = self._apply_fused_predicates(tbl, e.predicates, stats)
+            stats.log(f"EXPAND(+{node.new_alias}|{len(edges)}e)", tbl.nrows)
+            self._materialize(tbl, node.new_alias, pattern)
+            return tbl
+        if isinstance(node, JoinNode):
+            lt = self.exec_pattern(pattern, node.left, stats)
+            rt = self.exec_pattern(pattern, node.right, stats)
+            # join on the shared vertex aliases plus any other column both
+            # sides bound (shared edges must bind identically on both sides)
+            keys = sorted(set(node.keys) |
+                          (set(lt.cols) & set(rt.cols) - {"__pad"}))
+            keys = [k for k in keys if not k.startswith("__mat.")]
+            lkey = self._pack_join_keys(lt, rt, keys)
+            lidx, ridx = vecops.equi_join(lkey[0], lkey[1],
+                                          max_out=self.max_rows)
+            self._check(lidx.shape[0])
+            cols = {k: v[lidx] for k, v in lt.cols.items()}
+            for k, v in rt.cols.items():
+                if k not in cols:
+                    cols[k] = v[ridx]
+            out = Table(cols, int(lidx.shape[0]))
+            stats.log(f"JOIN({'/'.join(keys)})", out.nrows)
+            return out
+        raise TypeError(node)
+
+    @staticmethod
+    def _pack_join_keys(lt: Table, rt: Table, keys: list[str]):
+        lcols = [lt.cols[k] for k in keys]
+        rcols = [rt.cols[k] for k in keys]
+        lkey = np.zeros(lt.nrows, dtype=np.int64)
+        rkey = np.zeros(rt.nrows, dtype=np.int64)
+        for lc, rc in zip(lcols, rcols):
+            both = np.concatenate([lc, rc])
+            _, inv = np.unique(both, return_inverse=True)
+            card = int(inv.max()) + 1 if inv.size else 1
+            lkey = lkey * card + inv[:lt.nrows]
+            rkey = rkey * card + inv[lt.nrows:]
+        return lkey, rkey
+
+    # ============================================================ expressions
+    def _eval(self, tbl: Table, e) -> np.ndarray:
+        st = self.store
+        if isinstance(e, ir.Lit):
+            return np.full(tbl.nrows, e.value)
+        if isinstance(e, ir.Var):
+            return tbl.cols[e.alias]
+        if isinstance(e, ir.Prop):
+            mat = tbl.cols.get(f"__mat.{e.alias}.{e.name}")
+            if mat is not None:
+                return mat
+            if f"{e.alias}#t" in tbl.cols:   # edge alias
+                return st.edge_prop(tbl.cols[f"{e.alias}#t"],
+                                    tbl.cols[f"{e.alias}#p"], e.name)
+            return st.vertex_prop(tbl.cols[e.alias], e.name)
+        if isinstance(e, ir.Cmp):
+            lhs, rhs = e.lhs, e.rhs
+            l = self._eval(tbl, lhs)
+            r = self._encode_rhs(lhs, rhs, tbl)
+            ops = {"=": np.equal, "<>": np.not_equal, "<": np.less,
+                   ">": np.greater, "<=": np.less_equal,
+                   ">=": np.greater_equal}
+            return ops[e.op](l, r)
+        if isinstance(e, ir.InSet):
+            item = self._eval(tbl, e.item)
+            vals = [self._encode_scalar(e.item, v) for v in e.values]
+            return np.isin(item, np.asarray(vals, dtype=np.int64))
+        if isinstance(e, ir.BoolOp):
+            if e.op == "NOT":
+                return ~self._eval(tbl, e.args[0]).astype(bool)
+            acc = self._eval(tbl, e.args[0]).astype(bool)
+            for a in e.args[1:]:
+                if e.op == "AND":
+                    acc = acc & self._eval(tbl, a).astype(bool)
+                else:
+                    acc = acc | self._eval(tbl, a).astype(bool)
+            return acc
+        raise TypeError(f"cannot evaluate {e!r}")
+
+    def _encode_scalar(self, lhs, value):
+        if isinstance(value, str):
+            if isinstance(lhs, ir.Prop):
+                return self.store.encode_str(lhs.name, value)
+            return -1
+        return value
+
+    def _encode_rhs(self, lhs, rhs, tbl):
+        if isinstance(rhs, ir.Lit):
+            return self._encode_scalar(lhs, rhs.value)
+        return self._eval(tbl, rhs)
+
+    # ============================================================= relational
+    def run(self, plan: ir.LogicalPlan, pattern_plan: PlanNode | None = None):
+        """Execute a logical plan; returns (result Table, ExecStats)."""
+        from repro.core.physical import default_left_deep_plan
+        stats = ExecStats()
+        t0 = time.perf_counter()
+        ops = list(plan.ops)
+        if not isinstance(ops[0], ir.MatchPattern):
+            raise ValueError("plan must start with MATCH_PATTERN")
+        pattern = ops[0].pattern
+        node = pattern_plan or default_left_deep_plan(pattern)
+        tbl = self.exec_pattern(pattern, node, stats)
+        for op in ops[1:]:
+            tbl = self._run_relational(tbl, op, stats)
+        stats.wall_s = time.perf_counter() - t0
+        return tbl, stats
+
+    def _run_relational(self, tbl: Table, op, stats: ExecStats) -> Table:
+        if isinstance(op, ir.Select):
+            if tbl.nrows:
+                tbl = tbl.mask(self._eval(tbl, op.predicate).astype(bool))
+            stats.log("SELECT", tbl.nrows)
+            return tbl
+        if isinstance(op, ir.Project):
+            cols = {name: (self._eval(tbl, e) if tbl.nrows
+                           else np.zeros(0, np.int64))
+                    for e, name in op.items}
+            out = Table(cols, tbl.nrows)
+            if op.distinct and out.nrows:
+                key = vecops.combine_keys(list(out.cols.values()))
+                _, first = np.unique(key, return_index=True)
+                out = out.take(np.sort(first))
+            stats.log("PROJECT", out.nrows)
+            return out
+        if isinstance(op, ir.GroupBy):
+            if tbl.nrows == 0:
+                cols = {n: np.zeros(0, np.int64) for _, n in op.keys}
+                for a, n in op.aggs:
+                    # global aggregate over empty input: COUNT()==0
+                    if not op.keys and a.fn == "COUNT":
+                        return Table({n: np.array([0], np.int64)}, 1)
+                    cols[n] = np.zeros(0, np.int64)
+                return Table(cols, 0)
+            kcols = [self._eval(tbl, e) for e, _ in op.keys]
+            key = (vecops.combine_keys(kcols) if kcols
+                   else np.zeros(tbl.nrows, dtype=np.int64))
+            vals = {}
+            for a, name in op.aggs:
+                col = (self._eval(tbl, a.arg) if a.arg is not None
+                       else np.zeros(tbl.nrows, np.int64))
+                vals[name] = (a.fn, col)
+            first, aggd = vecops.group_reduce(key, vals)
+            cols = {name: kc[first] for (e, name), kc in zip(op.keys, kcols)}
+            cols.update(aggd)
+            out = Table(cols, first.shape[0])
+            stats.log("GROUP", out.nrows)
+            return out
+        if isinstance(op, ir.OrderBy):
+            if tbl.nrows == 0:
+                return tbl
+            sort_cols = []
+            for e, asc in reversed(op.items):
+                name = None
+                if isinstance(e, ir.Var) and e.alias in tbl.cols:
+                    name = e.alias
+                col = tbl.cols[name] if name else self._eval_output(tbl, e)
+                sort_cols.append(col if asc else -col)
+            order = np.lexsort(sort_cols)
+            if op.limit is not None:
+                order = order[:op.limit]
+            return tbl.take(order)
+        if isinstance(op, ir.Limit):
+            idx = np.arange(min(op.n, tbl.nrows))
+            return tbl.take(idx)
+        raise TypeError(op)
+
+    def _eval_output(self, tbl: Table, e):
+        """Evaluate an ORDER BY expression against output column names first
+        (aggregate outputs), else as a normal expression."""
+        name = repr(e)
+        if name in tbl.cols:
+            return tbl.cols[name]
+        if isinstance(e, ir.Agg):
+            raise ValueError(f"ORDER BY references aggregate {name} "
+                             "not present in RETURN")
+        return self._eval(tbl, e)

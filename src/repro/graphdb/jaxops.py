@@ -1,0 +1,72 @@
+"""jit'd JAX mirrors of the engine's hot primitives.
+
+On TPU these (and their Pallas variants in ``repro.kernels``) execute the
+fixed-shape inner loops of pattern matching; the numpy twins in ``vecops`` are
+the host path. Shapes must be static under jit, so the expansion primitive
+works on a padded row block and returns a validity mask — the same contract
+the Pallas kernels use.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("max_degree",))
+def expand_padded(indptr: jax.Array, indices: jax.Array,
+                  rows_local: jax.Array, max_degree: int):
+    """Expand each row to at most ``max_degree`` neighbors.
+
+    Returns (nbr[R, max_degree], valid[R, max_degree], flat_pos[R, max_degree]).
+    Rows with degree > max_degree are truncated (caller splits such rows).
+    """
+    start = indptr[rows_local]
+    deg = indptr[rows_local + 1] - start
+    offs = jnp.arange(max_degree, dtype=indptr.dtype)[None, :]
+    valid = offs < deg[:, None]
+    flat = jnp.clip(start[:, None] + offs, 0, indices.shape[0] - 1)
+    nbr = jnp.where(valid, indices[flat], -1)
+    return nbr, valid, jnp.where(valid, flat, -1)
+
+
+@jax.jit
+def bounded_binary_search(indices: jax.Array, lo: jax.Array, hi: jax.Array,
+                          targets: jax.Array):
+    """jnp twin of vecops.bounded_binary_search (found, pos)."""
+    hi_orig = hi
+    n = indices.shape[0]
+
+    def cond(state):
+        lo, hi = state
+        return jnp.any(lo < hi)
+
+    def body(state):
+        lo, hi = state
+        active = lo < hi
+        mid = (lo + hi) // 2
+        v = indices[jnp.minimum(mid, n - 1)]
+        go_right = active & (v < targets)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.while_loop(cond, body, (lo, hi))
+    pos = lo
+    in_range = pos < jnp.minimum(hi_orig, n)
+    found = in_range & (indices[jnp.minimum(pos, n - 1)] == targets)
+    return found, pos
+
+
+@jax.jit
+def segment_count(segment_ids: jax.Array, num_segments: int):
+    return jax.ops.segment_sum(jnp.ones_like(segment_ids), segment_ids,
+                               num_segments=num_segments)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def group_count(keys: jax.Array, num_segments: int):
+    """Count per dense key in [0, num_segments)."""
+    return jax.ops.segment_sum(
+        jnp.ones(keys.shape[0], jnp.int32), keys, num_segments=num_segments)

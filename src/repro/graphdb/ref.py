@@ -1,0 +1,89 @@
+"""Brute-force pattern-matching oracle (tests only).
+
+Backtracking homomorphism enumeration over the GraphStore; counts
+(vertex-binding x edge-binding) matches exactly like the engine. Exponential —
+use on small graphs only.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.pattern import BOTH, IN, OUT, Pattern
+from repro.graphdb.storage import GraphStore
+
+
+def _edge_multiplicity(store: GraphStore, e, su: int, sv: int) -> int:
+    """Number of data-edge bindings for pattern edge e when its (src,dst)
+    pattern vertices are assigned data vertices (su, sv)."""
+    count = 0
+    orientations = []
+    if e.direction in (OUT, BOTH):
+        orientations.append((su, sv))
+    if e.direction in (IN, BOTH):
+        orientations.append((sv, su))
+    for (a, b) in orientations:
+        for t in e.triples:
+            lo_a, hi_a = store.type_range(t.src)
+            lo_b, hi_b = store.type_range(t.dst)
+            if not (lo_a <= a < hi_a and lo_b <= b < hi_b):
+                continue
+            csr = store.out_csr[t]
+            s, epos = csr.indptr[a - lo_a], csr.indptr[a - lo_a + 1]
+            row = csr.indices[s:epos]
+            j = np.searchsorted(row, b)
+            if j < row.shape[0] and row[j] == b:
+                count += 1
+    return count
+
+
+def count_matches(store: GraphStore, pattern: Pattern,
+                  vertex_filter=None) -> int:
+    """Total homomorphism count (with edge bindings) of pattern in store.
+    ``vertex_filter(alias, np_ids) -> mask`` optionally restricts candidates.
+    """
+    aliases = sorted(pattern.vertices)
+    # candidates per alias
+    cand: dict[str, np.ndarray] = {}
+    for a in aliases:
+        ids = []
+        for t in sorted(pattern.vertices[a].types):
+            lo, hi = store.type_range(t)
+            ids.append(np.arange(lo, hi, dtype=np.int64))
+        c = np.concatenate(ids) if ids else np.zeros(0, np.int64)
+        if vertex_filter is not None:
+            c = c[vertex_filter(a, c)]
+        cand[a] = c
+    order = sorted(aliases, key=lambda a: cand[a].shape[0])
+
+    total = 0
+    assign: dict[str, int] = {}
+
+    def rec(i: int, mult: int):
+        nonlocal total
+        if i == len(order):
+            total += mult
+            return
+        a = order[i]
+        for v in cand[a]:
+            assign[a] = int(v)
+            m = mult
+            ok = True
+            for e in pattern.edges:
+                if a not in (e.src, e.dst):
+                    continue
+                o = e.other(a)
+                if o not in assign:
+                    continue
+                su = assign[e.src] if e.src in assign else None
+                sv = assign[e.dst] if e.dst in assign else None
+                k = _edge_multiplicity(store, e, su, sv)
+                if k == 0:
+                    ok = False
+                    break
+                m *= k
+            if ok:
+                rec(i + 1, m)
+            del assign[a]
+
+    rec(0, 1)
+    return total

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the compute hot-spots (validated in interpret mode):
+#   wcoj_intersect  — GOpt's worst-case-optimal-join membership probe
+#   flash_attention — LM train/prefill attention (online softmax)
+#   grouped_matmul  — MoE expert FFN / eSCN SO(2) grouped GEMM
+#   embedding_bag   — recsys multi-hot lookup-reduce (one-hot MXU trick)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: embedding-bag (multi-hot lookup + bag-sum).
+
+TPU adaptation (DESIGN.md): GPUs do random-access row gathers; the TPU has no
+fast HBM gather, so the classic MXU formulation tiles the table over the grid
+and turns lookups into one-hot matmuls: for each (batch tile, table tile),
+``onehot(ids in tile) @ table_tile`` accumulates into the output rows.
+Production TPU serving offloads this to SparseCore; this kernel is the
+TensorCore fallback and the oracle-checked stand-in.
+
+ids [B, L] int32 (-1 padding; already offset into the concatenated table),
+table [V, D] -> out [B, D] (sum over the L bag slots).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, tab_ref, o_ref, acc_scr, *, bv, n_v):
+    v_i = pl.program_id(1)
+
+    @pl.when(v_i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ids = ids_ref[...]                       # [bb, L]
+    tab = tab_ref[...]                       # [bv, D]
+    lo = v_i * bv
+    local = ids - lo                          # [bb, L]
+    in_tile = (local >= 0) & (local < bv) & (ids >= 0)
+    # one-hot [bb, bv] summed over bag slots -> counts matrix, then MXU
+    iot = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], ids.shape[1],
+                                               bv), 2)
+    onehot = (iot == local[..., None]) & in_tile[..., None]
+    counts = onehot.sum(axis=1).astype(jnp.float32)   # [bb, bv]
+    acc_scr[...] += jnp.dot(counts, tab.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(v_i == n_v - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v",
+                                             "interpret"))
+def embedding_bag_pallas(ids: jax.Array, table: jax.Array,
+                         block_b: int = 128, block_v: int = 512,
+                         interpret: bool = True) -> jax.Array:
+    B, L = ids.shape
+    V, D = table.shape
+    bb, bv = min(block_b, B), min(block_v, V)
+    assert B % bb == 0 and V % bv == 0, "wrapper pads"
+    grid = (B // bb, V // bv)
+    kernel = functools.partial(_kernel, bv=bv, n_v=V // bv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, L), lambda b, v: (b, 0)),
+            pl.BlockSpec((bv, D), lambda b, v: (v, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, D), lambda b, v: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, D), jnp.float32)],
+        interpret=interpret,
+    )(ids, table)

@@ -1,0 +1,24 @@
+"""jit'd wrapper with batch/vocab padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+
+
+def embedding_bag(ids: jax.Array, table: jax.Array, block_b: int = 128,
+                  block_v: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, L = ids.shape
+    V, D = table.shape
+    bb, bv = min(block_b, B), min(block_v, V)
+    pb, pv = (-B) % bb, (-V) % bv
+    if pb:
+        ids = jnp.pad(ids, ((0, pb), (0, 0)), constant_values=-1)
+    if pv:
+        table = jnp.pad(table, ((0, pv), (0, 0)))
+    out = embedding_bag_pallas(ids, table, block_b=bb, block_v=bv,
+                               interpret=interpret)
+    return out[:B]

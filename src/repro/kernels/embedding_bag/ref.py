@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: gather + masked bag-sum (the engine's formulation)."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(ids, table):
+    mask = ids >= 0
+    emb = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    return (emb * mask[..., None].astype(table.dtype)).sum(axis=1)

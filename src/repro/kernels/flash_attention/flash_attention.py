@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: FlashAttention forward (causal / sliding-window /
+logit-softcap), the LM hot spot.
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks), kv innermost so the online
+softmax accumulators (m, l, acc) live in VMEM scratch across kv steps. Block
+shapes keep the working set (q tile, kv tile, p tile, acc) inside ~16MB VMEM
+with MXU-aligned dims (q_block x head_dim and kv_block x head_dim tiles,
+head_dim padded to 128 by the wrapper when needed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, bq, bkv, n_kv):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # [bq, d]
+    k = k_ref[0].astype(jnp.float32)          # [bkv, d]
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T) * scale               # [bq, bkv] (MXU)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 0)
+    kv_pos = kv_i * bkv + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                        # [bq, 1]
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)             # [bq, 1]
+    l_new = l_scr[...] * corr + p.sum(axis=1)[:, None]
+    acc_new = acc_scr[...] * corr + jnp.dot(p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "block_q",
+                              "block_kv", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=None,
+                           softcap=None, block_q=128, block_kv=128,
+                           interpret=True):
+    """q [B, H, Sq, d]; k, v [B, H, Skv, d] (pre-broadcast GQA groups).
+    Returns [B, H, Sq, d]."""
+    B, H, Sq, d = q.shape
+    Skv = k.shape[2]
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, "wrapper pads to block multiples"
+    qr = q.reshape(B * H, Sq, d)
+    kr = k.reshape(B * H, Skv, d)
+    vr = v.reshape(B * H, Skv, d)
+    n_q, n_kv = Sq // bq, Skv // bkv
+    grid = (B * H, n_q, n_kv)
+    kernel = functools.partial(
+        _kernel, scale=1.0 / (d ** 0.5), causal=causal, window=window,
+        softcap=softcap, bq=bq, bkv=bkv, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, d)

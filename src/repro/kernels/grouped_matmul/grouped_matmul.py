@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: grouped GEMM — x [G, M, K] @ w [G, K, N] -> [G, M, N].
+
+The expert-FFN hot spot of the MoE architectures (olmoe / moonshot dispatch
+buffers [E, C, D] x [E, D, F]) and the eSCN SO(2) mixings of EquiformerV2.
+Grid (G, M/bm, N/bn, K/bk) with K innermost; partial products accumulate in a
+fp32 VMEM scratch tile and flush to the output on the last K step — the
+canonical MXU blocking (bm x bk and bk x bn tiles, 128-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_scr, *, n_k):
+    k_i = pl.program_id(3)
+
+    @pl.when(k_i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0]                                   # [bm, bk]
+    w = w_ref[0]                                   # [bk, bn]
+    acc_scr[...] += jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k_i == n_k - 1)
+    def _finish():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def grouped_matmul_pallas(x: jax.Array, w: jax.Array, block_m: int = 128,
+                          block_n: int = 128, block_k: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    G, M, K = x.shape
+    _, _, N = w.shape
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        "wrapper pads to block multiples"
+    grid = (G, M // bm, N // bn, K // bk)
+    kernel = functools.partial(_kernel, n_k=K // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,25 @@
+"""jit'd wrapper with padding to MXU-aligned block multiples."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grouped_matmul.grouped_matmul import grouped_matmul_pallas
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, block_m: int = 128,
+                   block_n: int = 128, block_k: int = 128,
+                   interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    G, M, K = x.shape
+    _, _, N = w.shape
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, 0), (0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, 0), (0, pk), (0, pn)))
+    out = grouped_matmul_pallas(x, w, block_m=bm, block_n=bn, block_k=bk,
+                                interpret=interpret)
+    return out[:, :M, :N]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for grouped matmul."""
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x, w):
+    return jnp.einsum("gmk,gkn->gmn", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.wcoj_intersect.ops import wcoj_intersect  # noqa: F401

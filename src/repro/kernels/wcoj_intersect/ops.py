@@ -1,0 +1,27 @@
+"""jit'd wrapper: picks the Pallas kernel (interpret on CPU, compiled on
+TPU) and handles the CSR -> padded-ELL row materialization."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wcoj_intersect.wcoj_intersect import wcoj_intersect_pallas
+
+
+def wcoj_intersect(adj: jax.Array, target: jax.Array,
+                   block_rows: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return wcoj_intersect_pallas(adj, target, block_rows=block_rows,
+                                 interpret=interpret)
+
+
+def gather_rows(indices: jax.Array, indptr: jax.Array, rows: jax.Array,
+                d_max: int) -> jax.Array:
+    """CSR rows -> padded ELL [R, d_max] (host-side prep for the kernel)."""
+    start = indptr[rows]
+    deg = indptr[rows + 1] - start
+    offs = jnp.arange(d_max)[None, :]
+    valid = offs < deg[:, None]
+    flat = jnp.clip(start[:, None] + offs, 0, indices.shape[0] - 1)
+    return jnp.where(valid, indices[flat], -1)

@@ -1,0 +1,136 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell: build the production
+mesh, lower the step with full shardings, ``.compile()``, and record
+memory_analysis / cost_analysis / scan-aware roofline terms.
+
+The XLA_FLAGS line above MUST stay the first statement — jax locks the device
+count at first init. Do not import this module from tests.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import get_bundle, list_archs          # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.launch.roofline import analyze_hlo, summarize  # noqa: E402
+from repro.models.sharding import hint_context            # noqa: E402
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             with_roofline: bool = True) -> dict:
+    t0 = time.time()
+    bundle = get_bundle(arch)
+    spec = bundle.shapes[shape]
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": spec.kind}
+    if spec.skip:
+        rec["status"] = "SKIPPED"
+        rec["reason"] = spec.skip
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    step = bundle.make_step(shape)
+    args = bundle.input_specs(shape)
+    in_sh, out_sh, hints = bundle.shardings(mesh, shape)
+    try:
+        with hint_context(hints):
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        rec.update({
+            "status": "OK",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "bytes_per_device": {
+                "arguments": int(ma.argument_size_in_bytes),
+                "outputs": int(ma.output_size_in_bytes),
+                "temps": int(ma.temp_size_in_bytes),
+                "total_gb": round((ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes
+                                   + ma.temp_size_in_bytes) / 2**30, 3),
+            },
+            "xla_cost_analysis": {
+                "flops_body_once": float(ca.get("flops", 0.0)),
+                "bytes_body_once": float(ca.get("bytes accessed", 0.0)),
+            },
+        })
+        if with_roofline:
+            terms = analyze_hlo(compiled.as_text())
+            chips = mesh.devices.size
+            mf = bundle.model_flops(shape)
+            rec["roofline"] = summarize(terms, mf / chips if mf else 0.0)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-roofline", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    results = []
+    for arch in archs:
+        bundle = get_bundle(arch)
+        shapes = ([args.shape] if args.shape else bundle.shape_names())
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp,
+                               with_roofline=not args.no_roofline)
+                results.append(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    extra = (f"mem={rec['bytes_per_device']['total_gb']}GB "
+                             f"compile={rec['compile_s']}s")
+                    if "roofline" in rec:
+                        r = rec["roofline"]
+                        extra += (f" dom={r['dominant']}"
+                                  f" Tc={r['t_compute_s']:.3g}"
+                                  f" Tm={r['t_memory_s']:.3g}"
+                                  f" Tx={r['t_collective_s']:.3g}")
+                elif status == "FAIL":
+                    extra = rec["error"][:200]
+                else:
+                    extra = rec["reason"][:80]
+                print(f"[{status:7s}] {arch:22s} {shape:14s} "
+                      f"{rec['mesh']:8s} {extra}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"{len(results)} cells, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

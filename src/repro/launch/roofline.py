@@ -1,0 +1,299 @@
+"""Roofline-term extraction from compiled HLO (CPU container, TPU target).
+
+``compiled.cost_analysis()`` on XLA:CPU is per-device AND counts while-loop
+(lax.scan) bodies exactly once — verified by calibration (see tests). This
+module therefore parses the optimized HLO text itself:
+
+- splits the module into computations and builds the call graph
+  (fusion ``calls=``, ``to_apply=``, while ``condition=/body=``, conditional
+  branches);
+- recovers while trip counts from the loop-condition constants;
+- counts dot FLOPs (2 * |out| * K) per computation, multiplied by the
+  product of enclosing trip counts;
+- models memory traffic at fusion boundaries (operands + outputs of every
+  non-fused op);
+- sums collective bytes per collective kind, with the same multipliers.
+
+Terms (TPU v5e-like):
+    T_compute    = flops_per_chip / 197e12
+    T_memory     = bytes_per_chip / 819e9
+    T_collective = collective_bytes_per_chip / 50e9
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per-chip effective)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast",
+                "ragged-all-to-all")
+
+
+def shape_bytes(type_str: str) -> float:
+    """Total bytes of every dtype[dims] occurrence in a type string."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    opcode: str
+    out_type: str
+    operands: list[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[OpLine]
+    is_fused: bool
+    op_types: dict[str, str]    # op name -> output type string
+
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|\S+))\s+([\w\-]+)\(")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and stripped.endswith("{"):
+            m = _COMP_HEAD.match(stripped)
+            if m:
+                name = m.group(1)
+                cur = Computation(name, [], "fused_computation" in name, {})
+                comps[name] = cur
+            else:
+                cur = None
+            continue
+        if cur is None:
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        opname, out_type, opcode = m.group(1), m.group(2), m.group(3)
+        # operand names: references inside the parens, before metadata
+        paren = line[line.find(opcode + "(") + len(opcode):]
+        refs = _REF_RE.findall(paren)
+        cur.ops.append(OpLine(opname, opcode, out_type, refs, line))
+        cur.op_types[opname] = out_type
+    return comps
+
+
+def _called_comps(op: OpLine) -> list[str]:
+    out = []
+    for kw in ("calls=", "to_apply=", "condition=", "body="):
+        i = op.raw.find(kw)
+        if i >= 0:
+            m = _REF_RE.match(op.raw[i + len(kw):].lstrip())
+            if m:
+                out.append(m.group(1))
+    i = op.raw.find("branch_computations={")
+    if i >= 0:
+        seg = op.raw[i:op.raw.find("}", i)]
+        out.extend(_REF_RE.findall(seg))
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition — scan trip count."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.raw)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def compute_multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution-count multiplier per computation (ENTRY = 1)."""
+    mult: dict[str, float] = defaultdict(float)
+    # root computations: never called by others (ENTRY et al.)
+    called = set()
+    for c in comps.values():
+        for op in c.ops:
+            for t in _called_comps(op):
+                called.add(t)
+    roots = [n for n in comps if n not in called]
+    for r in roots:
+        mult[r] = max(mult[r], 1.0)
+    # propagate in topological-ish order via worklist
+    work = list(roots)
+    while work:
+        name = work.pop()
+        c = comps.get(name)
+        if c is None:
+            continue
+        m = mult[name]
+        for op in c.ops:
+            targets = _called_comps(op)
+            if not targets:
+                continue
+            if op.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.raw)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.raw)
+                body = bm.group(1) if bm else None
+                cond = cm.group(1) if cm else None
+                trip = _trip_count(comps[cond]) if cond in comps else 1
+                if body:
+                    if mult[body] < m * trip:
+                        mult[body] = m * trip
+                        work.append(body)
+                if cond:
+                    if mult[cond] < m * (trip + 1):
+                        mult[cond] = m * (trip + 1)
+                        work.append(cond)
+                continue
+            for t in targets:
+                if mult[t] < m:
+                    mult[t] = m
+                    work.append(t)
+    return dict(mult)
+
+
+def _dot_flops(op: OpLine, comp: Computation) -> float:
+    out_elems = 1.0
+    m = _SHAPE_RE.search(op.out_type)
+    if m and m.group(2):
+        for d in m.group(2).split(","):
+            out_elems *= int(d)
+    # contraction size from lhs shape + lhs_contracting_dims
+    lhs_name = op.operands[0] if op.operands else None
+    lhs_type = comp.op_types.get(lhs_name, "")
+    lm = _SHAPE_RE.search(lhs_type)
+    cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.raw)
+    k = 1.0
+    if lm and cdims and lm.group(2):
+        dims = [int(x) for x in lm.group(2).split(",")]
+        for ci in cdims.group(1).split(","):
+            if ci:
+                k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: dict = dataclasses.field(default_factory=dict)
+    n_collectives: int = 0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant(),
+            "collectives": self.collective_breakdown,
+        }
+
+
+def analyze_hlo(text: str) -> RooflineTerms:
+    comps = parse_hlo(text)
+    mult = compute_multipliers(comps)
+    out = RooflineTerms()
+    for name, c in comps.items():
+        m = mult.get(name, 1.0)
+        if c.is_fused:
+            continue  # accounted at the fusion call site
+        for op in c.ops:
+            if op.opcode == "dot":
+                out.flops += m * _dot_flops(op, c)
+            # Memory-traffic model: count bytes only at boundaries a TPU
+            # compiler cannot fuse away — matmuls, fusions, reductions,
+            # scatter/gather/sort, dynamic (update-)slices, collectives.
+            # Standalone elementwise/layout ops on the XLA:CPU dump are
+            # assumed fused into neighbors on the TPU target (documented in
+            # EXPERIMENTS.md §Roofline-method).
+            if op.opcode in ("fusion", "dot", "convolution", "reduce",
+                             "scatter", "gather", "sort",
+                             "dynamic-slice", "dynamic-update-slice",
+                             "reduce-window",
+                             "custom-call") or op.opcode in _COLLECTIVES:
+                b = shape_bytes(op.out_type)
+                for operand in op.operands:
+                    t = c.op_types.get(operand)
+                    if t:
+                        b += shape_bytes(t)
+                out.bytes += m * b
+            if op.opcode in _COLLECTIVES:
+                cb = max(shape_bytes(op.out_type),
+                         sum(shape_bytes(c.op_types.get(o, ""))
+                             for o in op.operands))
+                out.collective_bytes += m * cb
+                key = op.opcode
+                out.collective_breakdown[key] = (
+                    out.collective_breakdown.get(key, 0.0) + m * cb)
+                out.n_collectives += int(m)
+        # fused computations: count dot flops inside at the caller multiplier
+    for name, c in comps.items():
+        if not c.is_fused:
+            continue
+        m = mult.get(name, 1.0)
+        for op in c.ops:
+            if op.opcode == "dot":
+                out.flops += m * _dot_flops(op, c)
+    return out
+
+
+def summarize(terms: RooflineTerms, model_flops_per_chip: float) -> dict:
+    d = terms.as_dict()
+    d["model_flops_per_chip"] = model_flops_per_chip
+    d["useful_flops_ratio"] = (model_flops_per_chip / terms.flops
+                               if terms.flops else 0.0)
+    t_bound = max(terms.t_compute, terms.t_memory, terms.t_collective)
+    d["roofline_fraction"] = (
+        (model_flops_per_chip / PEAK_FLOPS) / t_bound if t_bound else 0.0)
+    return d

@@ -1,0 +1,94 @@
+"""Shared GNN primitives: padded-COO message passing via segment ops.
+
+JAX has no sparse message-passing engine (BCOO only) — per the assignment,
+scatter/gather message passing over an edge index IS part of the system:
+``segment_sum``/``segment_softmax`` over ``edges [2, E]`` with -1 padding.
+The Pallas ``segment_matmul`` kernel is the TPU hot-path twin of
+``gather_dense_scatter``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import shard_hint
+
+
+def edge_mask(edges: jax.Array) -> jax.Array:
+    return (edges[0] >= 0) & (edges[1] >= 0)
+
+
+def safe_edges(edges: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(src, dst, mask) with padded entries clipped to 0."""
+    m = edge_mask(edges)
+    return jnp.maximum(edges[0], 0), jnp.maximum(edges[1], 0), m
+
+
+def segment_softmax(logits: jax.Array, seg: jax.Array, num_segments: int,
+                    mask: jax.Array | None = None) -> jax.Array:
+    """Softmax of per-edge logits grouped by destination node."""
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    mx = jax.ops.segment_max(logits, seg, num_segments=num_segments)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(logits - mx[seg])
+    if mask is not None:
+        ex = jnp.where(mask, ex, 0.0)
+    den = jax.ops.segment_sum(ex, seg, num_segments=num_segments)
+    return ex / jnp.maximum(den[seg], 1e-16)
+
+
+def scatter_mean(values: jax.Array, seg: jax.Array, num_segments: int,
+                 mask: jax.Array | None = None) -> jax.Array:
+    ones = jnp.ones(values.shape[0], values.dtype)
+    if mask is not None:
+        fm = mask.astype(values.dtype)
+        values = values * fm.reshape((-1,) + (1,) * (values.ndim - 1))
+        ones = fm
+    s = jax.ops.segment_sum(values, seg, num_segments=num_segments)
+    c = jax.ops.segment_sum(ones, seg, num_segments=num_segments)
+    return s / jnp.maximum(c, 1.0).reshape((-1,) + (1,) * (values.ndim - 1))
+
+
+def gather_dense_scatter(x: jax.Array, w: jax.Array, edges: jax.Array,
+                         num_nodes: int) -> jax.Array:
+    """The SpMM-regime kernel: gather source features, transform, scatter-add
+    to destinations. x [N, F], w [F, G] -> [N, G]."""
+    src, dst, m = safe_edges(edges)
+    msg = (x[src] @ w) * m[:, None].astype(x.dtype)
+    msg = shard_hint(msg, "edge_msg")
+    return jax.ops.segment_sum(msg, dst, num_segments=num_nodes)
+
+
+# -------------------------------------------------------- radial bases
+
+
+def gaussian_rbf(d: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """SchNet-style Gaussian radial basis [..., n_rbf]."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = (n_rbf / cutoff) ** 2 * 0.5
+    return jnp.exp(-gamma * (d[..., None] - centers) ** 2)
+
+
+def bessel_rbf(d: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """NequIP-style Bessel basis."""
+    n = jnp.arange(1, n_rbf + 1)
+    dd = jnp.maximum(d[..., None], 1e-9)
+    return (jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * dd / cutoff) / dd)
+
+
+def poly_cutoff(d: jax.Array, cutoff: float, p: int = 6) -> jax.Array:
+    """Smooth polynomial cutoff envelope (goes to 0 at d=cutoff)."""
+    x = jnp.clip(d / cutoff, 0.0, 1.0)
+    return (1.0 - 0.5 * (p + 1) * (p + 2) * x ** p
+            + p * (p + 2) * x ** (p + 1)
+            - 0.5 * p * (p + 1) * x ** (p + 2))
+
+
+def edge_vectors(positions: jax.Array, edges: jax.Array):
+    """(rhat [E,3], dist [E], mask [E]) from positions and padded COO."""
+    src, dst, m = safe_edges(edges)
+    vec = positions[dst] - positions[src]
+    d = jnp.linalg.norm(vec, axis=-1)
+    rhat = vec / jnp.maximum(d[:, None], 1e-9)
+    return rhat, d, m

@@ -1,0 +1,174 @@
+"""NequIP (Batzner et al., arXiv:2101.03164) — E(3)-equivariant interatomic
+potential via Clebsch-Gordan tensor-product message passing.
+
+Features are C channels of every irrep l<=l_max, stored flat as
+``[N, C, (l_max+1)^2]``. Each interaction block computes, per valid path
+(l1 x l2 -> l3), messages ``w_path(d_ij) * CG(f_j^{l1}, Y^{l2}(r_ij))``
+aggregated by segment_sum — the irrep-tensor-product kernel regime. CG
+tensors come from `repro.models.gnn.irreps` (numerically derived, equivariance
+tested to 1e-7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+from repro.models.gnn.common import (bessel_rbf, edge_vectors, poly_cutoff,
+                                     safe_edges)
+from repro.models.gnn.irreps import cg_tensor, irrep_slices, real_sph_harm
+from repro.models.sharding import shard_hint
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32          # channels per irrep
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_atom_types: int = 100
+    d_feat: int = 0
+    avg_neighbors: float = 10.0
+    task: str = "energy"
+    n_graphs: int = 1
+    n_classes: int = 0
+    dtype: Any = jnp.float32
+
+    def paths(self) -> list[tuple[int, int, int]]:
+        out = []
+        for l1 in range(self.l_max + 1):
+            for l2 in range(self.l_max + 1):
+                for l3 in range(self.l_max + 1):
+                    if abs(l1 - l2) <= l3 <= l1 + l2:
+                        out.append((l1, l2, l3))
+        return out
+
+    @property
+    def dim(self) -> int:
+        return (self.l_max + 1) ** 2
+
+
+def init_params(cfg: NequIPConfig, rng) -> dict:
+    C, R = cfg.d_hidden, cfg.n_rbf
+    npaths = len(cfg.paths())
+    L = cfg.n_layers
+    ks = jax.random.split(rng, 8 + 6 * L)
+    if cfg.d_feat:
+        embed = dense_init(ks[0], (cfg.d_feat, C))
+    else:
+        embed = dense_init(ks[0], (cfg.n_atom_types, C), 1.0)
+    layers = []
+    for i in range(L):
+        k = ks[8 + 6 * i: 14 + 6 * i]
+        layers.append({
+            "rad1": dense_init(k[0], (R, 32)), "rad1_b": jnp.zeros(32),
+            "rad2": dense_init(k[1], (32, npaths * C)),
+            # per-l channel mixings (self-interaction before/after conv)
+            "mix_pre": dense_init(k[2], (cfg.l_max + 1, C, C)),
+            "mix_post": dense_init(k[3], (cfg.l_max + 1, C, C)),
+            "gate_w": dense_init(k[4], (C, cfg.l_max * C)),
+            "gate_b": jnp.zeros(cfg.l_max * C),
+        })
+    return {
+        "embed": embed, "layers": layers,
+        "head1": dense_init(ks[1], (C, C)), "head1_b": jnp.zeros(C),
+        "head2": dense_init(ks[2], (C, cfg.n_classes
+                                    if cfg.task == "node_class" else 1)),
+    }
+
+
+def _per_l_mix(x: jax.Array, w: jax.Array, slices) -> jax.Array:
+    """x [N, C, dim]; w [L+1, C, C] -> per-l channel mixing."""
+    outs = []
+    for l, sl in enumerate(slices):
+        outs.append(jnp.einsum("ncm,cd->ndm", x[..., sl], w[l]))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def forward(params, batch, cfg: NequIPConfig) -> jax.Array:
+    edges = batch["edges"]
+    src, dst, _ = safe_edges(edges)
+    rhat, d, m = edge_vectors(batch["positions"].astype(cfg.dtype), edges)
+    N = batch["positions"].shape[0]
+    C, dim = cfg.d_hidden, cfg.dim
+    slices = irrep_slices(cfg.l_max)
+    paths = cfg.paths()
+    CGs = {p: jnp.asarray(cg_tensor(*p), cfg.dtype) for p in paths}
+
+    if cfg.d_feat:
+        s0 = batch["node_feat"].astype(cfg.dtype) @ params["embed"]
+    else:
+        s0 = params["embed"][jnp.maximum(batch.get("atom_type",
+                                                   jnp.zeros(N, jnp.int32)),
+                                         0)]
+    x = jnp.zeros((N, C, dim), cfg.dtype).at[..., 0].set(s0)
+
+    Y = real_sph_harm(cfg.l_max, rhat).astype(cfg.dtype)       # [E, dim]
+    rbf = bessel_rbf(d, cfg.n_rbf, cfg.cutoff)
+    env = (poly_cutoff(d, cfg.cutoff) * m)[:, None]
+
+    for lp in params["layers"]:
+        rad = jax.nn.silu(rbf @ lp["rad1"] + lp["rad1_b"]) @ lp["rad2"]
+        rad = rad.reshape(-1, len(paths), C) * env[..., None]   # [E, P, C]
+        h = _per_l_mix(x, lp["mix_pre"], slices)
+        hs = h[src]                                             # [E, C, dim]
+        hs = shard_hint(hs, "edge_msg")
+        msg = jnp.zeros((hs.shape[0], C, dim), cfg.dtype)
+        for pi, (l1, l2, l3) in enumerate(paths):
+            t = jnp.einsum("kij,eci,ej->eck", CGs[(l1, l2, l3)],
+                           hs[..., slices[l1]], Y[..., slices[l2]])
+            msg = msg.at[..., slices[l3]].add(t * rad[:, pi, :, None])
+        agg = jax.ops.segment_sum(msg, dst, num_segments=N)
+        agg = agg / jnp.asarray(np.sqrt(cfg.avg_neighbors), cfg.dtype)
+        agg = _per_l_mix(agg, lp["mix_post"], slices)
+        # gated nonlinearity: scalars silu; l>0 gated by scalar-derived sigm.
+        scal = jax.nn.silu(agg[..., 0])
+        gates = jax.nn.sigmoid(agg[..., 0] @ lp["gate_w"] + lp["gate_b"])
+        gates = gates.reshape(N, cfg.l_max, C).transpose(0, 2, 1)
+        out = agg.at[..., 0].set(scal)
+        for l in range(1, cfg.l_max + 1):
+            out = out.at[..., slices[l]].multiply(gates[..., l - 1][..., None])
+        x = x + out
+    h = jax.nn.silu(x[..., 0] @ params["head1"] + params["head1_b"])
+    h = h @ params["head2"]
+    if cfg.task == "node_class":
+        return h
+    graph_ids = batch.get("graph_ids")
+    n_graphs = cfg.n_graphs
+    if graph_ids is None:
+        return h.sum(axis=0)
+    # padded nodes carry graph_id == -1: route them to a spill segment
+    seg = jnp.where(graph_ids >= 0, graph_ids, n_graphs)
+    return jax.ops.segment_sum(h[:, 0], seg,
+                               num_segments=n_graphs + 1)[:n_graphs]
+
+
+def loss_fn(params, batch, cfg: NequIPConfig):
+    out = forward(params, batch, cfg)
+    if cfg.task == "node_class":
+        labels = batch["labels"]
+        mask = batch.get("train_mask", jnp.ones(labels.shape)) * (labels >= 0)
+        logp = jax.nn.log_softmax(out.astype(jnp.float32))
+        nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[:, None],
+                                   -1)[:, 0]
+        return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1), {}
+    err = out - batch["energy"]
+    return jnp.mean(jnp.square(err)), {"mae": jnp.mean(jnp.abs(err))}
+
+
+def make_train_step(cfg: NequIPConfig, adam_cfg):
+    from repro.train import optimizer as opt
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg)
+        params, opt_state, om = opt.update(adam_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **parts, **om}
+
+    return train_step

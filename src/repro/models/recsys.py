@@ -1,0 +1,179 @@
+"""Wide & Deep (Cheng et al., arXiv:1606.07792) — recsys ranking/retrieval.
+
+JAX has no native EmbeddingBag: lookups are ``jnp.take`` over one concatenated
+table (per-field row offsets) followed by a masked bag-sum — this IS the hot
+path, and ``repro.kernels.embedding_bag`` is its Pallas twin. The wide part is
+a hashed cross-feature linear model; the deep part an MLP over concatenated
+bag embeddings + dense features.
+
+Shapes:
+- train_batch / serve_p99 / serve_bulk: pointwise CTR (BCE loss / sigmoid).
+- retrieval_cand: one query scored against 10^6 candidates — the deep tower
+  runs once, scoring is a single [n_cand, d] x [d] batched dot against an item
+  embedding table (documented adaptation in DESIGN.md §4; the paper's model is
+  pointwise, retrieval scoring factorizes the final layer).
+
+Embedding-table rows shard over the ``model`` axis (the paper's
+vertex-partitioning analogue for GOpt); batch shards over ``data``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+from repro.models.sharding import shard_hint
+
+
+@dataclasses.dataclass(frozen=True)
+class WideDeepConfig:
+    name: str = "wide-deep"
+    n_sparse: int = 40
+    embed_dim: int = 32
+    mlp: tuple[int, ...] = (1024, 512, 256)
+    n_dense: int = 13
+    max_bag: int = 8                 # multi-hot bag size per field
+    # per-field vocabulary sizes (production-skewed mix)
+    vocab_sizes: tuple[int, ...] = ()
+    wide_vocab: int = 1_000_000
+    n_wide: int = 80
+    # retrieval head
+    n_items: int = 1_000_000
+    item_dim: int = 256
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if not self.vocab_sizes:
+            sizes = ([50_000_000] * 2 + [1_000_000] * 6 + [100_000] * 12
+                     + [10_000] * 20)
+            object.__setattr__(self, "vocab_sizes", tuple(sizes[:self.n_sparse]))
+        assert len(self.vocab_sizes) == self.n_sparse
+
+    @property
+    def total_rows(self) -> int:
+        return sum(self.vocab_sizes)
+
+    def field_offsets(self) -> np.ndarray:
+        return np.cumsum([0] + list(self.vocab_sizes))[:-1].astype(np.int64)
+
+    def param_count(self) -> int:
+        deep_in = self.n_sparse * self.embed_dim + self.n_dense
+        mlp = 0
+        prev = deep_in
+        for h in self.mlp:
+            mlp += prev * h + h
+            prev = h
+        return (self.total_rows * self.embed_dim + self.wide_vocab
+                + mlp + prev + self.n_items * self.item_dim
+                + prev * self.item_dim)
+
+
+def init_params(cfg: WideDeepConfig, rng) -> dict:
+    ks = jax.random.split(rng, 6 + len(cfg.mlp))
+    deep_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    layers = []
+    prev = deep_in
+    for i, h in enumerate(cfg.mlp):
+        layers.append({"w": dense_init(ks[3 + i], (prev, h)),
+                       "b": jnp.zeros(h)})
+        prev = h
+    return {
+        "table": dense_init(ks[0], (cfg.total_rows, cfg.embed_dim), 0.01),
+        "wide": dense_init(ks[1], (cfg.wide_vocab,), 0.01),
+        "wide_b": jnp.zeros(()),
+        "mlp": layers,
+        "out_w": dense_init(ks[2], (prev, 1)),
+        "items": dense_init(ks[4], (cfg.n_items, cfg.item_dim), 0.05),
+        "user_proj": dense_init(ks[5], (prev, cfg.item_dim)),
+    }
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  offsets: jax.Array) -> jax.Array:
+    """ids [B, F, bag] (-1 pad, per-field local ids) -> [B, F*dim].
+    Gather + masked sum — the EmbeddingBag the assignment asks us to build."""
+    mask = (ids >= 0)
+    gidx = jnp.maximum(ids, 0) + offsets[None, :, None]
+    emb = jnp.take(table, gidx, axis=0)                 # [B, F, bag, dim]
+    emb = emb * mask[..., None].astype(table.dtype)
+    bags = emb.sum(axis=2)                              # [B, F, dim]
+    bags = shard_hint(bags, "bag_emb")
+    return bags.reshape(ids.shape[0], -1)
+
+
+def deep_tower(params, batch, cfg: WideDeepConfig) -> jax.Array:
+    offsets = jnp.asarray(cfg.field_offsets())
+    x = embedding_bag(params["table"].astype(cfg.dtype),
+                      batch["sparse_ids"], offsets)
+    x = jnp.concatenate([x, batch["dense"].astype(cfg.dtype)], axis=-1)
+    for lp in params["mlp"]:
+        x = jax.nn.relu(x @ lp["w"].astype(cfg.dtype) + lp["b"].astype(cfg.dtype))
+        x = shard_hint(x, "mlp_hidden")
+    return x                                            # [B, mlp[-1]]
+
+
+def forward(params, batch, cfg: WideDeepConfig) -> jax.Array:
+    """Pointwise CTR logits [B]."""
+    deep = deep_tower(params, batch, cfg) @ params["out_w"].astype(cfg.dtype)
+    wmask = batch["wide_ids"] >= 0
+    wvals = jnp.take(params["wide"].astype(cfg.dtype),
+                     jnp.maximum(batch["wide_ids"], 0), axis=0)
+    wide = (wvals * wmask).sum(axis=-1) + params["wide_b"].astype(cfg.dtype)
+    return deep[:, 0] + wide
+
+
+def retrieval_scores(params, batch, cfg: WideDeepConfig) -> jax.Array:
+    """One query against candidate_ids [n_cand] -> scores [n_cand]."""
+    user = deep_tower(params, batch, cfg) @ params["user_proj"].astype(
+        cfg.dtype)                                       # [1, item_dim]
+    cand = jnp.take(params["items"].astype(cfg.dtype),
+                    batch["candidate_ids"], axis=0)      # [n_cand, item_dim]
+    cand = shard_hint(cand, "cand_emb")
+    return cand @ user[0]
+
+
+def loss_fn(params, batch, cfg: WideDeepConfig):
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    acc = jnp.mean((logits > 0) == (y > 0.5))
+    return loss, {"acc": acc}
+
+
+def make_train_step(cfg: WideDeepConfig, adam_cfg):
+    from repro.train import optimizer as opt
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg)
+        params, opt_state, om = opt.update(adam_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **parts, **om}
+
+    return train_step
+
+
+def synthetic_batch(cfg: WideDeepConfig, batch_size: int, seed: int = 0,
+                    with_labels: bool = True) -> dict:
+    """Host-side synthetic click-log batch (skewed ids, learnable signal)."""
+    rng = np.random.default_rng(seed)
+    ids = np.empty((batch_size, cfg.n_sparse, cfg.max_bag), np.int32)
+    for f, v in enumerate(cfg.vocab_sizes):
+        z = rng.zipf(1.2, size=(batch_size, cfg.max_bag)).astype(np.int64)
+        ids[:, f] = (z - 1) % v
+    nbag = rng.integers(1, cfg.max_bag + 1, size=(batch_size, cfg.n_sparse))
+    mask = np.arange(cfg.max_bag)[None, None] < nbag[..., None]
+    ids = np.where(mask, ids, -1)
+    dense = rng.normal(size=(batch_size, cfg.n_dense)).astype(np.float32)
+    wide = rng.integers(0, cfg.wide_vocab,
+                        size=(batch_size, cfg.n_wide)).astype(np.int32)
+    out = {"sparse_ids": ids, "dense": dense, "wide_ids": wide}
+    if with_labels:
+        # label depends on dense features + a few id parities -> learnable
+        sig = dense[:, 0] + 0.5 * dense[:, 1] + 0.3 * (ids[:, 0, 0] % 2)
+        out["labels"] = (sig > 0.4).astype(np.float32)
+    return out

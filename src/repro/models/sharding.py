@@ -1,0 +1,36 @@
+"""Sharding-hint plumbing.
+
+Models are mesh-agnostic; launchers install a hint table mapping logical
+activation names to NamedShardings. ``shard_hint(x, name)`` applies
+``with_sharding_constraint`` when a hint is installed, else no-ops — so the
+same model code runs single-device in tests and fully sharded in dry-runs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def _table() -> dict:
+    return getattr(_state, "hints", None) or {}
+
+
+@contextlib.contextmanager
+def hint_context(hints: dict):
+    old = getattr(_state, "hints", None)
+    _state.hints = hints
+    try:
+        yield
+    finally:
+        _state.hints = old
+
+
+def shard_hint(x: jax.Array, name: str) -> jax.Array:
+    h = _table().get(name)
+    if h is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, h)

@@ -1,0 +1,521 @@
+"""Decoder-only transformer LM family.
+
+One configurable implementation covers all five assigned LM architectures:
+dense (qwen2.5-32b, phi3-medium) and MoE (olmoe-1b-7b, moonshot-16b-a3b) MLPs,
+GQA with optional QKV bias, RoPE, gemma2-27b extras (alternating local/global
+attention, attn+final logit soft-capping, pre+post RMSNorm, zero-centered
+norm scales).
+
+Attention is computed block-wise with an online-softmax accumulator (a
+pure-jnp flash formulation) so 32k prefill compiles with bounded live memory;
+`repro.kernels.flash_attention` is the Pallas twin for TPU. Layers run under
+``lax.scan`` (+ remat) so the HLO stays one-layer-sized — that is what keeps
+512-device dry-run compiles fast.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (apply_rope, cross_entropy, dense_init,
+                                 rms_norm, rope_angles, softcap)
+from repro.models.sharding import shard_hint
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # gemma2 extras
+    layer_pattern: str = "global"      # "global" | "local_global"
+    window: int = 4096
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    post_norms: bool = False
+    zero_centered_norm: bool = False
+    # compute
+    dtype: Any = jnp.bfloat16
+    block_q: int = 512
+    block_kv: int = 1024
+    remat: bool = True
+    # perf knobs (EXPERIMENTS.md §Perf):
+    causal_block_skip: bool = False    # skip fully-masked causal kv blocks
+    attn_remat: bool = False           # recompute p-matrices in backward
+    attn_p_bf16: bool = False          # bf16 probabilities for the PV matmul
+    aux_loss_weight: float = 0.01
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def is_local_flags(self) -> jnp.ndarray:
+        """Per-layer bool: sliding-window layer? gemma2 alternates
+        local(even)/global(odd)."""
+        if self.layer_pattern == "local_global":
+            return jnp.arange(self.n_layers) % 2 == 0
+        return jnp.zeros(self.n_layers, dtype=bool)
+
+    # ------------------------------------------------------------- analytics
+    def param_count(self) -> int:
+        D, H, K, hd, F, V, L = (self.d_model, self.n_heads, self.n_kv_heads,
+                                self.hd, self.d_ff, self.vocab_size,
+                                self.n_layers)
+        attn = D * H * hd + 2 * D * K * hd + H * hd * D
+        if self.moe:
+            mlp = self.n_experts * 3 * D * F + D * self.n_experts
+        else:
+            mlp = 3 * D * F
+        norms = (4 if self.post_norms else 2) * D
+        return L * (attn + mlp + norms) + 2 * V * D + D
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        dead = L * (self.n_experts - self.top_k) * 3 * D * F
+        return self.param_count() - dead
+
+    def train_flops(self, batch: int, seq: int) -> float:
+        """6*N_active*D model flops (the §Roofline MODEL_FLOPS convention)."""
+        return 6.0 * self.active_param_count() * batch * seq
+
+    def decode_flops(self, batch: int, kv_len: int) -> float:
+        """Per decode token: 2*N_active + attention reads."""
+        attn = (4.0 * self.n_layers * self.n_kv_heads * self.hd * kv_len
+                * (self.n_heads // self.n_kv_heads))
+        return batch * (2.0 * self.active_param_count() + attn)
+
+
+# ============================================================== init
+
+
+def init_params(cfg: TransformerConfig, rng: jax.Array) -> dict:
+    D, H, K, hd, F, V, L = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                            cfg.d_ff, cfg.vocab_size, cfg.n_layers)
+    ks = jax.random.split(rng, 12)
+    dt = jnp.float32  # master params fp32; compute casts to cfg.dtype
+
+    def stack(key, shape, scale=None):
+        return dense_init(key, (L,) + shape, scale, dt)
+
+    attn = {
+        "wq": stack(ks[0], (D, H * hd)),
+        "wk": stack(ks[1], (D, K * hd)),
+        "wv": stack(ks[2], (D, K * hd)),
+        "wo": stack(ks[3], (H * hd, D)),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = jnp.zeros((L, H * hd), dt)
+        attn["bk"] = jnp.zeros((L, K * hd), dt)
+        attn["bv"] = jnp.zeros((L, K * hd), dt)
+    if cfg.moe:
+        E = cfg.n_experts
+        mlp = {
+            "router": stack(ks[4], (D, E)),
+            "w1": dense_init(ks[5], (L, E, D, F), 1.0 / math.sqrt(D), dt),
+            "w3": dense_init(ks[6], (L, E, D, F), 1.0 / math.sqrt(D), dt),
+            "w2": dense_init(ks[7], (L, E, F, D), 1.0 / math.sqrt(F), dt),
+        }
+    else:
+        mlp = {
+            "w1": stack(ks[5], (D, F)),
+            "w3": stack(ks[6], (D, F)),
+            "w2": dense_init(ks[7], (L, F, D), 1.0 / math.sqrt(F), dt),
+        }
+    layers = {
+        "attn": attn, "mlp": mlp,
+        "ln1": jnp.zeros((L, D), dt) if cfg.zero_centered_norm
+        else jnp.ones((L, D), dt),
+        "ln2": jnp.zeros((L, D), dt) if cfg.zero_centered_norm
+        else jnp.ones((L, D), dt),
+    }
+    if cfg.post_norms:
+        layers["ln1_post"] = jnp.zeros((L, D), dt)
+        layers["ln2_post"] = jnp.zeros((L, D), dt)
+    return {
+        "embed": dense_init(ks[8], (V, D), 1.0, dt),
+        "head": dense_init(ks[9], (D, V), None, dt),
+        "final_norm": jnp.zeros((D,), dt) if cfg.zero_centered_norm
+        else jnp.ones((D,), dt),
+    } | {"layers": layers}
+
+
+# ====================================================== attention
+
+
+def _block_attention(q, k, v, cfg: TransformerConfig, q_start, kv_len,
+                     is_local, window_override=None):
+    """Online-softmax attention over kv blocks.
+
+    q: [B, Sq, K, G, hd]   (grouped heads)
+    k,v: [B, Skv, K, hd]
+    q_start: global position of q[0] (traced scalar ok)
+    kv_len: number of valid kv positions (traced ok)
+    is_local: traced bool — apply sliding window of cfg.window
+    Returns [B, Sq, K, G, hd].
+    """
+    B, Sq, Kh, G, hd = q.shape
+    Skv = k.shape[1]
+    bkv = min(cfg.block_kv, Skv)
+    n_blocks = (Skv + bkv - 1) // bkv
+    pad = n_blocks * bkv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blocks, bkv, Kh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, bkv, Kh, hd).transpose(1, 0, 2, 3, 4)
+
+    scale = 1.0 / math.sqrt(hd)
+    # q_start / kv_len may be scalars or per-batch [B] (serving slots)
+    q_start = jnp.broadcast_to(jnp.asarray(q_start), (B,))
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len), (B,))
+    q_pos = q_start[:, None] + jnp.arange(Sq)[None, :]        # [B, Sq]
+    window = jnp.where(is_local, cfg.window,
+                       jnp.asarray(1 << 30, jnp.int32))
+    if window_override is not None:
+        window = window_override
+
+    m0 = jnp.full((B, Kh, G, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Kh, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Kh, G, Sq, hd), jnp.float32)
+
+    def blk_update(m, l, acc, qv, kblk, vblk, qp, kv_start):
+        """One online-softmax update; qv [B, sq, K, G, hd]."""
+        kv_pos = kv_start + jnp.arange(kblk.shape[1])
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qv.astype(jnp.float32),
+                       kblk.astype(jnp.float32)) * scale
+        s = softcap(s, cfg.attn_softcap)
+        mask = (kv_pos[None, None, :] <= qp[:, :, None]) \
+            & (kv_pos[None, None, :] > qp[:, :, None] - window) \
+            & (kv_pos[None, None, :] < kv_len[:, None, None])
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        if cfg.attn_p_bf16:
+            p = p.astype(jnp.bfloat16)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vblk.astype(p.dtype))
+        acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    use_skip = (cfg.causal_block_skip and Sq == Skv and Sq > 1
+                and Sq % bkv == 0 and window_override is None)
+    if use_skip:
+        # static triangular pair-scan: only causal (qi, ki<=qi) block pairs
+        # are computed — halves attention flops AND score-matrix traffic.
+        bq = bkv
+        n_q = Sq // bq
+        qb = q.reshape(B, n_q, bq, Kh, G, hd).transpose(1, 0, 2, 3, 4, 5)
+        pairs = [(qi, ki) for qi in range(n_q) for ki in range(qi + 1)]
+        q_idx = jnp.asarray([p_[0] for p_ in pairs], jnp.int32)
+        kv_idx = jnp.asarray([p_[1] for p_ in pairs], jnp.int32)
+        first = jnp.asarray([p_[1] == 0 for p_ in pairs])
+        last = jnp.asarray([p_[0] == p_[1] for p_ in pairs])
+
+        mq0 = jnp.full((B, Kh, G, bq), -1e30, jnp.float32)
+        lq0 = jnp.zeros((B, Kh, G, bq), jnp.float32)
+        aq0 = jnp.zeros((B, Kh, G, bq, hd), jnp.float32)
+        out0 = jnp.zeros((n_q, B, Kh, G, bq, hd), jnp.float32)
+
+        def pair_body(carry, xs):
+            m, l, acc, out = carry
+            qi, ki, is_first, is_last = xs
+            m = jnp.where(is_first, mq0, m)
+            l = jnp.where(is_first, lq0, l)
+            acc = jnp.where(is_first, aq0, acc)
+            qv = jnp.take(qb, qi, axis=0)            # [B, bq, K, G, hd]
+            kblk = jnp.take(kb, ki, axis=0)
+            vblk = jnp.take(vb, ki, axis=0)
+            qp = q_start[:, None] + qi * bq + jnp.arange(bq)[None, :]
+            m2, l2, a2 = blk_update(m, l, acc, qv, kblk, vblk, qp, ki * bkv)
+            done = (a2 / jnp.maximum(l2, 1e-30)[..., None])
+            out = jax.lax.dynamic_update_index_in_dim(
+                out, jnp.where(is_last, done, jnp.take(out, qi, axis=0)),
+                qi, axis=0)
+            return (m2, l2, a2, out), None
+
+        body_fn = jax.checkpoint(pair_body) if cfg.attn_remat else pair_body
+        (_, _, _, out), _ = jax.lax.scan(
+            body_fn, (mq0, lq0, aq0, out0), (q_idx, kv_idx, first, last))
+        out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Kh, G, hd)
+        return out.astype(q.dtype)
+
+    def body(carry, blk):
+        m, l, acc, idx = carry
+        kblk, vblk = blk
+        m2, l2, a2 = blk_update(m, l, acc, q, kblk, vblk, q_pos, idx * bkv)
+        return (m2, l2, a2, idx + 1), None
+
+    body_fn = jax.checkpoint(body) if cfg.attn_remat else body
+    (m, l, acc, _), _ = jax.lax.scan(body_fn, (m0, l0, a0, jnp.int32(0)),
+                                     (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # [B,Sq,K,G,hd]
+
+
+def attention(x, lp, cfg: TransformerConfig, positions, is_local,
+              kv_cache=None, cache_index=None):
+    """Self-attention sublayer. Returns (out, new_kv) where new_kv is the
+    (k, v) for this layer (for cache writes) or None in pure training."""
+    B, S, D = x.shape
+    Kh, G, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    dt = cfg.dtype
+    wq, wk, wv = (lp["wq"].astype(dt), lp["wk"].astype(dt),
+                  lp["wv"].astype(dt))
+    q = x @ wq
+    k = x @ wk
+    v = x @ wv
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(dt)
+        k = k + lp["bk"].astype(dt)
+        v = v + lp["bv"].astype(dt)
+    q = q.reshape(B, S, Kh, G, hd)
+    k = k.reshape(B, S, Kh, hd)
+    v = v.reshape(B, S, Kh, hd)
+    q = shard_hint(q, "act_q")
+    k = shard_hint(k, "act_kv")
+    v = shard_hint(v, "act_kv")
+    sin, cos = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q.reshape(B, S, Kh * G, hd), sin, cos).reshape(
+        B, S, Kh, G, hd)
+    k = apply_rope(k, sin, cos)
+
+    if kv_cache is None:
+        q_start = positions[0, 0] if positions.ndim == 2 else positions[0]
+        out = _block_attention(q, k, v, cfg, q_start, kv_len=S,
+                               is_local=is_local)
+        new_kv = (k, v)
+    else:
+        ck, cv = kv_cache          # [B, Smax, Kh, hd]
+        t = cache_index            # scalar or [B]: tokens already cached
+        if jnp.ndim(t) == 0:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, t, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, t, 0, 0))
+        else:                      # per-slot positions (serving): S == 1
+            rows = jnp.arange(B)
+            ck = ck.at[rows, t].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[rows, t].set(v[:, 0].astype(cv.dtype))
+        out = _block_attention(q, ck, cv, cfg, q_start=t, kv_len=t + S,
+                               is_local=is_local)
+        new_kv = (ck, cv)
+    out = out.reshape(B, S, Kh * G * hd)
+    out = out @ lp["wo"].astype(dt)
+    return out, new_kv
+
+
+# ====================================================== MLP / MoE
+
+
+def dense_mlp(x, lp, cfg: TransformerConfig):
+    dt = cfg.dtype
+    h = jax.nn.silu(x @ lp["w1"].astype(dt)) * (x @ lp["w3"].astype(dt))
+    h = shard_hint(h, "act_ff")
+    return h @ lp["w2"].astype(dt)
+
+
+def moe_mlp(x, lp, cfg: TransformerConfig):
+    """Top-k token-choice MoE with static capacity (sort-based dispatch).
+    Returns (out, aux_loss)."""
+    B, S, D = x.shape
+    dt = cfg.dtype
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(int(cfg.capacity_factor * T * k / E), 8)
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ lp["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # [T, E]
+    topw, topi = jax.lax.top_k(probs, k)                         # [T, k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e mean_prob_e * mean_assign_e
+    assign = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], topi].set(1.0)
+    aux = E * jnp.sum(probs.mean(0) * assign.mean(0))
+
+    flat_e = topi.reshape(-1)                                    # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = topw.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, stok, sw = flat_e[order], flat_t[order], flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(E))                 # [E]
+    rank = jnp.arange(T * k) - starts[se]
+    keep = rank < C
+    dest = jnp.where(keep, se * C + rank, E * C)                 # E*C = drop
+
+    # Slot-indexed dispatch (perf iteration 2, EXPERIMENTS.md §Perf):
+    # instead of materializing [T*k, D] gathered rows (whose resharding
+    # all-gathered 51GB/layer), build small [E*C] slot->token/weight maps and
+    # gather straight from the [T, D] token array.
+    slot_token = jnp.zeros(E * C + 1, jnp.int32).at[dest].set(
+        stok.astype(jnp.int32))[:-1]                             # [E*C]
+    slot_w = jnp.zeros(E * C + 1, jnp.float32).at[dest].set(
+        sw * keep)[:-1]                                          # [E*C]
+    slot_valid = (slot_w > 0).astype(dt)
+
+    buf = xf[slot_token].astype(dt) * slot_valid[:, None]
+    buf = buf.reshape(E, C, D)
+    buf = shard_hint(buf, "moe_buf")
+
+    w1, w3, w2 = (lp["w1"].astype(dt), lp["w3"].astype(dt),
+                  lp["w2"].astype(dt))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1)) * jnp.einsum(
+        "ecd,edf->ecf", buf, w3)
+    h = shard_hint(h, "moe_ff")
+    eout = jnp.einsum("ecf,efd->ecd", h, w2).reshape(E * C, D)
+    eout = eout * slot_w.astype(dt)[:, None]
+    eout = shard_hint(eout, "moe_eout")
+
+    # Combine on the expert shards: scatter-add partial [T, D] outputs and
+    # let resharding to (dp) reduce them — avoids all-gathering [E*C, D].
+    out = jnp.zeros((T, D), dt).at[slot_token].add(
+        eout * slot_valid[:, None])
+    out = shard_hint(out, "moe_rows")
+    return out.reshape(B, S, D), aux
+
+
+# ====================================================== forward
+
+
+def _layer(x, lp, cfg: TransformerConfig, positions, is_local,
+           kv_cache=None, cache_index=None):
+    zc = cfg.zero_centered_norm
+    h = rms_norm(x, lp["ln1"].astype(jnp.float32), zero_centered=zc)
+    o, new_kv = attention(h, lp["attn"], cfg, positions, is_local,
+                          kv_cache, cache_index)
+    if cfg.post_norms:
+        o = rms_norm(o, lp["ln1_post"].astype(jnp.float32), zero_centered=zc)
+    x = x + o
+    h = rms_norm(x, lp["ln2"].astype(jnp.float32), zero_centered=zc)
+    if cfg.moe:
+        f, aux = moe_mlp(h, lp["mlp"], cfg)
+    else:
+        f, aux = dense_mlp(h, lp["mlp"], cfg), jnp.float32(0)
+    if cfg.post_norms:
+        f = rms_norm(f, lp["ln2_post"].astype(jnp.float32), zero_centered=zc)
+    x = shard_hint(x + f, "act_resid")
+    return x, new_kv, aux
+
+
+def forward(params, tokens, cfg: TransformerConfig,
+            kv_caches=None, cache_index=None):
+    """tokens [B, S] -> (logits [B, S, V], new_kv_caches or None, aux).
+
+    kv_caches: optional dict {"k": [L,B,Smax,K,hd], "v": ...}; when given the
+    step writes at cache_index and attends over the cache (prefill/decode).
+    """
+    B, S = tokens.shape
+    dt = cfg.dtype
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    x = shard_hint(x, "act_resid")
+    if cache_index is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    else:
+        off = (cache_index[:, None] if jnp.ndim(cache_index) == 1
+               else cache_index)
+        positions = off + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    flags = cfg.is_local_flags()
+
+    def body(carry, layer_in):
+        x = carry
+        if kv_caches is None:
+            lp, flag = layer_in
+            x, _, aux = _layer(x, lp, cfg, positions, flag)
+            return x, aux
+        lp, flag, ck, cv = layer_in
+        x, (nk, nv), aux = _layer(x, lp, cfg, positions, flag,
+                                  (ck, cv), cache_index)
+        return x, (aux, nk, nv)
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and kv_caches is None) \
+        else body
+    if kv_caches is None:
+        x, auxs = jax.lax.scan(body_fn, x, (params["layers"], flags))
+        new_caches = None
+        aux = auxs.mean()
+    else:
+        x, (auxs, nk, nv) = jax.lax.scan(
+            body_fn, x, (params["layers"], flags,
+                         kv_caches["k"], kv_caches["v"]))
+        new_caches = {"k": nk, "v": nv}
+        aux = auxs.mean()
+    x = rms_norm(x, params["final_norm"].astype(jnp.float32),
+                 zero_centered=cfg.zero_centered_norm)
+    logits = x @ params["head"].astype(dt)
+    logits = softcap(logits, cfg.final_softcap)
+    logits = shard_hint(logits, "logits")
+    return logits, new_caches, aux
+
+
+# ====================================================== entry points
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    logits, _, aux = forward(params, batch["tokens"], cfg)
+    loss = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+    return loss + cfg.aux_loss_weight * aux, {"ce": loss, "aux": aux}
+
+
+def make_train_step(cfg: TransformerConfig, adam_cfg):
+    from repro.train import optimizer as opt
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg)
+        params, opt_state, om = opt.update(adam_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **parts, **om}
+
+    return train_step
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int,
+                  dtype=None) -> dict:
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def prefill(params, tokens, cfg: TransformerConfig, kv_caches):
+    """Process the prompt, filling the cache. Returns (last_logits, caches)."""
+    logits, caches, _ = forward(params, tokens, cfg, kv_caches,
+                                cache_index=jnp.int32(0))
+    return logits[:, -1], caches
+
+
+def decode_step(params, tokens, cfg: TransformerConfig, kv_caches, t):
+    """One decode step: tokens [B,1] at position t. Returns (logits [B,V],
+    new caches)."""
+    logits, caches, _ = forward(params, tokens, cfg, kv_caches,
+                                cache_index=t)
+    return logits[:, -1], caches
+
+
+def decode_step_multi(params, tokens, cfg: TransformerConfig, kv_caches,
+                      pos):
+    """Continuous-batching decode: tokens [B,1] with per-slot positions
+    pos [B] (each slot at a different point in its sequence)."""
+    logits, caches, _ = forward(params, tokens, cfg, kv_caches,
+                                cache_index=pos)
+    return logits[:, -1], caches

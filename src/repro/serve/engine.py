@@ -1,0 +1,111 @@
+"""Batched LM serving engine: continuous-batching-lite over a fixed slot pool.
+
+A fixed number of slots share one KV cache ([L, slots, S_max, K, hd] — the
+decode_32k dry-run shape). Requests occupy free slots, prefill writes their
+prompt into the slot's cache region, and one fused decode step advances every
+active slot per tick. Finished slots (EOS or max_tokens) free immediately and
+are refilled from the queue — the vLLM-style scheduling loop adapted to fixed
+TPU shapes (no paging: slot-granular allocation; paged-KV is noted as the
+production extension in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # int32 [prompt_len]
+    max_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: tfm.TransformerConfig, params, n_slots: int = 4,
+                 max_len: int = 512, eos_id: int = 0, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos = eos_id
+        self.caches = tfm.init_kv_cache(cfg, n_slots, max_len)
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, dtype=np.int32)
+        self.queue: deque[Request] = deque()
+        self.ticks = 0
+
+        # one-slot prefill writes into the shared cache at slot `slot`
+        def _prefill(params, caches, tokens, slot):
+            logits, new_caches, _ = tfm.forward(
+                params, tokens, self.cfg,
+                kv_caches=jax.tree.map(
+                    lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, 1),
+                    caches),
+                cache_index=jnp.int32(0))
+            caches = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+                    c, n.astype(c.dtype), slot, 1), caches, new_caches)
+            return logits[:, -1], caches
+
+        def _decode(params, tokens, caches, pos):
+            return tfm.decode_step_multi(params, tokens, self.cfg, caches,
+                                         pos)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    # --------------------------------------------------------------- public
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 1000) -> list[Request]:
+        finished = []
+        while (self.queue or any(self.slot_req)) and self.ticks < max_ticks:
+            self._admit()
+            self._step(finished)
+            self.ticks += 1
+        return finished
+
+    # -------------------------------------------------------------- private
+    def _admit(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                logits, self.caches = self._prefill(
+                    self.params, self.caches, toks, jnp.int32(s))
+                first = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(first)
+                self.slot_req[s] = req
+                self.slot_pos[s] = len(req.prompt)
+
+    def _step(self, finished: list):
+        active = [s for s in range(self.n_slots) if self.slot_req[s]]
+        if not active:
+            return
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        for s in active:
+            tokens[s, 0] = self.slot_req[s].out_tokens[-1]
+        pos = jnp.asarray(self.slot_pos)
+        logits, self.caches = self._decode(self.params, jnp.asarray(tokens),
+                                           self.caches, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s in active:
+            req = self.slot_req[s]
+            tok = int(nxt[s])
+            req.out_tokens.append(tok)
+            self.slot_pos[s] += 1
+            if (tok == self.eos or len(req.out_tokens) >= req.max_tokens
+                    or self.slot_pos[s] >= self.max_len - 1):
+                req.done = True
+                finished.append(req)
+                self.slot_req[s] = None

@@ -1,0 +1,32 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+Checkpoints are mesh-independent host pytrees (train/checkpoint.py), so
+elasticity is: load -> build new mesh -> ``jax.device_put`` each leaf with the
+new NamedSharding -> re-lower the step. ``reshard`` also handles live state
+(device-to-device) by round-tripping through host when layouts are
+incompatible. Tested by shrinking/growing the host-device mesh in
+tests/test_train_substrate.py.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def reshard(state, shardings):
+    """Place (host or device) pytree onto new shardings leaf-by-leaf."""
+    def place(x, s):
+        arr = np.asarray(x) if not isinstance(x, np.ndarray) else x
+        return jax.device_put(arr, s)
+    return jax.tree.map(place, state, shardings)
+
+
+def elastic_restart(ckpt, like, new_mesh, sharding_fn):
+    """Restore latest checkpoint and place it on ``new_mesh``.
+
+    sharding_fn(mesh) -> sharding pytree matching ``like``.
+    Returns (step, sharded_state) or (None, None)."""
+    step, host_state = ckpt.restore_latest(like)
+    if step is None:
+        return None, None
+    return step, reshard(host_state, sharding_fn(new_mesh))

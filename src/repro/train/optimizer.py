@@ -1,0 +1,115 @@
+"""Optimizers and distributed-training tricks (pure pytree functions).
+
+- AdamW with decoupled weight decay and global-norm clipping.
+- Cosine / linear-warmup schedules.
+- Optional int8 error-feedback gradient compression: gradients are quantized
+  per-leaf before the data-parallel all-reduce and the quantization error is
+  carried to the next step (1-bit/8-bit SGD family). On the mesh this shrinks
+  DP all-reduce bytes 4x; on CPU we simulate the quantize/dequantize exactly.
+- ZeRO-1 style sharding is applied by the caller via sharding specs on the
+  optimizer state pytree (see launch/shardings.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+    ef_error: Any  # error-feedback residual (zeros when compression off)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    compress_grads: bool = False   # int8 error-feedback compression
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(cfg: AdamWConfig, params) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    ef = (jax.tree.map(zeros, params) if cfg.compress_grads
+          else jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params))
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     mu=jax.tree.map(zeros, params),
+                     nu=jax.tree.map(zeros, params),
+                     ef_error=ef)
+
+
+def _quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(g: jax.Array, err: jax.Array):
+    """Error-feedback int8 round trip: returns (g_hat, new_err). The int8
+    tensor is what crosses the DP all-reduce on a real mesh."""
+    g_comp = g + err
+    q, scale = _quantize_int8(g_comp)
+    g_hat = q.astype(jnp.float32) * scale
+    return g_hat, g_comp - g_hat
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamState, params):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_decompress, grads, state.ef_error)
+        grads = jax.tree.map(lambda _, p: p[0], state.ef_error, pairs)
+        new_err = jax.tree.map(lambda _, p: p[1], state.ef_error, pairs)
+    else:
+        new_err = state.ef_error
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * (
+            p.astype(jnp.float32))
+        return (p - lr * delta.astype(p.dtype)).astype(p.dtype), m, v
+
+    triples = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda _, t: t[0], params, triples)
+    mu = jax.tree.map(lambda _, t: t[1], params, triples)
+    nu = jax.tree.map(lambda _, t: t[2], params, triples)
+    return new_params, AdamState(step, mu, nu, new_err), {
+        "grad_norm": gnorm, "lr": lr}

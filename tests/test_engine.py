@@ -1,0 +1,145 @@
+"""Engine correctness: every plan shape vs the brute-force oracle."""
+import numpy as np
+import pytest
+
+from repro.core.cbo import all_left_deep_plans
+from repro.core.parser import parse_cypher
+from repro.core.physical import ExpandNode, JoinNode, ScanNode
+from repro.core.type_inference import infer_types
+from repro.graphdb.engine import Engine
+from repro.graphdb.ref import count_matches
+from repro.graphdb import vecops
+
+
+def _count(store, q, plan=None, params=None, **kw):
+    lp = parse_cypher(q, store.schema, params)
+    pat = infer_types(lp.pattern(), store.schema)
+    lp.replace_pattern(pat)
+    tbl, stats = Engine(store, **kw).run(lp, plan)
+    first = tbl.cols[list(tbl.cols)[0]]
+    return int(first[0]), pat, lp
+
+
+QUERIES = [
+    "MATCH (v1)-[e1]->(v2), (v1)-[e2]->(v3:PLACE), (v2)-[e3]->(v3) "
+    "RETURN count(v1) AS c",
+    "MATCH (a:PERSON)-[:KNOWS]-(b:PERSON) RETURN count(a) AS c",
+    "MATCH (a:PERSON)-[:PURCHASES]->(p:PRODUCT)<-[:PURCHASES]-(b:PERSON), "
+    "(a)-[:KNOWS]->(b) RETURN count(a) AS c",
+    "MATCH (p1:PERSON)-[k:KNOWS*3]-(p2:PERSON) RETURN count(p1) AS c",
+]
+
+
+@pytest.mark.parametrize("q", QUERIES)
+def test_counts_match_oracle(tiny_store, q):
+    got, pat, _ = _count(tiny_store, q)
+    assert got == count_matches(tiny_store, pat)
+
+
+def test_all_left_deep_plans_agree(tiny_store):
+    q = QUERIES[0]
+    lp = parse_cypher(q, tiny_store.schema)
+    pat = infer_types(lp.pattern(), tiny_store.schema)
+    lp.replace_pattern(pat)
+    ref = count_matches(tiny_store, pat)
+    eng = Engine(tiny_store)
+    for plan in all_left_deep_plans(pat):
+        tbl, _ = eng.run(lp, plan)
+        assert int(tbl.cols["c"][0]) == ref
+
+
+def test_join_plan_with_shared_edge(tiny_store):
+    q = QUERIES[0]
+    lp = parse_cypher(q, tiny_store.schema)
+    pat = infer_types(lp.pattern(), tiny_store.schema)
+    lp.replace_pattern(pat)
+    e1, e2, e3 = pat.edges
+    left = ExpandNode(ScanNode("v1"), "v2", [e1])
+    right = ExpandNode(ExpandNode(ScanNode("v1"), "v3", [e2]), "v2", [e3])
+    jp = JoinNode(left, right, ("v1", "v2"))
+    tbl, _ = Engine(tiny_store).run(lp, jp)
+    assert int(tbl.cols["c"][0]) == count_matches(tiny_store, pat)
+
+
+def test_rbo_modes_preserve_results(tiny_store):
+    q = ("MATCH (a:PERSON)-[:PURCHASES]->(p:PRODUCT) "
+         "WHERE p.name = 'prod3' RETURN count(a) AS c")
+    base, _, _ = _count(tiny_store, q)
+    unfused, _, _ = _count(tiny_store, q, fuse_expand=False)
+    untrimmed, _, _ = _count(tiny_store, q, trim_fields=False)
+    assert base == unfused == untrimmed
+
+
+def test_relational_tail(tiny_store):
+    q = ("MATCH (a:PERSON)-[:PURCHASES]->(p:PRODUCT) "
+         "RETURN p, count(a) AS c ORDER BY c DESC LIMIT 5")
+    lp = parse_cypher(q, tiny_store.schema)
+    pat = infer_types(lp.pattern(), tiny_store.schema)
+    lp.replace_pattern(pat)
+    tbl, _ = Engine(tiny_store).run(lp)
+    assert tbl.nrows <= 5
+    c = tbl.cols["c"]
+    assert all(c[i] >= c[i + 1] for i in range(tbl.nrows - 1))
+
+
+def test_distinct_project(tiny_store):
+    q = "MATCH (a:PERSON)-[:PURCHASES]->(p:PRODUCT) RETURN DISTINCT p"
+    lp = parse_cypher(q, tiny_store.schema)
+    pat = infer_types(lp.pattern(), tiny_store.schema)
+    lp.replace_pattern(pat)
+    tbl, _ = Engine(tiny_store).run(lp)
+    vals = tbl.cols["p"]
+    assert len(np.unique(vals)) == tbl.nrows
+
+
+def test_row_cap_raises(tiny_store):
+    q = QUERIES[3]
+    lp = parse_cypher(q, tiny_store.schema)
+    pat = infer_types(lp.pattern(), tiny_store.schema)
+    lp.replace_pattern(pat)
+    with pytest.raises(RuntimeError):
+        Engine(tiny_store, max_rows=10).run(lp)
+
+
+# --------------------------------------------------------------- primitives
+
+def test_bounded_binary_search_matches_linear():
+    rng = np.random.default_rng(0)
+    indices = np.sort(rng.integers(0, 500, size=400))
+    lo = rng.integers(0, 380, size=200)
+    hi = np.minimum(lo + rng.integers(0, 20, size=200), 400)
+    targets = rng.integers(0, 500, size=200)
+    found, pos = vecops.bounded_binary_search(indices, lo, hi, targets)
+    for i in range(200):
+        seg = indices[lo[i]:hi[i]]
+        assert found[i] == (targets[i] in seg)
+        if found[i]:
+            assert indices[pos[i]] == targets[i]
+            assert lo[i] <= pos[i] < hi[i]
+
+
+def test_equi_join_matches_bruteforce():
+    rng = np.random.default_rng(1)
+    l = rng.integers(0, 20, size=80)
+    r = rng.integers(0, 20, size=60)
+    li, ri = vecops.equi_join(l, r)
+    got = sorted(zip(li.tolist(), ri.tolist()))
+    want = sorted((i, j) for i in range(80) for j in range(60)
+                  if l[i] == r[j])
+    assert got == want
+
+
+def test_jaxops_parity_with_vecops():
+    import jax.numpy as jnp
+    from repro.graphdb import jaxops
+    rng = np.random.default_rng(2)
+    indices = np.sort(rng.integers(0, 300, size=256))
+    lo = rng.integers(0, 200, size=64)
+    hi = np.minimum(lo + rng.integers(0, 30, size=64), 256)
+    targets = rng.integers(0, 300, size=64)
+    f_np, p_np = vecops.bounded_binary_search(indices, lo, hi, targets)
+    f_j, p_j = jaxops.bounded_binary_search(
+        jnp.asarray(indices), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(targets))
+    np.testing.assert_array_equal(f_np, np.asarray(f_j))
+    np.testing.assert_array_equal(p_np[f_np], np.asarray(p_j)[f_np])

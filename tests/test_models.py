@@ -1,0 +1,215 @@
+"""Model-level behaviour: transformer family, GNNs, recsys."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import recsys
+from repro.models import transformer as tfm
+from repro.models.gnn import equiformer_v2 as eq2
+from repro.models.gnn import gat, nequip, schnet
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import AdamWConfig
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return tfm.TransformerConfig(name="tiny", n_layers=3, d_model=64,
+                                 n_heads=4, n_kv_heads=2, d_ff=128,
+                                 vocab_size=97, block_q=8, block_kv=8,
+                                 dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_cfg):
+    return tfm.init_params(tiny_cfg, jax.random.PRNGKey(0))
+
+
+def test_causality(tiny_cfg, tiny_params):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 97)
+    l1, _, _ = tfm.forward(tiny_params, toks, tiny_cfg)
+    l2, _, _ = tfm.forward(tiny_params, toks.at[:, 10:].set(0), tiny_cfg)
+    np.testing.assert_allclose(np.asarray(l1[:, :10]), np.asarray(l2[:, :10]),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_prefill_decode_parity(tiny_cfg, tiny_params):
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, 97)
+    caches = tfm.init_kv_cache(tiny_cfg, 2, 24)
+    last, caches = tfm.prefill(tiny_params, toks[:, :8], tiny_cfg, caches)
+    ref, _, _ = tfm.forward(tiny_params, toks[:, :8], tiny_cfg)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(ref[:, -1]),
+                               rtol=2e-3, atol=2e-4)
+    lg, caches = tfm.decode_step(tiny_params, toks[:, 8:9], tiny_cfg, caches,
+                                 jnp.int32(8))
+    full, _, _ = tfm.forward(tiny_params, toks[:, :9], tiny_cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_param_count_analytic(tiny_cfg, tiny_params):
+    from repro.models.common import count_params
+    assert count_params(tiny_params) == tiny_cfg.param_count()
+
+
+def test_train_loss_decreases(tiny_cfg, tiny_params):
+    acfg = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=50)
+    step = jax.jit(tfm.make_train_step(tiny_cfg, acfg))
+    ost = opt_mod.init(acfg, tiny_params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(3), (2, 16),
+                                          0, 97)}
+    p = tiny_params
+    losses = []
+    for _ in range(8):
+        p, ost, m = step(p, ost, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_moe_forward_and_train():
+    cfg = tfm.TransformerConfig(name="m", n_layers=2, d_model=32, n_heads=4,
+                                n_kv_heads=4, d_ff=48, vocab_size=53,
+                                moe=True, n_experts=8, top_k=2, block_q=8,
+                                block_kv=8, dtype=jnp.float32)
+    p = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 53)
+    logits, _, aux = tfm.forward(p, toks, cfg)
+    assert logits.shape == (2, 16, 53)
+    assert float(aux) > 0.0   # load-balance loss present
+    assert not bool(jnp.isnan(logits).any())
+    assert cfg.active_param_count() < cfg.param_count()
+
+
+def test_gemma2_features():
+    cfg = tfm.TransformerConfig(name="gemma-t", n_layers=4, d_model=32,
+                                n_heads=4, n_kv_heads=2, d_ff=64,
+                                vocab_size=53, layer_pattern="local_global",
+                                window=4, attn_softcap=50.0,
+                                final_softcap=30.0, post_norms=True,
+                                zero_centered_norm=True, block_q=8,
+                                block_kv=8, dtype=jnp.float32)
+    p = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, 53)
+    logits, _, _ = tfm.forward(p, toks, cfg)
+    assert float(jnp.abs(logits).max()) <= 30.0 + 1e-3   # final softcap
+    assert bool(cfg.is_local_flags()[0]) and not bool(cfg.is_local_flags()[1])
+
+
+def test_sliding_window_blocks_long_range():
+    """With window w, position t must not see tokens < t - w + 1."""
+    cfg = tfm.TransformerConfig(name="gemma-t", n_layers=2, d_model=32,
+                                n_heads=4, n_kv_heads=2, d_ff=64,
+                                vocab_size=53, layer_pattern="local_global",
+                                window=4, block_q=8, block_kv=8,
+                                dtype=jnp.float32)
+    # make ALL layers local to test masking
+    cfg2 = tfm.TransformerConfig(**{**cfg.__dict__, "layer_pattern":
+                                    "local_global"})
+    p = tfm.init_params(cfg2, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, 53)
+    l1, _, _ = tfm.forward(p, toks, cfg2)
+    # change token 0; logits at position >= 5 on layer-0-local-only model
+    # may still differ through the global layer; so compare a pure-local
+    # single-layer config instead
+    cfg1 = tfm.TransformerConfig(name="gemma-t", n_layers=1, d_model=32,
+                                 n_heads=4, n_kv_heads=2, d_ff=64,
+                                 vocab_size=53, layer_pattern="local_global",
+                                 window=4, block_q=8, block_kv=8,
+                                 dtype=jnp.float32)
+    p1 = tfm.init_params(cfg1, jax.random.PRNGKey(0))
+    a, _, _ = tfm.forward(p1, toks, cfg1)
+    b, _, _ = tfm.forward(p1, toks.at[:, 0].set(1), cfg1)
+    np.testing.assert_allclose(np.asarray(a[:, 8:]), np.asarray(b[:, 8:]),
+                               rtol=2e-4, atol=2e-5)
+
+
+# --------------------------------------------------------------------- GNNs
+
+@pytest.fixture(scope="module")
+def geo_batch():
+    rng = np.random.default_rng(0)
+    N, E = 30, 64
+    pos = jnp.asarray(rng.normal(size=(N, 3)) * 2)
+    edges = jnp.asarray(rng.integers(0, N, size=(2, E)))
+    edges = edges.at[:, -4:].set(-1)
+    return {
+        "atom_type": jnp.asarray(rng.integers(0, 5, size=N)),
+        "positions": pos, "edges": edges,
+        "graph_ids": jnp.zeros(N, jnp.int32),
+        "energy": jnp.asarray([1.0]),
+    }
+
+
+def _rotation(seed=3):
+    rng = np.random.default_rng(seed)
+    R = np.linalg.qr(rng.normal(size=(3, 3)))[0]
+    if np.linalg.det(R) < 0:
+        R[:, 0] *= -1
+    return jnp.asarray(R)
+
+
+@pytest.mark.parametrize("mod,cfg", [
+    (schnet, schnet.SchNetConfig(n_rbf=16, d_hidden=16)),
+    (nequip, nequip.NequIPConfig(n_layers=2, d_hidden=8)),
+    (eq2, eq2.EquiformerV2Config(n_layers=1, d_hidden=8, l_max=3, n_heads=2,
+                                 n_rbf=8)),
+])
+def test_rotation_invariance(mod, cfg, geo_batch):
+    p = mod.init_params(cfg, jax.random.PRNGKey(0))
+    R = _rotation()
+    e1 = mod.forward(p, geo_batch, cfg)
+    e2 = mod.forward(p, dict(geo_batch,
+                             positions=geo_batch["positions"] @ R.T), cfg)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_translation_invariance(geo_batch):
+    cfg = nequip.NequIPConfig(n_layers=2, d_hidden=8)
+    p = nequip.init_params(cfg, jax.random.PRNGKey(0))
+    e1 = nequip.forward(p, geo_batch, cfg)
+    e2 = nequip.forward(p, dict(geo_batch,
+                                positions=geo_batch["positions"] + 5.0), cfg)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_gat_padding_immune():
+    """Extra -1 padded edges must not change outputs."""
+    rng = np.random.default_rng(0)
+    cfg = gat.GATConfig(d_feat=8, n_classes=3)
+    p = gat.init_params(cfg, jax.random.PRNGKey(0))
+    feat = jnp.asarray(rng.normal(size=(10, 8)).astype(np.float32))
+    edges = jnp.asarray(rng.integers(0, 10, size=(2, 20)).astype(np.int32))
+    b1 = {"node_feat": feat, "edges": edges}
+    b2 = {"node_feat": feat,
+          "edges": jnp.concatenate(
+              [edges, jnp.full((2, 13), -1, jnp.int32)], axis=1)}
+    np.testing.assert_allclose(np.asarray(gat.forward(p, b1, cfg)),
+                               np.asarray(gat.forward(p, b2, cfg)),
+                               rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------------------------- recsys
+
+def test_recsys_train_and_retrieval():
+    cfg = recsys.WideDeepConfig(vocab_sizes=tuple([500] * 40),
+                                wide_vocab=2000, n_items=1000, item_dim=16,
+                                mlp=(32, 16))
+    p = recsys.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v)
+             for k, v in recsys.synthetic_batch(cfg, 128).items()}
+    acfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=100,
+                       weight_decay=0.0)
+    step = jax.jit(recsys.make_train_step(cfg, acfg))
+    ost = opt_mod.init(acfg, p)
+    losses = []
+    for _ in range(15):
+        p, ost, m = step(p, ost, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    rb = {"sparse_ids": batch["sparse_ids"][:1], "dense": batch["dense"][:1],
+          "candidate_ids": jnp.arange(1000)}
+    scores = recsys.retrieval_scores(p, rb, cfg)
+    assert scores.shape == (1000,)
+    assert not bool(jnp.isnan(scores).any())

@@ -1,0 +1,111 @@
+"""End-to-end behaviour of the paper's system: full GOpt pipeline
+(parse -> infer -> RBO -> CBO -> execute) on both frontends, plus the
+roofline tooling sanity checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ir
+from repro.core.gopt import GOpt
+from repro.core.gremlin import g
+from repro.graphdb.ref import count_matches
+
+
+@pytest.fixture(scope="module")
+def gopt_tiny(tiny_store):
+    return GOpt(tiny_store)
+
+
+def test_pipeline_counts_match_oracle(gopt_tiny, tiny_store):
+    q = ("MATCH (v1)-[e1]->(v2), (v1)-[e2]->(v3:PLACE), (v2)-[e3]->(v3) "
+         "WHERE v3.name = 'China' RETURN count(v1) AS c")
+    opt = gopt_tiny.optimize(q)
+    tbl, stats = gopt_tiny.execute(opt)
+    code = tiny_store.encode_str("name", "China")
+
+    def vf(alias, ids):
+        if alias != "v3":
+            return np.ones(ids.shape, bool)
+        return tiny_store.vertex_prop(ids, "name") == code
+
+    assert int(tbl.cols["c"][0]) == count_matches(
+        tiny_store, opt.logical.pattern(), vf)
+    assert stats.rows_produced > 0
+
+
+def test_cypher_gremlin_same_counts(gopt_tiny, tiny_store):
+    qc = ("MATCH (a:PERSON)-[:PURCHASES]->(p:PRODUCT) "
+          "RETURN count(a) AS c")
+    t1, _ = gopt_tiny.execute(gopt_tiny.optimize(qc))
+    plan = g(tiny_store.schema).V("PERSON").as_("a").out("PURCHASES") \
+        .as_("p", types=["PRODUCT"]).count("a")
+    t2, _ = gopt_tiny.execute(gopt_tiny.optimize(plan))
+    assert int(t1.cols["c"][0]) == int(t2.cols["count"][0])
+
+
+def test_invalid_query_returns_empty(gopt_tiny):
+    q = "MATCH (a:PRODUCT)-[:KNOWS]->(b) RETURN count(a)"
+    opt = gopt_tiny.optimize(q)
+    assert opt.invalid
+    tbl, _ = gopt_tiny.execute(opt)
+    assert tbl.nrows == 0
+
+
+def test_ablation_switches_preserve_semantics(gopt_tiny, tiny_store):
+    q = ("MATCH (v1)-[e1]->(v2), (v1)-[e2]->(v3:PLACE), (v2)-[e3]->(v3) "
+         "WHERE v3.name = 'China' RETURN count(v1) AS c")
+    ref = None
+    for ti in (True, False):
+        for rbo in (True, False):
+            for cbo in (True, False):
+                opt = gopt_tiny.optimize(q, type_inference=ti, rbo=rbo,
+                                         cbo=cbo)
+                tbl, _ = gopt_tiny.execute(opt)
+                c = int(tbl.cols["c"][0])
+                if ref is None:
+                    ref = c
+                assert c == ref, (ti, rbo, cbo)
+
+
+def test_money_mule_pipeline(gopt_small):
+    store = gopt_small.store
+    rng = np.random.default_rng(5)
+    n = store.v_count["PERSON"]
+    S1 = sorted(rng.choice(n, 4, replace=False).tolist())
+    S2 = sorted(rng.choice(n, 100, replace=False).tolist())
+    q = ("MATCH (p1:PERSON)-[k:KNOWS*3]-(p2:PERSON) "
+         "WHERE p1.id IN $S1 and p2.id IN $S2 RETURN count(p1) AS c")
+    opt = gopt_small.optimize(q, {"S1": S1, "S2": S2})
+    tbl, stats = gopt_small.execute(opt)
+    assert tbl.nrows == 1
+    assert stats.rows_produced > 0
+
+
+# ---------------------------------------------------------- roofline parsing
+
+def test_roofline_scan_aware_flops():
+    from repro.launch.roofline import analyze_hlo
+
+    def step(x, ws):
+        def body(c, w):
+            return c @ w, None
+
+        def loss(w):
+            y, _ = jax.lax.scan(body, x, w)
+            return y.sum()
+        return jax.grad(loss)(ws)
+
+    x = jnp.ones((64, 64), jnp.float32)
+    ws = jnp.ones((5, 64, 64), jnp.float32)
+    c = jax.jit(step).lower(x, ws).compile()
+    terms = analyze_hlo(c.as_text())
+    expect = 15 * 2 * 64 ** 3       # fwd 5 + bwd 10 dots, trip-count aware
+    assert terms.flops == pytest.approx(expect, rel=0.05)
+
+
+def test_roofline_shape_bytes():
+    from repro.launch.roofline import shape_bytes
+    assert shape_bytes("bf16[16,256,1024]{2,1,0}") == 16 * 256 * 1024 * 2
+    assert shape_bytes("(f32[8], s32[2,2])") == 32 + 16
+    assert shape_bytes("pred[]") == 1

@@ -1,0 +1,122 @@
+"""Type inference (Algorithm 1): paper examples + hypothesis properties."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.parser import parse_cypher
+from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
+from repro.core.schema import EdgeTriple, GraphSchema, ldbc_schema, \
+    motivating_schema
+from repro.core.type_inference import INVALID, enumerate_basic_assignments, \
+    infer_types
+
+
+def test_motivating_example_fig4():
+    """Paper Fig. 4: v1 -> PERSON, v2 -> PERSON|PRODUCT, v3 stays PLACE."""
+    sch = motivating_schema()
+    q = ("MATCH (v1)-[e1]->(v2), (v1)-[e2]->(v3:PLACE), (v2)-[e3]->(v3) "
+         "RETURN count(v1)")
+    pat = parse_cypher(q, sch).pattern()
+    inf = infer_types(pat, sch)
+    assert inf != INVALID
+    assert inf.vertices["v1"].types == frozenset({"PERSON"})
+    assert inf.vertices["v2"].types == frozenset({"PERSON", "PRODUCT"})
+    assert inf.vertices["v3"].types == frozenset({"PLACE"})
+
+
+def test_invalid_detection_fig1d():
+    """Fig. 1(d): PRODUCT cannot connect to PLACE via a v2=PLACE binding."""
+    sch = motivating_schema()
+    q = "MATCH (a:PRODUCT)-[:KNOWS]->(b) RETURN count(a)"
+    assert infer_types(parse_cypher(q, sch).pattern(), sch) == INVALID
+
+
+def test_ldbc_qt1_chain():
+    sch = ldbc_schema()
+    q = ("Match (p)<-[:HASCREATOR]-(m)<-[:CONTAINEROF]-(f) "
+         "Return count(p)")
+    inf = infer_types(parse_cypher(q, sch).pattern(), sch)
+    assert inf.vertices["p"].types == frozenset({"PERSON"})
+    assert inf.vertices["m"].types == frozenset({"POST"})
+    assert inf.vertices["f"].types == frozenset({"FORUM"})
+
+
+def test_original_pattern_not_mutated():
+    sch = motivating_schema()
+    pat = parse_cypher("MATCH (a)-[:KNOWS]->(b) RETURN count(a)",
+                       sch).pattern()
+    before = {k: v.types for k, v in pat.vertices.items()}
+    infer_types(pat, sch)
+    assert {k: v.types for k, v in pat.vertices.items()} == before
+
+
+# ----------------------------------------------------------- property tests
+
+@st.composite
+def schema_and_pattern(draw):
+    n_types = draw(st.integers(2, 5))
+    vtypes = tuple(f"T{i}" for i in range(n_types))
+    n_triples = draw(st.integers(1, 7))
+    triples = []
+    for i in range(n_triples):
+        s = draw(st.sampled_from(vtypes))
+        d = draw(st.sampled_from(vtypes))
+        lab = f"L{draw(st.integers(0, 3))}"
+        triples.append(EdgeTriple(s, lab, d))
+    schema = GraphSchema(vtypes, tuple(set(triples)))
+    # random connected pattern on 2-4 vertices
+    n_v = draw(st.integers(2, 4))
+    pat = Pattern()
+    for i in range(n_v):
+        # random initial constraint: subset of vertex types (non-empty)
+        sub = draw(st.sets(st.sampled_from(vtypes), min_size=1))
+        pat.add_vertex(f"v{i}", frozenset(sub))
+    for i in range(1, n_v):
+        j = draw(st.integers(0, i - 1))
+        direction = draw(st.sampled_from([OUT, IN, BOTH]))
+        labs = draw(st.sets(st.sampled_from(
+            sorted({t.label for t in schema.edge_triples})), min_size=1))
+        pat.add_edge(PatternEdge(f"e{i}", f"v{j}", f"v{i}",
+                                 schema.triples_with_label(frozenset(labs)),
+                                 direction))
+    return schema, pat
+
+
+@settings(max_examples=150, deadline=None)
+@given(schema_and_pattern())
+def test_inference_sound_and_invalid_exact(sp):
+    """Soundness: inference never removes a type used by some valid basic
+    assignment; INVALID iff no valid assignment exists (on these sizes the
+    fixpoint is exact for trees; soundness holds in general)."""
+    schema, pat = sp
+    if any(not e.triples for e in pat.edges):
+        return
+    inf = infer_types(pat, schema)
+    assigns = enumerate_basic_assignments(pat, schema)
+    if inf == INVALID:
+        assert assigns == []
+        return
+    used = {a: set() for a in pat.vertices}
+    for asg in assigns:
+        for a, t in asg.items():
+            used[a].add(t)
+    for a in pat.vertices:
+        assert used[a] <= set(inf.vertices[a].types), \
+            f"inference dropped valid type at {a}"
+    # tree patterns (our generator builds trees): arc consistency is exact
+    for a in pat.vertices:
+        if assigns:
+            assert set(inf.vertices[a].types) == used[a]
+
+
+@settings(max_examples=60, deadline=None)
+@given(schema_and_pattern())
+def test_inference_idempotent(sp):
+    schema, pat = sp
+    inf = infer_types(pat, schema)
+    if inf == INVALID:
+        return
+    again = infer_types(inf, schema)
+    assert again != INVALID
+    for a in pat.vertices:
+        assert again.vertices[a].types == inf.vertices[a].types
