@@ -1,18 +1,123 @@
-"""Baseline vs optimized sweep comparison (§Perf closing table).
+"""Performance comparisons.
 
-    PYTHONPATH=src python -m benchmarks.perf_compare \
-        dryrun_results.json dryrun_results_optimized.json
+Two modes:
+
+1. Backend comparison (PhysicalSpec layer): run the LDBC query set through
+   every registered execution backend, check row-for-row result parity, and
+   emit per-query timings to ``BENCH_backends.json``:
+
+       PYTHONPATH=src python -m benchmarks.perf_compare --backends \
+           [--sf 0.2] [--queries ic,cbo] [--repeats 3] [--out ...]
+
+2. Legacy sweep comparison (§Perf closing table) of two dry-run result files:
+
+       PYTHONPATH=src python -m benchmarks.perf_compare \
+           dryrun_results.json dryrun_results_optimized.json
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
+import time
+
+ROW_CAP = 8_000_000
 
 
-def main():
-    base_p = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
-    opt_p = (sys.argv[2] if len(sys.argv) > 2
-             else "dryrun_results_optimized.json")
+# ------------------------------------------------------------ backend mode
+
+def _tables_equal(a, b) -> bool:
+    """Row-for-row equality of two engine Tables."""
+    import numpy as np
+    if a.nrows != b.nrows or set(a.cols) != set(b.cols):
+        return False
+    return all(np.array_equal(a.cols[k], b.cols[k]) for k in a.cols)
+
+
+def run_backends(args) -> dict:
+    import numpy as np
+
+    from benchmarks import queries as Q
+    from repro.core.gopt import GOpt
+    from repro.graphdb.ldbc import generate_ldbc
+
+    from repro.core.physical_spec import get_spec
+    backends = args.backend_list.split(",")
+    for b in backends:        # fail fast, before the store build
+        get_spec(b)
+    sets = {"ic": (Q.QIC, Q.QIC_PARAMS),
+            "cbo": (Q.QC, {}),
+            "rbo": (Q.QR, Q.QR_PARAMS),
+            "typeinf": (Q.QT, {})}
+    t0 = time.time()
+    print(f"# building LDBC-like store sf={args.sf} + GLogue ...", flush=True)
+    gopt = GOpt(generate_ldbc(sf=args.sf, seed=7))
+    print(f"# store: V={gopt.store.n_vertices} E={gopt.store.n_edges} "
+          f"({time.time() - t0:.1f}s); backends: {backends}", flush=True)
+
+    results = []
+    for setname in args.queries.split(","):
+        queries, params = sets[setname]
+        for name, text in queries.items():
+            opt = gopt.optimize(text, params.get(name))
+            rec: dict = {"set": setname, "query": name, "match": True}
+            ref = None
+            for backend in backends:
+                try:
+                    # warmup run absorbs jit/Pallas compilation, then time
+                    tbl, _ = gopt.execute(opt, backend=backend,
+                                          max_rows=ROW_CAP)
+                    best = float("inf")
+                    for _ in range(args.repeats):
+                        t1 = time.perf_counter()
+                        tbl, _ = gopt.execute(opt, backend=backend,
+                                              max_rows=ROW_CAP)
+                        best = min(best, time.perf_counter() - t1)
+                except (RuntimeError, MemoryError) as exc:
+                    rec[f"{backend}_s"] = None
+                    rec[f"{backend}_error"] = str(exc)[:120]
+                    continue
+                rec[f"{backend}_s"] = best
+                if ref is None:
+                    ref = tbl
+                    rec["rows"] = tbl.nrows
+                elif not _tables_equal(ref, tbl):
+                    rec["match"] = False
+            results.append(rec)
+            times = " ".join(
+                f"{b}={rec[f'{b}_s']:.4f}s" if rec.get(f"{b}_s") is not None
+                else f"{b}=OT" for b in backends)
+            print(f"{setname}/{name}: {times} rows={rec.get('rows')} "
+                  f"match={rec['match']}", flush=True)
+
+    mismatches = [r["query"] for r in results if not r["match"]]
+    # a backend erroring while another succeeds leaves parity unverified
+    # for that query — count it as a failure, not a silent skip
+    unverified = [r["query"] for r in results
+                  if r["match"]
+                  and any(r.get(f"{b}_s") is None for b in backends)
+                  and not all(r.get(f"{b}_s") is None for b in backends)]
+    geo = {}
+    base = backends[0]
+    for b in backends[1:]:
+        ratios = [r[f"{base}_s"] / r[f"{b}_s"] for r in results
+                  if r.get(f"{base}_s") and r.get(f"{b}_s")]
+        geo[f"{base}_over_{b}_geomean"] = (
+            float(np.exp(np.mean(np.log(ratios)))) if ratios else None)
+    out = {"sf": args.sf, "backends": backends, "repeats": args.repeats,
+           "results": results, "mismatches": mismatches,
+           "unverified": unverified, "summary": geo}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"# wrote {args.out}; mismatches={mismatches or 'none'} "
+          f"unverified={unverified or 'none'} "
+          f"summary={geo} ({time.time() - t0:.1f}s total)")
+    return out
+
+
+# ------------------------------------------------------------- legacy mode
+
+def legacy_sweep(base_p: str, opt_p: str) -> None:
     base = {(r["arch"], r["shape"], r["mesh"]): r
             for r in json.load(open(base_p))}
     opt = {(r["arch"], r["shape"], r["mesh"]): r
@@ -36,6 +141,28 @@ def main():
               f"{orf.get('t_memory_s', 0):.3g} | "
               f"{brf.get('t_collective_s', 0):.3g} -> "
               f"{orf.get('t_collective_s', 0):.3g} | {note} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", action="store_true",
+                    help="compare PhysicalSpec execution backends")
+    ap.add_argument("--backend-list", default="numpy,jax")
+    ap.add_argument("--sf", type=float, default=0.2)
+    ap.add_argument("--queries", default="ic,cbo",
+                    help="comma list of ic,cbo,rbo,typeinf")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_backends.json")
+    ap.add_argument("files", nargs="*",
+                    help="legacy mode: base/optimized dryrun result files")
+    args = ap.parse_args()
+    if args.backends:
+        out = run_backends(args)
+        sys.exit(1 if out["mismatches"] or out["unverified"] else 0)
+    base_p = args.files[0] if args.files else "dryrun_results.json"
+    opt_p = (args.files[1] if len(args.files) > 1
+             else "dryrun_results_optimized.json")
+    legacy_sweep(base_p, opt_p)
 
 
 if __name__ == "__main__":

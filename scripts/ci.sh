@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + a short backend-parity smoke benchmark.
+#
+#   scripts/ci.sh            # full tier-1 + smoke bench
+#   SKIP_BENCH=1 scripts/ci.sh   # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [ "${SKIP_BENCH:-0}" != "1" ]; then
+  # ~30s backend-parity smoke: tiny store, 1 repeat, LDBC IC set on both
+  # backends; exits nonzero on any numpy/jax result mismatch or on a
+  # query whose parity could not be verified (one backend errored).
+  echo "== backend-parity smoke bench =="
+  python -m benchmarks.perf_compare --backends --sf 0.05 --repeats 1 \
+      --queries ic --out BENCH_backends_smoke.json
+fi
+echo "== CI OK =="

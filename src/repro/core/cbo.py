@@ -23,6 +23,7 @@ from repro.core.cardinality import CardEstimator
 from repro.core.pattern import Pattern
 from repro.core.physical import (ExpandNode, JoinNode, PlanNode, ScanNode,
                                  plan_signature)
+from repro.core.physical_spec import CostParams, PhysicalSpec, get_spec
 
 
 @dataclasses.dataclass
@@ -35,13 +36,25 @@ class GraphOptimizer:
     """Algorithm 2 over the alias-subset lattice of a pattern."""
 
     def __init__(self, est: CardEstimator, enable_join: bool = True,
-                 enable_intersect: bool = True, alpha_expand: float = 1.0,
-                 alpha_join: float = 1.0):
+                 enable_intersect: bool = True,
+                 alpha_expand: float | None = None,
+                 alpha_join: float | None = None,
+                 alpha_intersect: float | None = None,
+                 alpha_scan: float | None = None,
+                 spec: str | PhysicalSpec | None = None):
+        """Cost weights default to the active backend's ``CostParams``
+        (``spec``, a PhysicalSpec or backend name); explicit ``alpha_*``
+        keyword arguments override the spec values."""
         self.est = est
         self.enable_join = enable_join
         self.enable_intersect = enable_intersect
-        self.alpha_expand = alpha_expand
-        self.alpha_join = alpha_join
+        cost = get_spec(spec).cost if spec is not None else CostParams()
+        self.alpha_scan = cost.alpha_scan if alpha_scan is None else alpha_scan
+        self.alpha_expand = (cost.alpha_expand if alpha_expand is None
+                             else alpha_expand)
+        self.alpha_intersect = (cost.alpha_intersect if alpha_intersect is None
+                                else alpha_intersect)
+        self.alpha_join = cost.alpha_join if alpha_join is None else alpha_join
         self.stats = {"explored": 0, "pruned": 0}
 
     # ------------------------------------------------------------- interface
@@ -54,8 +67,9 @@ class GraphOptimizer:
         # plans emerge from a Scan+Expand, so seeding scans suffices)
         for a in pattern.vertices:
             f = self.est.vertex_freq(pattern, a)
+            c = self.alpha_scan * f
             self._plan_map[frozenset({a})] = _Best(
-                ScanNode(a, est_frequency=f, est_cost=f), f)
+                ScanNode(a, est_frequency=f, est_cost=c), c)
         self._search(pattern, full)
         out = self._plan_map[full].plan
         if out is None or init.est_cost < self._plan_map[full].cost:
@@ -64,11 +78,15 @@ class GraphOptimizer:
 
     # --------------------------------------------------------------- greedy
     def greedy_initial(self, pattern: Pattern) -> PlanNode:
-        """GreedyInitial: cheapest-next-extension from the cheapest vertex."""
+        """GreedyInitial: cheapest-next-extension from the cheapest vertex.
+
+        A disconnected pattern (no expandable candidate left) attaches the
+        next component via a keyless cross-product Join and keeps going."""
         aliases = set(pattern.vertices)
         start = min(aliases, key=lambda a: self.est.vertex_freq(pattern, a))
         f = self.est.vertex_freq(pattern, start)
-        node: PlanNode = ScanNode(start, est_frequency=f, est_cost=f)
+        node: PlanNode = ScanNode(start, est_frequency=f,
+                                  est_cost=self.alpha_scan * f)
         bound = {start}
         while bound != aliases:
             best_alias, best_cost = None, None
@@ -82,6 +100,19 @@ class GraphOptimizer:
                 if best_cost is None or step_cost + f_new < best_cost:
                     best_alias, best_cost = cand, step_cost + f_new
                     best_edges, best_f, best_step = edges, f_new, step_cost
+            if best_alias is None:   # next connected component
+                nxt = min(aliases - bound,
+                          key=lambda a: self.est.vertex_freq(pattern, a))
+                fs = self.est.vertex_freq(pattern, nxt)
+                scan = ScanNode(nxt, est_frequency=fs,
+                                est_cost=self.alpha_scan * fs)
+                fx = node.est_frequency * fs   # cross product is exact
+                node = JoinNode(
+                    node, scan, (), est_frequency=fx,
+                    est_cost=(node.est_cost + scan.est_cost + fx +
+                              self.alpha_join * (node.est_frequency + fs)))
+                bound.add(nxt)
+                continue
             node = ExpandNode(node, best_alias, best_edges,
                               est_frequency=best_f,
                               est_cost=node.est_cost + best_step + best_f)
@@ -93,13 +124,17 @@ class GraphOptimizer:
         """(operator cost Eq.3, F(p_t) via Eq.6/GLogue)."""
         if not self.enable_intersect:
             edges = edges[:1]
-        sigma_sum = 0.0
+        # first edge is the primary expansion; the rest are WCOJ membership
+        # probes — each weighted by its backend's cost parameter
+        weighted = 0.0
         first = True
         for e in edges:
-            sigma_sum += self.est.expand_sigma(pattern, e,
-                                               new_alias if first else None)
+            sigma = self.est.expand_sigma(pattern, e,
+                                          new_alias if first else None)
+            weighted += (self.alpha_expand if first
+                         else self.alpha_intersect) * sigma
             first = False
-        op_cost = self.alpha_expand * f_src * max(sigma_sum, 1e-12)
+        op_cost = f_src * max(weighted, 1e-12)
         f_new = self.est.pattern_freq(pattern, bound | {new_alias})
         return op_cost, f_new
 
@@ -223,12 +258,15 @@ def random_plan(pattern: Pattern, rng: random.Random,
     return node
 
 
-def low_order_plan(pattern: Pattern, est: CardEstimator) -> PlanNode:
+def low_order_plan(pattern: Pattern, est: CardEstimator,
+                   spec: str | PhysicalSpec | None = None) -> PlanNode:
     """Neo4j-style foil: greedy order from low-order stats under the edge
     independence assumption, no GLogue, no WCOJ intersect (single-edge
     expansion; extra cycle edges become post-filters, modeled here by
-    expanding on the first edge only)."""
-    opt = GraphOptimizer(est, enable_join=False, enable_intersect=False)
+    expanding on the first edge only). ``spec`` supplies backend cost
+    parameters, like the full optimizer."""
+    opt = GraphOptimizer(est, enable_join=False, enable_intersect=False,
+                         spec=spec)
     return opt.greedy_initial(pattern)
 
 

@@ -19,6 +19,7 @@ from repro.core.glogue import GLogue
 from repro.core.parser import parse_cypher
 from repro.core.pattern import Pattern, expand_path_edges
 from repro.core.physical import PlanNode, default_left_deep_plan
+from repro.core.physical_spec import PhysicalSpec, get_spec
 from repro.core.rules import DEFAULT_RULES, apply_rules
 from repro.core.type_inference import INVALID, infer_types
 from repro.graphdb.engine import Engine, ExecStats, Table
@@ -35,11 +36,13 @@ class OptimizedQuery:
 
 class GOpt:
     def __init__(self, store: GraphStore, glogue_k: int = 3,
-                 build_glogue: bool = True):
+                 build_glogue: bool = True,
+                 backend: str | PhysicalSpec = "numpy"):
         self.store = store
         self.schema = store.schema
         self.stats = Statistics(store)
         self.glogue = GLogue(store, k=glogue_k) if build_glogue else None
+        self.spec = get_spec(backend)
 
     # ----------------------------------------------------------------- parse
     def parse(self, query: str, params: dict | None = None) -> ir.LogicalPlan:
@@ -52,7 +55,8 @@ class GOpt:
                  rbo: bool = True,
                  cbo: bool = True,
                  use_glogue: bool = True,
-                 use_selectivity: bool = True) -> OptimizedQuery:
+                 use_selectivity: bool = True,
+                 backend: str | PhysicalSpec | None = None) -> OptimizedQuery:
         t0 = time.perf_counter()
         plan = (self.parse(query, params) if isinstance(query, str)
                 else query)
@@ -71,9 +75,12 @@ class GOpt:
         est = CardEstimator(self.stats,
                             self.glogue if use_glogue else None,
                             use_selectivity=use_selectivity)
-        if cbo:
-            physical = GraphOptimizer(est).optimize(pattern)
+        spec = self.spec if backend is None else get_spec(backend)
+        if cbo and pattern.is_connected():
+            physical = GraphOptimizer(est, spec=spec).optimize(pattern)
         else:
+            # disconnected patterns: cross-product plan (Algorithm 2
+            # searches connected sub-patterns only)
             physical = default_left_deep_plan(pattern)
         return OptimizedQuery(plan, physical, time.perf_counter() - t0)
 
@@ -81,20 +88,24 @@ class GOpt:
     def execute(self, opt: OptimizedQuery,
                 fuse_expand: bool | None = None,
                 trim_fields: bool = True,
-                max_rows: int = 100_000_000) -> tuple[Table, ExecStats]:
+                max_rows: int = 100_000_000,
+                backend: str | PhysicalSpec | None = None
+                ) -> tuple[Table, ExecStats]:
         if opt.invalid:
             return Table.empty(), ExecStats()
         fuse = (opt.logical.hints.get("fuse_expand", True)
                 if fuse_expand is None else fuse_expand)
+        spec = self.spec if backend is None else get_spec(backend)
         eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
-                     max_rows=max_rows)
+                     max_rows=max_rows, backend=spec)
         return eng.run(opt.logical, opt.physical)
 
     def run(self, query: str, params: dict | None = None, **kw):
+        backend = kw.get("backend")
         return self.execute(self.optimize(query, params, **{
             k: v for k, v in kw.items()
             if k in ("type_inference", "rbo", "cbo", "use_glogue",
-                     "use_selectivity")}))
+                     "use_selectivity", "backend")}), backend=backend)
 
     # ------------------------------------------------------------- baselines
     def estimator(self, use_glogue: bool = True,
@@ -105,7 +116,8 @@ class GOpt:
     def neo4j_style_plan(self, pattern: Pattern) -> PlanNode:
         """Low-order foil: no type inference assumed done by caller, no
         GLogue, no WCOJ, independence assumption."""
-        return low_order_plan(pattern, self.estimator(use_glogue=False))
+        return low_order_plan(pattern, self.estimator(use_glogue=False),
+                              spec=self.spec)
 
     def random_plans(self, pattern: Pattern, n: int, seed: int = 0):
         import random as _r

@@ -22,7 +22,6 @@ class GremlinTraversal:
         self._preds: list = []
         self._anon = 0
         self._cur: str | None = None
-        self._pending_edge = None   # (labels, direction)
 
     def _fresh(self, p):
         self._anon += 1
@@ -35,7 +34,6 @@ class GremlinTraversal:
         return self
 
     def _expand(self, labels, direction):
-        self._pending_edge = (list(labels) or None, direction)
         # materialize target immediately with an anonymous alias; `as_` renames
         src = self._cur
         dst = self._fresh("v")
@@ -45,7 +43,6 @@ class GremlinTraversal:
                         direction, 1)
         self.pattern.add_edge(e)
         self._cur = dst
-        self._pending_edge = None
         return self
 
     def out(self, *labels):

@@ -91,18 +91,14 @@ def plan_signature(node: PlanNode) -> str:
     raise TypeError(node)
 
 
-def default_left_deep_plan(pattern: Pattern,
-                           start: Optional[str] = None) -> PlanNode:
-    """A naive left-deep expansion plan in BFS alias order — the engine's
-    fallback when no CBO plan is supplied, and the 'unoptimized' baseline."""
-    aliases = sorted(pattern.vertices)
-    start = start or aliases[0]
+def _component_left_deep(pattern: Pattern,
+                         start: str) -> tuple[PlanNode, set[str]]:
+    """Left-deep expansion of ``start``'s connected component."""
     node: PlanNode = ScanNode(start)
     bound = {start}
-    frontier = [start]
-    while len(bound) < len(pattern.vertices):
+    while True:
         nxt = None
-        for b in list(bound):
+        for b in sorted(bound):
             for e in pattern.adjacent(b):
                 o = e.other(b)
                 if o not in bound:
@@ -110,10 +106,28 @@ def default_left_deep_plan(pattern: Pattern,
                     break
             if nxt:
                 break
-        if nxt is None:  # disconnected (shouldn't happen for valid patterns)
-            nxt = next(a for a in aliases if a not in bound)
-            raise ValueError("pattern is disconnected")
+        if nxt is None:
+            return node, bound
         edges = [e for e in pattern.adjacent(nxt) if e.other(nxt) in bound]
         node = ExpandNode(node, nxt, edges)
         bound.add(nxt)
+
+
+def default_left_deep_plan(pattern: Pattern,
+                           start: Optional[str] = None) -> PlanNode:
+    """A naive left-deep expansion plan in BFS alias order — the engine's
+    fallback when no CBO plan is supplied, and the 'unoptimized' baseline.
+
+    A disconnected pattern becomes one left-deep plan per connected
+    component, combined with keyless Joins (cross products)."""
+    aliases = sorted(pattern.vertices)
+    if not aliases:
+        raise ValueError("cannot plan an empty pattern")
+    start = start or aliases[0]
+    node, bound = _component_left_deep(pattern, start)
+    while bound != set(aliases):
+        nxt = next(a for a in aliases if a not in bound)
+        right, rbound = _component_left_deep(pattern, nxt)
+        node = JoinNode(node, right, ())
+        bound |= rbound
     return node

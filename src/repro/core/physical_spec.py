@@ -1,0 +1,157 @@
+"""PhysicalSpec — the pluggable backend layer (paper §5.3, DESIGN.md §2).
+
+The paper's modularity claim at the physical level: a graph system plugs into
+GOpt by *registering* (a) implementations of the physical operators the CBO
+emits (scan, expand, expand-and-intersect/WCOJ, pattern join, and the
+relational tail primitives) and (b) the cost-model parameters the optimizer
+uses to weigh those operators. The optimizer and the binding-table executor
+core are backend-agnostic; everything data-parallel goes through an
+``OperatorSet`` resolved from the registry.
+
+Two backends ship in-tree (lazily imported on first ``get_spec``):
+
+- ``numpy`` — the host path over ``repro.graphdb.vecops``;
+- ``jax``   — jit'd padded-block primitives (``repro.graphdb.jaxops``) with
+  the ``wcoj_intersect`` Pallas kernel for the expand-and-intersect membership
+  probe (interpret mode on CPU, compiled on TPU).
+
+Adding a third backend: subclass ``OperatorSet``, build a ``PhysicalSpec``
+with a ``make_operators`` factory and a ``CostParams``, and call
+``register_spec``. See DESIGN.md for the full contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+import numpy as np
+
+# operator names every backend must provide (callable attributes on the
+# OperatorSet it returns from make_operators)
+REQUIRED_OPERATORS = ("scan", "expand", "intersect", "join",
+                      "combine_keys", "group_reduce")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    """Per-operator cost weights consumed by ``GraphOptimizer`` (Eq. 2/3).
+
+    ``alpha_scan`` scales the Scan leaf cost F(v); ``alpha_expand`` the
+    first-edge expansion term F(p_s)*sigma; ``alpha_intersect`` the extra
+    WCOJ membership probes of an expand-and-intersect; ``alpha_join`` the
+    binary pattern-join term F(p_s1)+F(p_s2)."""
+    alpha_scan: float = 1.0
+    alpha_expand: float = 1.0
+    alpha_intersect: float = 1.0
+    alpha_join: float = 1.0
+
+
+class OperatorSet:
+    """Physical operator implementations bound to one ``GraphStore``.
+
+    All array arguments and results are host numpy (int64 binding-table
+    columns); a backend is free to stage through device arrays internally —
+    padded-block / validity-mask layouts stay hidden behind this interface.
+    """
+
+    name = "abstract"
+
+    def __init__(self, store):
+        self.store = store
+
+    # ------------------------------------------------------------- pattern
+    def scan(self, lo: int, hi: int) -> np.ndarray:
+        """All vertex ids of one type range ``[lo, hi)`` (SCAN leaf)."""
+        raise NotImplementedError
+
+    def expand(self, csr, rows_local: np.ndarray,
+               max_out: int | None = None):
+        """Expand each row's vertex (local id into ``csr``) to all neighbors.
+
+        Returns ``(row_idx, neighbor_global_id, edge_pos)`` in row-major
+        order: originating binding-table row, neighbor id, and the edge's
+        identity position (``csr.pos``-mapped when present)."""
+        raise NotImplementedError
+
+    def intersect(self, csr, rows_local: np.ndarray, targets: np.ndarray):
+        """WCOJ membership probe: is ``targets[i]`` in row ``rows_local[i]``?
+
+        Returns ``(found: bool[n], edge_pos: int64[n])`` — ``edge_pos`` is
+        the edge identity position, valid only where ``found``."""
+        raise NotImplementedError
+
+    def join(self, lkeys: np.ndarray, rkeys: np.ndarray,
+             max_out: int | None = None):
+        """Equi join of two int64 key columns -> (lidx, ridx) row pairs."""
+        raise NotImplementedError
+
+    # ---------------------------------------------------- relational tail
+    def combine_keys(self, cols: list[np.ndarray]) -> np.ndarray:
+        raise NotImplementedError
+
+    def group_reduce(self, keys: np.ndarray, values: dict):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicalSpec:
+    """One backend's registration: operator factory + cost model."""
+    name: str
+    make_operators: Callable[..., OperatorSet]   # GraphStore -> OperatorSet
+    cost: CostParams = CostParams()
+    description: str = ""
+
+    def operators(self, store) -> OperatorSet:
+        """Operator set for ``store``, cached on the store so device-array
+        uploads survive across per-query ``Engine`` instances."""
+        cache = store.__dict__.setdefault("_physical_ops_cache", {})
+        ops = cache.get(self.name)
+        if ops is None:
+            ops = self.make_operators(store)
+            validate_operator_set(ops)
+            cache[self.name] = ops
+        return ops
+
+
+_REGISTRY: dict[str, PhysicalSpec] = {}
+
+# built-in backends, imported on first lookup (registration is a module
+# side effect) so importing the engine never drags in jax
+_LAZY_BACKENDS = {
+    "numpy": "repro.graphdb.numpy_backend",
+    "jax": "repro.graphdb.jax_backend",
+}
+
+
+def register_spec(spec: PhysicalSpec, overwrite: bool = False) -> PhysicalSpec:
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_spec(backend: str | PhysicalSpec) -> PhysicalSpec:
+    """Resolve a backend name (or pass a spec through)."""
+    if isinstance(backend, PhysicalSpec):
+        return backend
+    if backend not in _REGISTRY and backend in _LAZY_BACKENDS:
+        importlib.import_module(_LAZY_BACKENDS[backend])
+    if backend not in _REGISTRY:
+        raise KeyError(f"unknown physical backend {backend!r}; "
+                       f"available: {available_backends()}")
+    return _REGISTRY[backend]
+
+
+def available_backends() -> list[str]:
+    return sorted(set(_REGISTRY) | set(_LAZY_BACKENDS))
+
+
+def validate_operator_set(ops: OperatorSet) -> OperatorSet:
+    missing = [n for n in REQUIRED_OPERATORS
+               if not callable(getattr(ops, n, None))
+               or getattr(type(ops), n, None) is getattr(OperatorSet, n)]
+    if missing:
+        raise TypeError(f"operator set {type(ops).__name__} does not "
+                        f"implement required operators: {missing}")
+    return ops

@@ -1,11 +1,13 @@
-"""Binding-table execution engine.
+"""Binding-table execution engine — the backend-agnostic executor core.
 
 Executes a physical pattern plan (Scan/Expand/ExpandIntersect/Join) followed by
 the relational tail of the unified-IR plan. Intermediate pattern matchings are
-dense integer tables — the TPU-native adaptation of the paper's dataflow
-backend (DESIGN.md §2). The engine also meters the paper's cost-model
-quantities: rows produced per operator (communication cost analogue) and
-per-operator wall time.
+dense integer tables. All data-parallel work (scan, CSR expansion, WCOJ
+membership probes, equi joins, grouped reductions) is delegated to the
+``OperatorSet`` of the active ``PhysicalSpec`` backend (DESIGN.md §2), chosen
+via ``Engine(store, backend="numpy"|"jax"|spec)``. The engine also meters the
+paper's cost-model quantities: rows produced per operator (communication cost
+analogue) and per-operator wall time.
 
 Modes (used by the RBO ablation benchmarks):
 - ``fuse_expand``   — ExpandGetVFusionRule on/off: fused neighbor expansion vs
@@ -26,7 +28,7 @@ import numpy as np
 from repro.core import ir
 from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
 from repro.core.physical import ExpandNode, JoinNode, PlanNode, ScanNode
-from repro.graphdb import vecops
+from repro.core.physical_spec import OperatorSet, PhysicalSpec, get_spec
 from repro.graphdb.storage import GraphStore
 
 INT_MIN = np.iinfo(np.int64).min
@@ -75,12 +77,17 @@ class ExecStats:
 
 class Engine:
     def __init__(self, store: GraphStore, fuse_expand: bool = True,
-                 trim_fields: bool = True, max_rows: int = 100_000_000):
+                 trim_fields: bool = True, max_rows: int = 100_000_000,
+                 backend: str | PhysicalSpec | OperatorSet = "numpy"):
         self.store = store
         self.fuse_expand = fuse_expand
         self.trim_fields = trim_fields
         self.max_rows = max_rows
         self._tindex = store.triple_index()
+        if isinstance(backend, OperatorSet):
+            self.ops = backend
+        else:
+            self.ops = get_spec(backend).operators(store)
 
     # ================================================================ pattern
     def _check(self, n):
@@ -92,7 +99,7 @@ class Engine:
         parts = []
         for t in sorted(v.types):
             lo, hi = self.store.type_range(t)
-            parts.append(np.arange(lo, hi, dtype=np.int64))
+            parts.append(self.ops.scan(lo, hi))
         ids = np.concatenate(parts) if parts else np.zeros(0, np.int64)
         tbl = Table({alias: ids}, ids.shape[0])
         tbl = self._apply_fused_predicates(tbl, v.predicates, stats)
@@ -128,9 +135,8 @@ class Engine:
                 continue
             rows = np.nonzero(m)[0]
             csr = (st.out_csr if kind == "out" else st.in_csr)[t]
-            ridx, nbr, epos = vecops.expand_csr(
-                csr.indptr, csr.indices, src_ids[rows] - lo, csr.pos,
-                max_out=self.max_rows)
+            ridx, nbr, epos = self.ops.expand(
+                csr, src_ids[rows] - lo, max_out=self.max_rows)
             part = tbl.take(rows[ridx]).with_cols({
                 new_alias: nbr,
                 f"{e.alias}#t": np.full(nbr.shape, self._tindex[t], np.int64),
@@ -161,17 +167,13 @@ class Engine:
             rows = np.nonzero(m)[0]
             csr = (st.out_csr if kind == "out" else st.in_csr)[t]
             local = src_ids[rows] - klo
-            found, pos = vecops.bounded_binary_search(
-                csr.indices, csr.indptr[local], csr.indptr[local + 1],
-                cand[rows])
+            found, epos = self.ops.intersect(csr, local, cand[rows])
             hit = rows[found]
             if hit.size == 0:
                 continue
-            fpos = pos[found]
-            epos = csr.pos[fpos] if csr.pos is not None else fpos
             part = tbl.take(hit).with_cols({
                 f"{e.alias}#t": np.full(hit.shape, self._tindex[t], np.int64),
-                f"{e.alias}#p": epos,
+                f"{e.alias}#p": epos[found],
             })
             outs.append(part)
         out = Table.concat(outs)
@@ -251,8 +253,8 @@ class Engine:
                           (set(lt.cols) & set(rt.cols) - {"__pad"}))
             keys = [k for k in keys if not k.startswith("__mat.")]
             lkey = self._pack_join_keys(lt, rt, keys)
-            lidx, ridx = vecops.equi_join(lkey[0], lkey[1],
-                                          max_out=self.max_rows)
+            lidx, ridx = self.ops.join(lkey[0], lkey[1],
+                                       max_out=self.max_rows)
             self._check(lidx.shape[0])
             cols = {k: v[lidx] for k, v in lt.cols.items()}
             for k, v in rt.cols.items():
@@ -357,7 +359,7 @@ class Engine:
                     for e, name in op.items}
             out = Table(cols, tbl.nrows)
             if op.distinct and out.nrows:
-                key = vecops.combine_keys(list(out.cols.values()))
+                key = self.ops.combine_keys(list(out.cols.values()))
                 _, first = np.unique(key, return_index=True)
                 out = out.take(np.sort(first))
             stats.log("PROJECT", out.nrows)
@@ -372,14 +374,14 @@ class Engine:
                     cols[n] = np.zeros(0, np.int64)
                 return Table(cols, 0)
             kcols = [self._eval(tbl, e) for e, _ in op.keys]
-            key = (vecops.combine_keys(kcols) if kcols
+            key = (self.ops.combine_keys(kcols) if kcols
                    else np.zeros(tbl.nrows, dtype=np.int64))
             vals = {}
             for a, name in op.aggs:
                 col = (self._eval(tbl, a.arg) if a.arg is not None
                        else np.zeros(tbl.nrows, np.int64))
                 vals[name] = (a.fn, col)
-            first, aggd = vecops.group_reduce(key, vals)
+            first, aggd = self.ops.group_reduce(key, vals)
             cols = {name: kc[first] for (e, name), kc in zip(op.keys, kcols)}
             cols.update(aggd)
             out = Table(cols, first.shape[0])

@@ -1,0 +1,217 @@
+"""JAX backend — jit'd padded-block execution of the pattern primitives.
+
+Registers the ``"jax"`` PhysicalSpec. Shapes must be static under jit, so the
+primitives run on padded row blocks with validity masks (the same contract the
+Pallas kernels use); this module hides that layout behind the ``OperatorSet``
+interface — callers see flat int64 numpy arrays exactly like the numpy
+backend, row-for-row in the same order.
+
+- ``expand``    -> ``jaxops.expand_padded``: [R, D_max] neighbor block +
+  validity mask, flattened on the host.
+- ``intersect`` -> the ``wcoj_intersect`` Pallas kernel (vectorized
+  compare-scan over a padded-ELL adjacency tile; interpret mode on CPU,
+  compiled on TPU) for row degrees up to ``MAX_ELL_DEGREE``; beyond that the
+  jit'd ``jaxops.bounded_binary_search`` probes the CSR directly, matching
+  the kernel's documented degree envelope.
+
+Row counts and block widths are rounded up to powers of two so the number of
+distinct jit/Pallas compilations stays logarithmic in table size. The
+relational tail (join/group) stays on the host numpy path — it is
+bandwidth-bound gather/sort work that the paper leaves to the wrapped system.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.physical_spec import CostParams, PhysicalSpec, register_spec
+from repro.graphdb.numpy_backend import NumpyOperators
+
+# degree ceiling for the padded-ELL kernel layout (DESIGN.md §3: the VPU
+# compare-scan beats log-step gathers only while a row block fits in VMEM)
+MAX_ELL_DEGREE = 1024
+_MIN_BLOCK_ROWS = 8
+# rows per device slab: padded blocks are [slab, D_max]; slabbing bounds the
+# padded footprint and lets D_max adapt to each slab's real degree skew
+_SLAB_ROWS = 1 << 15
+# padded-block element budget per Pallas input tile (~2 MB of int32)
+_TILE_ELEMS = 1 << 19
+# element budget for one [rows, D_max] expand block (~128 MB of int32);
+# slabs exceeding it split recursively so a lone hub vertex cannot force a
+# rows x hub-degree allocation
+_EXPAND_ELEMS = 1 << 25
+
+
+def _pow2(n: int, floor: int = 1) -> int:
+    return max(floor, 1 << max(int(n) - 1, 0).bit_length())
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (max(int(n), 1).bit_length() - 1)
+
+
+class JaxOperators(NumpyOperators):
+    """Overrides the two pattern-matching hot loops with device primitives;
+    scan/join/group stay on the inherited host path."""
+
+    name = "jax"
+
+    def __init__(self, store):
+        super().__init__(store)
+        import jax  # deferred so the registry import stays light
+        import jax.numpy as jnp
+        from repro.graphdb import jaxops
+        from repro.kernels.wcoj_intersect.ops import wcoj_intersect
+        self._jnp = jnp
+        self._jaxops = jaxops
+        self._wcoj = wcoj_intersect
+        self._interpret = jax.default_backend() != "tpu"
+        if max(store.n_vertices, store.n_edges) >= np.iinfo(np.int32).max:
+            raise ValueError(
+                "jax backend stages vertex ids and CSR offsets through "
+                f"int32; store has {store.n_vertices} vertices / "
+                f"{store.n_edges} edges")
+        self._dev = {}   # id(csr) -> (indptr_dev, indices_dev_i32)
+
+    def _csr_dev(self, csr):
+        key = id(csr)
+        ent = self._dev.get(key)
+        if ent is None:
+            ent = (self._jnp.asarray(csr.indptr.astype(np.int32)),
+                   self._jnp.asarray(csr.indices.astype(np.int32)))
+            self._dev[key] = ent
+        return ent
+
+    @staticmethod
+    def _pad_rows(a: np.ndarray, n: int, fill) -> np.ndarray:
+        out = np.full(n, fill, dtype=a.dtype)
+        out[:a.shape[0]] = a
+        return out
+
+    # ------------------------------------------------------------- expand
+    def expand(self, csr, rows_local, max_out=None):
+        rows_local = np.asarray(rows_local, dtype=np.int64)
+        R = rows_local.shape[0]
+        deg = csr.indptr[rows_local + 1] - csr.indptr[rows_local]
+        total = int(deg.sum())
+        if max_out is not None and total > max_out:
+            raise RuntimeError(f"intermediate blow-up: expansion would "
+                               f"produce {total} rows > cap {max_out}")
+        if total == 0:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z, z
+        parts = []
+        for s in range(0, R, _SLAB_ROWS):
+            e = min(s + _SLAB_ROWS, R)
+            self._expand_chunk(csr, rows_local[s:e], deg[s:e], s, parts)
+        ridx = np.concatenate([p[0] for p in parts])
+        nbr = np.concatenate([p[1] for p in parts])
+        fpos = np.concatenate([p[2] for p in parts])
+        epos = csr.pos[fpos] if csr.pos is not None else fpos
+        return ridx, nbr, epos
+
+    def _expand_chunk(self, csr, rows_local, deg, base, parts):
+        """Expand one row chunk, halving it while the padded [rows, d_max]
+        block would bust the element budget (degree skew isolates hub rows
+        into small sub-chunks instead of widening the whole slab)."""
+        if int(deg.sum()) == 0:
+            return
+        d_hi = int(deg.max())
+        R = rows_local.shape[0]
+        if R > 1 and _pow2(R, _MIN_BLOCK_ROWS) * _pow2(d_hi) > _EXPAND_ELEMS:
+            h = R // 2
+            self._expand_chunk(csr, rows_local[:h], deg[:h], base, parts)
+            self._expand_chunk(csr, rows_local[h:], deg[h:], base + h, parts)
+            return
+        ridx, nbr, fpos = self._expand_slab(csr, rows_local, d_hi)
+        parts.append((ridx + base, nbr, fpos))
+
+    def _expand_slab(self, csr, rows_local, d_hi):
+        R = rows_local.shape[0]
+        indptr_d, indices_d = self._csr_dev(csr)
+        d_max = _pow2(d_hi)
+        rp = _pow2(R, _MIN_BLOCK_ROWS)
+        rows_p = self._pad_rows(rows_local, rp, 0).astype(np.int32)
+        nbr, valid, flat = self._jaxops.expand_padded(
+            indptr_d, indices_d, self._jnp.asarray(rows_p), d_max)
+        # padded-block -> flat binding-table rows (drop pad rows + pad slots)
+        valid = np.asarray(valid)[:R]
+        ridx, _slot = np.nonzero(valid)
+        nbr_flat = np.asarray(nbr)[:R][valid].astype(np.int64)
+        fpos = np.asarray(flat)[:R][valid].astype(np.int64)
+        return ridx.astype(np.int64), nbr_flat, fpos
+
+    # ---------------------------------------------------------- intersect
+    def intersect(self, csr, rows_local, targets):
+        rows_local = np.asarray(rows_local, dtype=np.int64)
+        targets = np.asarray(targets, dtype=np.int64)
+        R = rows_local.shape[0]
+        found = np.zeros(R, dtype=bool)
+        fpos = np.zeros(R, dtype=np.int64)
+        if R == 0:
+            return found, fpos
+        deg = csr.indptr[rows_local + 1] - csr.indptr[rows_local]
+        for s in range(0, R, _SLAB_ROWS):
+            e = min(s + _SLAB_ROWS, R)
+            d_hi = int(deg[s:e].max())
+            if d_hi == 0:
+                continue
+            if d_hi <= MAX_ELL_DEGREE:
+                f, p = self._intersect_ell(csr, rows_local[s:e],
+                                           targets[s:e], d_hi)
+            else:
+                f, p = self._intersect_bsearch(csr, rows_local[s:e],
+                                               targets[s:e])
+            found[s:e] = f
+            fpos[s:e] = p
+        epos = np.zeros(R, dtype=np.int64)
+        if found.any():
+            hp = fpos[found]
+            epos[found] = csr.pos[hp] if csr.pos is not None else hp
+        return found, epos
+
+    def _intersect_ell(self, csr, rows_local, targets, d_hi):
+        """Pallas kernel path: gather padded-ELL rows, compare-scan probe."""
+        from repro.kernels.wcoj_intersect.ops import gather_rows
+        jnp = self._jnp
+        indptr_d, indices_d = self._csr_dev(csr)
+        d_max = _pow2(d_hi)
+        R = rows_local.shape[0]
+        rp = _pow2(R, _MIN_BLOCK_ROWS)
+        # tile rows so one [block_rows, d_max] ELL block stays ~VMEM-sized
+        # (and interpret mode on CPU runs few, fat grid steps)
+        block_rows = max(_MIN_BLOCK_ROWS,
+                         min(rp, _pow2_floor(_TILE_ELEMS // d_max)))
+        rows_p = self._pad_rows(rows_local, rp, 0).astype(np.int32)
+        # pad targets with -2: never matches a real id (>=0) or ELL pad (-1)
+        tgt_p = self._pad_rows(targets, rp, -2).astype(np.int32)
+        adj = gather_rows(indices_d, indptr_d, jnp.asarray(rows_p), d_max)
+        found_d, pos_d = self._wcoj(adj, jnp.asarray(tgt_p),
+                                    block_rows=block_rows,
+                                    interpret=self._interpret)
+        found = np.asarray(found_d)[:R].astype(bool)
+        pos_in_row = np.asarray(pos_d)[:R].astype(np.int64)
+        return found, csr.indptr[rows_local] + pos_in_row
+
+    def _intersect_bsearch(self, csr, rows_local, targets):
+        """High-degree fallback: jit'd per-row bounded binary search."""
+        jnp = self._jnp
+        indptr_d, indices_d = self._csr_dev(csr)
+        R = rows_local.shape[0]
+        rp = _pow2(R, _MIN_BLOCK_ROWS)
+        lo = self._pad_rows(csr.indptr[rows_local], rp, 0).astype(np.int32)
+        hi = self._pad_rows(csr.indptr[rows_local + 1], rp, 0).astype(np.int32)
+        tgt = self._pad_rows(targets, rp, -2).astype(np.int32)
+        found_d, pos_d = self._jaxops.bounded_binary_search(
+            jnp.asarray(indices_d), jnp.asarray(lo), jnp.asarray(hi),
+            jnp.asarray(tgt))
+        found = np.asarray(found_d)[:R].astype(bool)
+        return found, np.asarray(pos_d)[:R].astype(np.int64)
+
+
+JAX_SPEC = register_spec(PhysicalSpec(
+    name="jax",
+    make_operators=JaxOperators,
+    cost=CostParams(),
+    description="jit'd padded-block primitives + wcoj_intersect Pallas "
+                "kernel (interpret on CPU, compiled on TPU)",
+))

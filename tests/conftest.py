@@ -5,6 +5,8 @@ import sys
 # process); tests must never import repro.launch.dryrun
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so tests can import the benchmark query sets (benchmarks.queries)
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402

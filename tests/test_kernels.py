@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref

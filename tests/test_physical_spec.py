@@ -1,0 +1,238 @@
+"""PhysicalSpec backend layer: registry contract, cost-model plumbing,
+backend result parity (numpy vs jax/Pallas), cross-product plans, and
+frontend x backend parity (Cypher vs Gremlin through both backends)."""
+import numpy as np
+import pytest
+
+from benchmarks import queries as Q
+from repro.core import ir
+from repro.core.cardinality import CardEstimator, Statistics
+from repro.core.cbo import GraphOptimizer
+from repro.core.gremlin import g
+from repro.core.parser import parse_cypher
+from repro.core.physical import (JoinNode, default_left_deep_plan,
+                                 plan_signature)
+from repro.core.physical_spec import (CostParams, OperatorSet, PhysicalSpec,
+                                      available_backends, get_spec,
+                                      register_spec)
+from repro.core.type_inference import infer_types
+from repro.graphdb.engine import Engine
+
+
+BACKENDS = ["numpy", "jax"]
+
+
+def _table_eq(a, b):
+    assert a.nrows == b.nrows
+    assert set(a.cols) == set(b.cols)
+    for k in a.cols:
+        np.testing.assert_array_equal(a.cols[k], b.cols[k], err_msg=k)
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_has_builtin_backends():
+    assert {"numpy", "jax"} <= set(available_backends())
+    spec = get_spec("numpy")
+    assert spec is get_spec("numpy")            # stable resolution
+    assert get_spec(spec) is spec               # spec passthrough
+    with pytest.raises(KeyError):
+        get_spec("no-such-backend")
+
+
+def test_register_rejects_duplicate_and_bad_opset():
+    spec = get_spec("numpy")
+    with pytest.raises(ValueError):
+        register_spec(spec)
+
+    class Broken(OperatorSet):
+        pass
+
+    bad = PhysicalSpec(name="_broken_test", make_operators=Broken)
+    with pytest.raises(TypeError):
+        bad.operators(type("FakeStore", (), {})())
+
+
+def test_operator_sets_cached_per_store(tiny_store):
+    spec = get_spec("numpy")
+    assert spec.operators(tiny_store) is spec.operators(tiny_store)
+
+
+# ------------------------------------------------------------- cost model
+
+def test_cbo_reads_cost_params_from_spec(tiny_store):
+    est = CardEstimator(Statistics(tiny_store), None)
+    spec = PhysicalSpec(name="_cost_test", make_operators=lambda s: None,
+                        cost=CostParams(alpha_scan=2.0, alpha_expand=3.0,
+                                        alpha_intersect=0.5, alpha_join=7.0))
+    opt = GraphOptimizer(est, spec=spec)
+    assert (opt.alpha_scan, opt.alpha_expand,
+            opt.alpha_intersect, opt.alpha_join) == (2.0, 3.0, 0.5, 7.0)
+    # explicit kwargs override the spec
+    opt2 = GraphOptimizer(est, spec=spec, alpha_expand=1.0)
+    assert opt2.alpha_expand == 1.0 and opt2.alpha_join == 7.0
+    # defaults unchanged without a spec
+    opt3 = GraphOptimizer(est)
+    assert (opt3.alpha_scan, opt3.alpha_expand,
+            opt3.alpha_intersect, opt3.alpha_join) == (1.0, 1.0, 1.0, 1.0)
+
+
+def test_cost_params_flow_into_plan_costs(tiny_store):
+    """Operator alphas from the spec materially change estimated plan cost
+    (a triangle's closing expand-and-intersect pays alpha_intersect)."""
+    est = CardEstimator(Statistics(tiny_store), None)
+    q = ("MATCH (v1)-[e1]->(v2), (v1)-[e2]->(v3:PLACE), (v2)-[e3]->(v3) "
+         "RETURN count(v1)")
+    pat = infer_types(parse_cypher(q, tiny_store.schema).pattern(),
+                      tiny_store.schema)
+    base = GraphOptimizer(est).optimize(pat)
+    dear = GraphOptimizer(est, alpha_intersect=1e9,
+                          enable_join=False).optimize(pat)
+    assert "x2" in plan_signature(base)         # WCOJ step chosen normally
+    assert dear.est_cost > base.est_cost * 100
+
+
+# --------------------------------------------------- disconnected patterns
+
+def test_disconnected_pattern_cross_product(tiny_store):
+    q = "MATCH (a:PERSON), (p:PRODUCT) RETURN count(a) AS c"
+    lp = parse_cypher(q, tiny_store.schema)
+    pat = infer_types(lp.pattern(), tiny_store.schema)
+    lp.replace_pattern(pat)
+    plan = default_left_deep_plan(pat)
+    assert isinstance(plan, JoinNode) and plan.keys == ()
+    tbl, _ = Engine(tiny_store).run(lp, plan)
+    n_person = tiny_store.v_count["PERSON"]
+    n_product = tiny_store.v_count["PRODUCT"]
+    assert int(tbl.cols["c"][0]) == n_person * n_product
+
+
+def test_greedy_and_low_order_handle_disconnected(gopt_tiny_spec):
+    """greedy_initial (and the low-order foil built on it) must not crash
+    on a disconnected pattern — it bridges components with cross-product
+    joins."""
+    q = "MATCH (a:PERSON), (p:PRODUCT) RETURN count(a) AS c"
+    lp = parse_cypher(q, gopt_tiny_spec.store.schema)
+    pat = infer_types(lp.pattern(), gopt_tiny_spec.store.schema)
+    lp.replace_pattern(pat)
+    plan = gopt_tiny_spec.neo4j_style_plan(pat)
+    assert plan.bound_aliases() == frozenset({"a", "p"})
+    tbl, _ = Engine(gopt_tiny_spec.store).run(lp, plan)
+    store = gopt_tiny_spec.store
+    assert int(tbl.cols["c"][0]) == (store.v_count["PERSON"]
+                                     * store.v_count["PRODUCT"])
+
+
+def test_jax_expand_chunk_split_parity(gopt_tiny_spec, monkeypatch):
+    """With a tiny expand element budget, slabs split recursively around
+    high-degree rows and results stay identical to numpy."""
+    from repro.graphdb import jax_backend
+    monkeypatch.setattr(jax_backend, "_EXPAND_ELEMS", 64)
+    store = gopt_tiny_spec.store
+    store.__dict__.pop("_physical_ops_cache", None)
+    try:
+        q = ("MATCH (a:PERSON)-[:PURCHASES]->(p:PRODUCT)"
+             "<-[:PURCHASES]-(b:PERSON) RETURN a, p, b ORDER BY a, p, b")
+        opt = gopt_tiny_spec.optimize(q)
+        ref, _ = gopt_tiny_spec.execute(opt, backend="numpy")
+        jx, _ = gopt_tiny_spec.execute(opt, backend="jax")
+        _table_eq(ref, jx)
+    finally:
+        store.__dict__.pop("_physical_ops_cache", None)
+
+
+def test_gopt_runs_disconnected_pattern(gopt_tiny_spec):
+    tbl, _ = gopt_tiny_spec.run(
+        "MATCH (a:PERSON), (p:PRODUCT) RETURN count(a) AS c")
+    store = gopt_tiny_spec.store
+    assert int(tbl.cols["c"][0]) == (store.v_count["PERSON"]
+                                     * store.v_count["PRODUCT"])
+
+
+@pytest.fixture(scope="module")
+def gopt_tiny_spec(tiny_store):
+    from repro.core.gopt import GOpt
+    return GOpt(tiny_store)
+
+
+# -------------------------------------------------------- backend parity
+
+PARITY_QUERIES = (
+    [("typeinf/" + k, v, None) for k, v in Q.QT.items()]
+    + [("rbo/" + k, v, Q.QR_PARAMS.get(k)) for k, v in Q.QR.items()]
+    + [("cbo/" + k, v, None) for k, v in Q.QC.items()]
+    + [("ldbc/" + k, v, Q.QIC_PARAMS[k]) for k, v in Q.QIC.items()]
+)
+
+
+@pytest.mark.parametrize("name,text,params",
+                         PARITY_QUERIES, ids=[q[0] for q in PARITY_QUERIES])
+def test_backend_parity_benchmark_queries(gopt_small, name, text, params):
+    opt = gopt_small.optimize(text, params)
+    ref, _ = gopt_small.execute(opt, backend="numpy")
+    jx, _ = gopt_small.execute(opt, backend="jax")
+    _table_eq(ref, jx)
+
+
+def test_jax_backend_uses_pallas_kernel(gopt_small, monkeypatch):
+    """The expand-and-intersect step must go through the wcoj_intersect
+    Pallas kernel (interpret mode on CPU)."""
+    from repro.graphdb import jax_backend
+    calls = {"ell": 0}
+    orig = jax_backend.JaxOperators._intersect_ell
+
+    def spy(self, *a, **k):
+        calls["ell"] += 1
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(jax_backend.JaxOperators, "_intersect_ell", spy)
+    # triangle query -> WCOJ expand-and-intersect in the plan
+    opt = gopt_small.optimize(Q.QC["Qc1a"])
+    assert "x2" in plan_signature(opt.physical)
+    gopt_small.execute(opt, backend="jax")
+    assert calls["ell"] > 0
+
+
+def test_jax_high_degree_fallback(gopt_small, monkeypatch):
+    """Degrees above MAX_ELL_DEGREE route to bounded_binary_search."""
+    from repro.graphdb import jax_backend
+    monkeypatch.setattr(jax_backend, "MAX_ELL_DEGREE", 0)
+    store = gopt_small.store
+    store.__dict__.pop("_physical_ops_cache", None)   # drop cached opsets
+    try:
+        opt = gopt_small.optimize(Q.QC["Qc1a"])
+        ref, _ = gopt_small.execute(opt, backend="numpy")
+        jx, _ = gopt_small.execute(opt, backend="jax")
+        _table_eq(ref, jx)
+    finally:
+        store.__dict__.pop("_physical_ops_cache", None)
+
+
+# --------------------------------------------- frontend x backend parity
+
+def test_frontend_backend_parity_matrix(gopt_small):
+    """The same CGP via Cypher and Gremlin must give identical results
+    through both registered backends (4-way parity). Column names differ
+    between frontends (Cypher AS vs Gremlin's fixed agg name), so compare
+    the (key, count) value columns."""
+    cypher = ("MATCH (p:PERSON)-[:KNOWS]->(f:PERSON) "
+              "RETURN p, count(f) AS cnt ORDER BY cnt DESC, p LIMIT 25")
+    schema = gopt_small.store.schema
+    gplan = (g(schema).V("PERSON").as_("p").out("KNOWS")
+             .as_("f", types=["PERSON"]).group_count("p"))
+    # append the same deterministic tail the Cypher query carries
+    gplan.ops.append(ir.OrderBy([(ir.Var("count"), False),
+                                 (ir.Var("p"), True)], limit=25))
+
+    results = {}
+    for frontend, lp, ccol in (("cypher", cypher, "cnt"),
+                               ("gremlin", gplan, "count")):
+        opt = gopt_small.optimize(lp)
+        for backend in BACKENDS:
+            tbl, _ = gopt_small.execute(opt, backend=backend)
+            results[(frontend, backend)] = (tbl.cols["p"], tbl.cols[ccol])
+    base_p, base_c = results[("cypher", "numpy")]
+    assert base_p.shape[0] > 0
+    for (fe, be), (p, c) in results.items():
+        np.testing.assert_array_equal(p, base_p, err_msg=f"{fe}/{be}")
+        np.testing.assert_array_equal(c, base_c, err_msg=f"{fe}/{be}")

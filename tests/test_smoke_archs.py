@@ -68,8 +68,8 @@ def test_full_bundle_specs_consistent(arch):
     """FULL configs: input specs and sharding pytrees are structurally
     consistent (no 512-device mesh needed — uses a 1x1 mesh)."""
     bundle = get_bundle(arch)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _make_mesh
+    mesh = _make_mesh((1, 1), ("data", "model"))
     for shape in bundle.shape_names():
         if bundle.shapes[shape].skip:
             continue

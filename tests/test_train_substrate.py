@@ -2,12 +2,12 @@
 compression, serving."""
 import os
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st
 
 from repro.models import transformer as tfm
 from repro.serve.engine import Request, ServeEngine
@@ -172,8 +172,8 @@ def test_int8_error_feedback_bounded():
 def test_elastic_reshard(tiny):
     from jax.sharding import NamedSharding, PartitionSpec as P
     _, params = tiny
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _make_mesh
+    mesh = _make_mesh((1, 1), ("data", "model"))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
     out = reshard(jax.tree.map(np.asarray, params), sh)
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):

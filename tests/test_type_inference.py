@@ -1,7 +1,7 @@
 """Type inference (Algorithm 1): paper examples + hypothesis properties."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.parser import parse_cypher
 from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
