@@ -1,0 +1,92 @@
+"""Derive backend ``CostParams`` alphas from ``BENCH_backends.json``.
+
+The PhysicalSpec cost model (DESIGN.md §2.3) weighs the CBO's Eq. 2/3 terms
+per backend.  This script turns the measured per-query timings of
+``perf_compare --backends`` into relative alphas for the non-reference
+backends, using the benchmark queries as probes of each operator class:
+
+- *expand-dominated* probes (chain patterns — no cycle-closing edges, so no
+  WCOJ membership probes) measure the backend's neighbor-expansion cost
+  relative to numpy;
+- *intersect-heavy* probes (cyclic patterns whose CBO plans close edges via
+  expand-and-intersect) measure the WCOJ membership-probe cost; the
+  expand baseline is divided out.
+
+The derived numbers are hard-coded into each backend's registration (see
+``graphdb/jax_backend.py``) so the CBO can rank operators backend-optimally
+without needing the bench file at import time.  Re-run after re-benchmarking:
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --backends
+    PYTHONPATH=src python -m benchmarks.calibrate_costs [BENCH_backends.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+# Probe classes over the Appendix-A benchmark sets. Chains exercise scan +
+# expand only; cycles additionally pay one-or-more intersect probes per
+# result row (their CBO plans contain ExpandIntersect steps).
+EXPAND_PROBES = ("Qc3a", "Qr3", "Qt1", "Qt2", "Qt3", "ic11", "ic12")
+INTERSECT_PROBES = ("Qc1a", "Qc1b", "Qc2a", "Qc2b", "Qc4a", "Qc4b", "Qr1")
+
+
+def _geomean(xs):
+    xs = [x for x in xs if x and np.isfinite(x)]
+    return float(np.exp(np.mean(np.log(xs)))) if xs else None
+
+
+def calibrate(bench: dict, base: str = "numpy") -> dict:
+    """Per-backend alpha suggestions relative to ``base``."""
+    out = {}
+    by_query = {r["query"]: r for r in bench["results"]}
+
+    def ratios(backend, names):
+        return [by_query[q][f"{backend}_s"] / by_query[q][f"{base}_s"]
+                for q in names
+                if by_query.get(q, {}).get(f"{backend}_s")
+                and by_query.get(q, {}).get(f"{base}_s")]
+
+    for backend in bench["backends"]:
+        if backend == base:
+            continue
+        r_expand = _geomean(ratios(backend, EXPAND_PROBES))
+        r_cycle = _geomean(ratios(backend, INTERSECT_PROBES))
+        if r_expand is None or r_cycle is None:
+            continue
+        # cyclic queries pay expand AND intersect; attribute the slowdown
+        # beyond the expand baseline to the membership probes
+        alpha_intersect = max(r_cycle / r_expand, 1.0) * max(r_expand, 1.0)
+        out[backend] = {
+            "alpha_scan": 1.0,                     # range scans: trivial both
+            "alpha_expand": round(max(r_expand, 0.5), 1),
+            "alpha_intersect": round(alpha_intersect, 1),
+            "alpha_join": 1.0,                     # host-path join inherited
+            "evidence": {
+                "expand_ratio_geomean": round(r_expand, 3),
+                "cycle_ratio_geomean": round(r_cycle, 3),
+                "expand_probes": EXPAND_PROBES,
+                "intersect_probes": INTERSECT_PROBES,
+            },
+        }
+    return out
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_backends.json"
+    with open(path) as f:
+        bench = json.load(f)
+    out = calibrate(bench)
+    print(json.dumps(out, indent=1))
+    for backend, alphas in out.items():
+        print(f"\n# suggested registration for {backend!r}:")
+        print(f"cost=CostParams(alpha_scan={alphas['alpha_scan']}, "
+              f"alpha_expand={alphas['alpha_expand']}, "
+              f"alpha_intersect={alphas['alpha_intersect']}, "
+              f"alpha_join={alphas['alpha_join']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
 """Performance comparisons.
 
-Two modes:
+Three modes:
 
 1. Backend comparison (PhysicalSpec layer): run the LDBC query set through
    every registered execution backend, check row-for-row result parity, and
@@ -9,7 +9,17 @@ Two modes:
        PYTHONPATH=src python -m benchmarks.perf_compare --backends \
            [--sf 0.2] [--queries ic,cbo] [--repeats 3] [--out ...]
 
-2. Legacy sweep comparison (§Perf closing table) of two dry-run result files:
+2. Prepared-query comparison (GraphIrBuilder / prepared lifecycle,
+   DESIGN.md §3): for each parameterized query, time per-execution latency
+   of the unprepared path (full parse + type-inference + RBO + CBO on every
+   run) against ``GOpt.prepare(...).execute(bindings)`` across several
+   bindings, on every backend, checking row parity between the two paths;
+   emits ``BENCH_prepared.json``:
+
+       PYTHONPATH=src python -m benchmarks.perf_compare --prepared \
+           [--sf 0.2] [--repeats 3] [--out BENCH_prepared.json]
+
+3. Legacy sweep comparison (§Perf closing table) of two dry-run result files:
 
        PYTHONPATH=src python -m benchmarks.perf_compare \
            dryrun_results.json dryrun_results_optimized.json
@@ -115,6 +125,111 @@ def run_backends(args) -> dict:
     return out
 
 
+# ----------------------------------------------------------- prepared mode
+
+# 3 parameter bindings per query (the serving scenario: one prepared plan,
+# many executions with fresh values)
+_PREPARED_BINDINGS = {
+    "ic": [{"pid": 3}, {"pid": 5}, {"pid": 9}],
+    "rbo5": [{"id1": 3, "id2": 7}, {"id1": 1, "id2": 4}, {"id1": 2, "id2": 9}],
+    "rbo6": [{"id1": 3, "id2": 7, "len": 64}, {"id1": 1, "id2": 4, "len": 32},
+             {"id1": 2, "id2": 9, "len": 128}],
+}
+
+
+def run_prepared(args) -> dict:
+    import numpy as np
+
+    from benchmarks import queries as Q
+    from repro.core.gopt import GOpt
+    from repro.core.physical_spec import get_spec
+    from repro.graphdb.ldbc import generate_ldbc
+
+    backends = args.backend_list.split(",")
+    for b in backends:
+        get_spec(b)
+    cases = [(name, text, _PREPARED_BINDINGS["ic"])
+             for name, text in Q.QIC.items()]
+    cases.append(("Qr5", Q.QR["Qr5"], _PREPARED_BINDINGS["rbo5"]))
+    cases.append(("Qr6", Q.QR["Qr6"], _PREPARED_BINDINGS["rbo6"]))
+
+    t0 = time.time()
+    print(f"# building LDBC-like store sf={args.sf} + GLogue ...", flush=True)
+    gopt = GOpt(generate_ldbc(sf=args.sf, seed=7))
+    print(f"# store: V={gopt.store.n_vertices} E={gopt.store.n_edges} "
+          f"({time.time() - t0:.1f}s); backends: {backends}", flush=True)
+
+    results, mismatches, regressions = [], [], []
+    for backend in backends:
+        for name, text, bindings in cases:
+            rec = {"query": name, "backend": backend, "match": True,
+                   "executions": len(bindings) * args.repeats}
+            # warmup both paths (absorbs jit/Pallas compilation on jax)
+            opt = gopt.optimize(text, bindings[0], backend=backend)
+            gopt.execute(opt, backend=backend, max_rows=ROW_CAP,
+                         params=bindings[0])
+            pq = gopt.prepare(text, bindings[0], backend=backend)
+            pq.execute(bindings[0], max_rows=ROW_CAP)
+
+            counters0 = dict(gopt.compile_counters)
+            un_s = pr_s = 0.0
+            for params in bindings:
+                for _ in range(args.repeats):
+                    t1 = time.perf_counter()
+                    opt = gopt.optimize(text, params, backend=backend)
+                    ref, _ = gopt.execute(opt, backend=backend,
+                                          max_rows=ROW_CAP, params=params)
+                    un_s += time.perf_counter() - t1
+                    t1 = time.perf_counter()
+                    tbl, _ = pq.execute(params, max_rows=ROW_CAP)
+                    pr_s += time.perf_counter() - t1
+                    if not _tables_equal(ref, tbl):
+                        rec["match"] = False
+            if dict(gopt.compile_counters) != {
+                    k: v + rec["executions"] for k, v in counters0.items()}:
+                # unprepared path compiles once per execution; the prepared
+                # path must add nothing on top of that
+                rec["recompiled"] = True
+                rec["match"] = False
+            n = rec["executions"]
+            rec["unprepared_s"] = un_s / n
+            rec["prepared_s"] = pr_s / n
+            rec["speedup"] = un_s / pr_s if pr_s else None
+            results.append(rec)
+            if not rec["match"]:
+                mismatches.append(f"{backend}/{name}")
+            if rec["prepared_s"] >= rec["unprepared_s"]:
+                regressions.append(f"{backend}/{name}")
+            print(f"{backend}/{name}: unprepared={rec['unprepared_s']:.5f}s "
+                  f"prepared={rec['prepared_s']:.5f}s "
+                  f"speedup={rec['speedup']:.1f}x match={rec['match']}",
+                  flush=True)
+
+    geo = {}
+    for backend in backends:
+        sp = [r["speedup"] for r in results
+              if r["backend"] == backend and r["speedup"]]
+        geo[f"{backend}_speedup_geomean"] = (
+            float(np.exp(np.mean(np.log(sp)))) if sp else None)
+    # gate on the aggregate, not per-query regressions: single-query timing
+    # flips are noise at smoke scale, but a backend whose *geomean* prepared
+    # speedup drops to <=1x has lost the point of preparing
+    slow_backends = [b for b in backends
+                     if geo.get(f"{b}_speedup_geomean") is not None
+                     and geo[f"{b}_speedup_geomean"] <= 1.0]
+    out = {"sf": args.sf, "backends": backends, "repeats": args.repeats,
+           "results": results, "mismatches": mismatches,
+           "regressions": regressions, "slow_backends": slow_backends,
+           "summary": geo}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"# wrote {args.out}; mismatches={mismatches or 'none'} "
+          f"regressions={regressions or 'none'} "
+          f"slow_backends={slow_backends or 'none'} summary={geo} "
+          f"({time.time() - t0:.1f}s total)")
+    return out
+
+
 # ------------------------------------------------------------- legacy mode
 
 def legacy_sweep(base_p: str, opt_p: str) -> None:
@@ -147,18 +262,25 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--backends", action="store_true",
                     help="compare PhysicalSpec execution backends")
+    ap.add_argument("--prepared", action="store_true",
+                    help="compare prepared vs unprepared execution")
     ap.add_argument("--backend-list", default="numpy,jax")
     ap.add_argument("--sf", type=float, default=0.2)
     ap.add_argument("--queries", default="ic,cbo",
-                    help="comma list of ic,cbo,rbo,typeinf")
+                    help="comma list of ic,cbo,rbo,typeinf (--backends mode)")
     ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--out", default="BENCH_backends.json")
+    ap.add_argument("--out", default=None)
     ap.add_argument("files", nargs="*",
                     help="legacy mode: base/optimized dryrun result files")
     args = ap.parse_args()
     if args.backends:
+        args.out = args.out or "BENCH_backends.json"
         out = run_backends(args)
         sys.exit(1 if out["mismatches"] or out["unverified"] else 0)
+    if args.prepared:
+        args.out = args.out or "BENCH_prepared.json"
+        out = run_prepared(args)
+        sys.exit(1 if out["mismatches"] or out["slow_backends"] else 0)
     base_p = args.files[0] if args.files else "dryrun_results.json"
     opt_p = (args.files[1] if len(args.files) > 1
              else "dryrun_results_optimized.json")

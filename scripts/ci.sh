@@ -1,13 +1,18 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + a short backend-parity smoke benchmark.
+# CI entry point: collection gate + tier-1 test suite + smoke benchmarks.
 #
-#   scripts/ci.sh            # full tier-1 + smoke bench
+#   scripts/ci.sh            # full tier-1 + smoke benches
 #   SKIP_BENCH=1 scripts/ci.sh   # tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+# fail fast if ANY test module fails to collect (import errors etc.) —
+# a module that cannot collect must fail the run, not silently skip
+echo "== collection gate =="
+python -m pytest -q --collect-only > /dev/null
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
@@ -19,5 +24,12 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
   echo "== backend-parity smoke bench =="
   python -m benchmarks.perf_compare --backends --sf 0.05 --repeats 1 \
       --queries ic --out BENCH_backends_smoke.json
+
+  # prepared-query smoke: prepare once, execute with 3 bindings on both
+  # backends, row-compare against the unprepared path; exits nonzero on
+  # any mismatch or on a recompile in the prepared path.
+  echo "== prepared-query smoke bench =="
+  python -m benchmarks.perf_compare --prepared --sf 0.05 --repeats 1 \
+      --out BENCH_prepared_smoke.json
 fi
 echo "== CI OK =="

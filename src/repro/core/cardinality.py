@@ -41,8 +41,14 @@ class Statistics:
 
 
 def predicate_selectivity(stats: Statistics, types: frozenset[str],
-                          preds: list) -> float:
-    """Independence-combined selectivity of a vertex's fused predicates."""
+                          preds: list, params: dict | None = None) -> float:
+    """Independence-combined selectivity of a vertex's fused predicates.
+
+    ``params`` supplies build-time bindings for late-bound ``ir.Param``
+    nodes (prepared-query "value peeking"): an ``IN $S`` predicate is
+    |S|/NDV when the set is bound, else an agnostic 0.5.  Equality against a
+    ``Param`` is 1/NDV either way — value-independent, so the cached plan
+    stays valid across bindings."""
     sel = 1.0
     for p in preds:
         if isinstance(p, ir.Cmp) and isinstance(p.lhs, ir.Prop):
@@ -50,9 +56,15 @@ def predicate_selectivity(stats: Statistics, types: frozenset[str],
                           default=1.0), 1.0)
             sel *= (1.0 / ndv) if p.op == "=" else (1.0 / 3.0)
         elif isinstance(p, ir.InSet) and isinstance(p.item, ir.Prop):
+            values = p.values
+            if isinstance(values, ir.Param):
+                values = (params or {}).get(values.name)
+            if values is None:
+                sel *= 0.5
+                continue
             ndv = max(max((stats.ndv(t, p.item.name) for t in types),
                           default=1.0), 1.0)
-            sel *= min(len(p.values) / ndv, 1.0)
+            sel *= min(len(values) / ndv, 1.0)
         else:
             sel *= 0.5
     return sel
@@ -60,10 +72,11 @@ def predicate_selectivity(stats: Statistics, types: frozenset[str],
 
 class CardEstimator:
     def __init__(self, stats: Statistics, glogue: GLogue | None = None,
-                 use_selectivity: bool = True):
+                 use_selectivity: bool = True, params: dict | None = None):
         self.stats = stats
         self.glogue = glogue
         self.use_selectivity = use_selectivity
+        self.params = dict(params or {})   # build-time bindings for Params
         self._memo: dict = {}
 
     # ----------------------------------------------------------- primitives
@@ -72,7 +85,8 @@ class CardEstimator:
         v = pattern.vertices[alias]
         f = sum(self.stats.vertex_type_freq(t) for t in v.types)
         if with_preds and self.use_selectivity and v.predicates:
-            f *= predicate_selectivity(self.stats, v.types, v.predicates)
+            f *= predicate_selectivity(self.stats, v.types, v.predicates,
+                                       self.params)
         return max(f, 1e-9)
 
     def edge_freq(self, edge: PatternEdge) -> float:
@@ -85,7 +99,8 @@ class CardEstimator:
         v = pattern.vertices[alias]
         if not (self.use_selectivity and v.predicates):
             return 1.0
-        return predicate_selectivity(self.stats, v.types, v.predicates)
+        return predicate_selectivity(self.stats, v.types, v.predicates,
+                                     self.params)
 
     def expand_sigma(self, pattern: Pattern, edge: PatternEdge,
                      new_alias: str | None) -> float:

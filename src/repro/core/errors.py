@@ -1,0 +1,42 @@
+"""Shared exception types for the GOpt front-end (DESIGN.md §3).
+
+``BuildError`` is raised eagerly by ``GraphIrBuilder`` at the offending
+construction step (unknown label / alias / property), with the step position
+in the message — queries fail at build time, not deep inside the optimizer
+or the engine.  ``ParamError`` covers every parameter-lifecycle failure:
+structural parameters missing at build time, unbound parameters at
+execution, and bindings that name no declared parameter.
+"""
+from __future__ import annotations
+
+
+class GOptError(Exception):
+    """Base class for all GOpt front-end errors."""
+
+
+class BuildError(GOptError, ValueError):
+    """Build-time validation failure in ``GraphIrBuilder``."""
+
+    def __init__(self, message: str, step: tuple[int, str] | None = None):
+        self.step = step
+        if step is not None:
+            message = f"step {step[0]} ({step[1]}): {message}"
+        super().__init__(message)
+
+
+class ParamError(GOptError, LookupError):
+    """A query-parameter problem, naming the offending parameters and the
+    declared set."""
+
+    def __init__(self, message: str, missing=(), extra=(), declared=()):
+        self.missing = tuple(sorted(missing))
+        self.extra = tuple(sorted(extra))
+        self.declared = tuple(sorted(declared))
+        detail = []
+        if self.missing:
+            detail.append("missing: " + ", ".join(f"${p}" for p in self.missing))
+        if self.extra:
+            detail.append("unexpected: " + ", ".join(f"${p}" for p in self.extra))
+        detail.append("declared: {" + ", ".join(f"${p}" for p in self.declared)
+                      + "}")
+        super().__init__(f"{message} ({'; '.join(detail)})")

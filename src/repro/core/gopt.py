@@ -1,14 +1,24 @@
 """GOpt facade — the paper's full pipeline (Fig. 3):
 
-    Cypher/Gremlin -> unified IR -> type inference/validation -> RBO -> CBO
-    -> physical plan -> binding-table engine execution.
+    Cypher/Gremlin -> unified GIR (GraphIrBuilder) -> type inference -> RBO
+    -> CBO -> physical plan -> binding-table engine execution.
 
 ``GOpt`` owns the metadata providers (schema + GLogue) and exposes
 ``optimize`` / ``execute`` with per-stage switches so benchmarks can ablate
 each technique exactly like the paper's experiments.
+
+On top of the one-shot pipeline sits the **prepared-query lifecycle**
+(DESIGN.md §3): ``prepare(query)`` runs the compile pipeline once and caches
+the optimized physical plan keyed by (normalized GIR canonical form,
+backend, optimizer flags, build-time bindings); ``PreparedQuery.execute(
+params)`` skips straight to the engine with fresh parameter bindings.
+``run()`` is sugar over an LRU of prepared queries — repeated calls with new
+bindings for the same query text pay compile cost once.  ``compile_counters``
+meters the pipeline stages so tests (and benchmarks) can assert what re-ran.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 
@@ -25,6 +35,19 @@ from repro.core.type_inference import INVALID, infer_types
 from repro.graphdb.engine import Engine, ExecStats, Table
 from repro.graphdb.storage import GraphStore
 
+_OPT_KEYS = ("type_inference", "rbo", "cbo", "use_glogue", "use_selectivity")
+
+
+def _freeze(v):
+    """Hashable mirror of a binding value (lists/dicts/sets -> tuples)."""
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, (set, frozenset)):
+        return tuple(sorted(_freeze(x) for x in v))
+    return v
+
 
 @dataclasses.dataclass
 class OptimizedQuery:
@@ -34,18 +57,68 @@ class OptimizedQuery:
     invalid: bool = False
 
 
+@dataclasses.dataclass
+class PreparedQuery:
+    """A compiled, reusable query: optimized physical plan + metadata.
+
+    ``execute(params)`` binds late-bound ``ir.Param`` nodes and goes straight
+    to the engine — no parse / type inference / RBO / CBO re-runs.  Obtained
+    from ``GOpt.prepare``; instances are shared via the plan cache, so treat
+    them as immutable."""
+    gopt: "GOpt"
+    opt: OptimizedQuery
+    spec: PhysicalSpec
+    cache_key: tuple
+    source: str | None = None           # query text, when prepared from text
+    executions: int = 0
+
+    @property
+    def logical(self) -> ir.LogicalPlan:
+        return self.opt.logical
+
+    @property
+    def physical(self) -> PlanNode:
+        return self.opt.physical
+
+    @property
+    def compile_s(self) -> float:
+        return self.opt.compile_s
+
+    def declared_params(self) -> frozenset[str]:
+        return frozenset(self.opt.logical.declared_params())
+
+    def execute(self, params: dict | None = None,
+                **exec_kw) -> tuple[Table, ExecStats]:
+        self.executions += 1
+        return self.gopt.execute(self.opt, params=params,
+                                 backend=exec_kw.pop("backend", self.spec),
+                                 **exec_kw)
+
+    def explain(self) -> str:
+        if self.opt.physical is None:
+            return "<invalid query>"
+        return self.opt.physical.pretty()
+
+
 class GOpt:
     def __init__(self, store: GraphStore, glogue_k: int = 3,
                  build_glogue: bool = True,
-                 backend: str | PhysicalSpec = "numpy"):
+                 backend: str | PhysicalSpec = "numpy",
+                 plan_cache_size: int = 256):
         self.store = store
         self.schema = store.schema
         self.stats = Statistics(store)
         self.glogue = GLogue(store, k=glogue_k) if build_glogue else None
         self.spec = get_spec(backend)
+        # pipeline-stage meters: how many times each compile stage ran
+        self.compile_counters: collections.Counter = collections.Counter()
+        self.plan_cache_size = plan_cache_size
+        self._plan_cache: collections.OrderedDict = collections.OrderedDict()
+        self._text_cache: collections.OrderedDict = collections.OrderedDict()
 
     # ----------------------------------------------------------------- parse
     def parse(self, query: str, params: dict | None = None) -> ir.LogicalPlan:
+        self.compile_counters["parse"] += 1
         return parse_cypher(query, self.schema, params)
 
     # -------------------------------------------------------------- optimize
@@ -58,11 +131,17 @@ class GOpt:
                  use_selectivity: bool = True,
                  backend: str | PhysicalSpec | None = None) -> OptimizedQuery:
         t0 = time.perf_counter()
-        plan = (self.parse(query, params) if isinstance(query, str)
-                else query)
+        if isinstance(query, str):
+            plan = self.parse(query, params)
+        else:
+            plan = query
+            if params:
+                for k, v in params.items():
+                    plan.params.setdefault(k, v)
         pattern = expand_path_edges(plan.pattern(), self.schema)
         plan.replace_pattern(pattern)
         if type_inference:
+            self.compile_counters["type_inference"] += 1
             inferred = infer_types(pattern, self.schema)
             if inferred == INVALID:
                 return OptimizedQuery(plan, None, time.perf_counter() - t0,
@@ -70,13 +149,16 @@ class GOpt:
             pattern = inferred
             plan.replace_pattern(pattern)
         if rbo:
+            self.compile_counters["rbo"] += 1
             plan = apply_rules(plan, DEFAULT_RULES)
             pattern = plan.pattern()
         est = CardEstimator(self.stats,
                             self.glogue if use_glogue else None,
-                            use_selectivity=use_selectivity)
+                            use_selectivity=use_selectivity,
+                            params=plan.params)
         spec = self.spec if backend is None else get_spec(backend)
         if cbo and pattern.is_connected():
+            self.compile_counters["cbo"] += 1
             physical = GraphOptimizer(est, spec=spec).optimize(pattern)
         else:
             # disconnected patterns: cross-product plan (Algorithm 2
@@ -84,12 +166,93 @@ class GOpt:
             physical = default_left_deep_plan(pattern)
         return OptimizedQuery(plan, physical, time.perf_counter() - t0)
 
+    # --------------------------------------------------------------- prepare
+    def prepare(self, query: str | ir.LogicalPlan,
+                params: dict | None = None,
+                backend: str | PhysicalSpec | None = None,
+                **opts) -> PreparedQuery:
+        """Compile once, execute many: returns a ``PreparedQuery`` whose
+        optimized physical plan is cached keyed by (normalized GIR canonical
+        form, backend, optimizer flags, build-time bindings).
+
+        ``params`` here binds *structural* parameters (hop counts) and
+        provides defaults / selectivity hints for value parameters; fresh
+        bindings go to ``PreparedQuery.execute(params)``.  Two different
+        query strings (or a Cypher string and a Gremlin traversal) that
+        lower to the same GIR share one cached plan."""
+        unknown = set(opts) - set(_OPT_KEYS)
+        if unknown:
+            raise TypeError(f"unknown optimizer option(s): {sorted(unknown)}")
+        spec = self.spec if backend is None else get_spec(backend)
+        text = query if isinstance(query, str) else None
+        opts_key = tuple(sorted(opts.items()))
+
+        # fast path: seen this exact query text before -> skip the parse
+        text_key = None
+        if text is not None:
+            text_key = (text, spec.name, opts_key)
+            for consumed, pq in self._text_cache.get(text_key, ()):
+                if all((params or {}).get(k) == v for k, v in consumed):
+                    self._text_cache.move_to_end(text_key)
+                    return pq
+
+        if text is not None:
+            plan = self.parse(text, params)
+        else:
+            plan = query.copy()      # never mutate the caller's plan
+            if params:
+                for k, v in params.items():
+                    plan.params.setdefault(k, v)
+
+        # value parameters stay out of the key: structural params are
+        # already reflected in the pattern shape (hence in the canonical
+        # form), and value bindings only steer cost estimation ("peeking"),
+        # so plans are interchangeable across bindings
+        key = (ir.canonical_form(plan), spec.name, opts_key)
+        pq = self._plan_cache.get(key)
+        if pq is None:
+            pq = PreparedQuery(self, self.optimize(plan, backend=spec, **opts),
+                               spec, key, source=text)
+            # prepared queries are strict: drop value-param bindings so they
+            # cannot silently act as execution defaults for a later caller —
+            # every referenced param must be bound at execute().  Structural
+            # bindings (baked into the pattern) are kept for bookkeeping.
+            referenced = pq.logical.referenced_params()
+            for k in [k for k in pq.logical.params if k in referenced]:
+                del pq.logical.params[k]
+            self._plan_cache[key] = pq
+            if len(self._plan_cache) > self.plan_cache_size:
+                self._plan_cache.popitem(last=False)
+        else:
+            self._plan_cache.move_to_end(key)
+
+        if text_key is not None:
+            # structural bindings consumed at parse time are baked into the
+            # pattern; remember them so a later call with different values
+            # misses this entry and re-prepares
+            consumed = tuple(sorted(
+                (k, _freeze(v)) for k, v in
+                (pq.logical.hints.get("structural_params") or {}).items()))
+            entries = self._text_cache.setdefault(text_key, [])
+            entries.append((consumed, pq))
+            del entries[:-16]     # cap variants per text (structural params)
+            self._text_cache.move_to_end(text_key)
+            if len(self._text_cache) > self.plan_cache_size:
+                self._text_cache.popitem(last=False)
+        return pq
+
+    def plan_cache_info(self) -> dict:
+        return {"plans": len(self._plan_cache),
+                "texts": len(self._text_cache),
+                "max": self.plan_cache_size}
+
     # --------------------------------------------------------------- execute
     def execute(self, opt: OptimizedQuery,
                 fuse_expand: bool | None = None,
                 trim_fields: bool = True,
                 max_rows: int = 100_000_000,
-                backend: str | PhysicalSpec | None = None
+                backend: str | PhysicalSpec | None = None,
+                params: dict | None = None
                 ) -> tuple[Table, ExecStats]:
         if opt.invalid:
             return Table.empty(), ExecStats()
@@ -98,20 +261,31 @@ class GOpt:
         spec = self.spec if backend is None else get_spec(backend)
         eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
                      max_rows=max_rows, backend=spec)
-        return eng.run(opt.logical, opt.physical)
+        return eng.run(opt.logical, opt.physical, params=params)
 
-    def run(self, query: str, params: dict | None = None, **kw):
-        backend = kw.get("backend")
-        return self.execute(self.optimize(query, params, **{
-            k: v for k, v in kw.items()
-            if k in ("type_inference", "rbo", "cbo", "use_glogue",
-                     "use_selectivity", "backend")}), backend=backend)
+    def run(self, query: str | ir.LogicalPlan, params: dict | None = None,
+            **kw) -> tuple[Table, ExecStats]:
+        """Prepared-query sugar: resolve the query through the prepared-plan
+        LRU, then execute with ``params``.  Repeated runs of one query text
+        with fresh bindings compile exactly once."""
+        opts = {k: v for k, v in kw.items() if k in _OPT_KEYS}
+        exec_kw = {k: v for k, v in kw.items()
+                   if k not in _OPT_KEYS and k != "backend"}
+        pq = self.prepare(query, params, backend=kw.get("backend"), **opts)
+        # run() is shared-dict friendly: forward only the bindings this
+        # query declares (whichever call populated the cache), so unused
+        # keys never trip the strict extra-binding check in execute().  A
+        # typo'd name still surfaces — as the real parameter left unbound.
+        declared = pq.declared_params()
+        bound = {k: v for k, v in (params or {}).items() if k in declared}
+        return pq.execute(bound, **exec_kw)
 
     # ------------------------------------------------------------- baselines
     def estimator(self, use_glogue: bool = True,
-                  use_selectivity: bool = True) -> CardEstimator:
+                  use_selectivity: bool = True,
+                  params: dict | None = None) -> CardEstimator:
         return CardEstimator(self.stats, self.glogue if use_glogue else None,
-                             use_selectivity=use_selectivity)
+                             use_selectivity=use_selectivity, params=params)
 
     def neo4j_style_plan(self, pattern: Pattern) -> PlanNode:
         """Low-order foil: no type inference assumed done by caller, no

@@ -1,48 +1,42 @@
-"""Gremlin-style traversal builder (paper §4.2's second frontend).
+"""Gremlin-style traversal frontend (paper §4.2's second frontend).
 
-A fluent builder that constructs the same unified-IR LogicalPlan the Cypher
-parser produces — demonstrating the IR's language independence:
+A thin sugar layer over ``GraphIrBuilder`` (DESIGN.md §3) — every step
+delegates to the unified builder, demonstrating the IR's language
+independence: the Cypher parser and this traversal produce canonically
+identical GIR for equivalent queries.
 
     g(schema).V().as_("v1").out().as_("v2").out("LOCATEDIN", "PRODUCEDIN") \
         .as_("v3", types=["PLACE"]) \
         .where(Cmp("=", Prop("v3", "name"), Lit("China"))) \
-        .group_count("v1").plan()
+        .group_count("v1")
+
+Classic terminal steps (``count`` / ``group_count`` / ``values``) return the
+``LogicalPlan`` directly.  For relational tails (ORDER BY / LIMIT), chain
+``group_by`` / ``project`` / ``order_by`` / ``limit`` and finish with
+``plan()``.  Late-bound parameters come from ``.param(name)``.
 """
 from __future__ import annotations
 
 from repro.core import ir
-from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
+from repro.core.ir_builder import GraphIrBuilder
+from repro.core.pattern import BOTH, IN, OUT
 from repro.core.schema import GraphSchema
 
 
 class GremlinTraversal:
-    def __init__(self, schema: GraphSchema):
-        self.schema = schema
-        self.pattern = Pattern()
-        self._preds: list = []
-        self._anon = 0
-        self._cur: str | None = None
+    def __init__(self, schema: GraphSchema, params: dict | None = None):
+        self.b = GraphIrBuilder(schema, params)
 
-    def _fresh(self, p):
-        self._anon += 1
-        return f"_{p}{self._anon}"
-
+    # -- pattern steps ------------------------------------------------------
     def V(self, *types: str) -> "GremlinTraversal":
-        alias = self._fresh("v")
-        self.pattern.add_vertex(alias, self.schema.vertex_constraint(list(types)))
-        self._cur = alias
+        self.b.scan(None, list(types) or None)
         return self
 
     def _expand(self, labels, direction):
-        # materialize target immediately with an anonymous alias; `as_` renames
-        src = self._cur
-        dst = self._fresh("v")
-        self.pattern.add_vertex(dst, self.schema.all_vertex_types())
-        e = PatternEdge(self._fresh("e"), src, dst,
-                        self.schema.edge_constraint(list(labels) or None),
-                        direction, 1)
-        self.pattern.add_edge(e)
-        self._cur = dst
+        # materialize target immediately with an anonymous alias; `as_`
+        # renames (alias management lives in the builder)
+        self.b.expand(list(labels) or None, direction=direction)
+        self.b.get_vertex()
         return self
 
     def out(self, *labels):
@@ -54,73 +48,68 @@ class GremlinTraversal:
     def both(self, *labels):
         return self._expand(labels, BOTH)
 
+    def out_path(self, hops, *labels, direction: str = OUT):
+        """Multi-hop expansion (EXPAND_PATH); ``hops`` may be a structural
+        parameter name bound via the traversal's ``params``."""
+        self.b.expand_path(list(labels) or None, hops=hops,
+                           direction=direction)
+        self.b.get_vertex()
+        return self
+
     def as_(self, name: str, types=None) -> "GremlinTraversal":
         """Rename the current anonymous vertex; optionally constrain types."""
-        old = self._cur
-        if name in self.pattern.vertices:
-            # closing a cycle: merge old into existing alias
-            tgt = self.pattern.vertices[name]
-            ov = self.pattern.vertices.pop(old)
-            tgt.types = tgt.types & ov.types
-            for e in self.pattern.edges:
-                if e.src == old:
-                    e.src = name
-                if e.dst == old:
-                    e.dst = name
-        else:
-            v = self.pattern.vertices.pop(old)
-            v.alias = name
-            self.pattern.vertices[name] = v
-            for e in self.pattern.edges:
-                if e.src == old:
-                    e.src = name
-                if e.dst == old:
-                    e.dst = name
-        if types:
-            v = self.pattern.vertices[name]
-            v.types = v.types & self.schema.vertex_constraint(list(types))
-        self._cur = name
+        self.b.alias_as(name, types)
         return self
 
     def select(self, name: str) -> "GremlinTraversal":
-        if name not in self.pattern.vertices:
-            raise KeyError(name)
-        self._cur = name
+        self.b.at(name)
         return self
 
     def where(self, pred) -> "GremlinTraversal":
-        self._preds.append(pred)
+        self.b.where(pred)
         return self
 
     def has(self, prop: str, value) -> "GremlinTraversal":
-        self._preds.append(ir.Cmp("=", ir.Prop(self._cur, prop), ir.Lit(value)))
+        val = value if isinstance(value, (ir.Param, ir.Lit)) else ir.Lit(value)
+        self.b.where(ir.Cmp("=", ir.Prop(self.b.current, prop), val))
         return self
 
-    # -- terminal steps -----------------------------------------------------
-    def _base_ops(self):
-        ops: list = [ir.MatchPattern(self.pattern)]
-        pred = ir.make_and(self._preds)
-        if pred is not None:
-            ops.append(ir.Select(pred))
-        return ops
+    def param(self, name: str) -> ir.Param:
+        return self.b.param(name)
 
-    def count(self, alias: str | None = None) -> ir.LogicalPlan:
-        ops = self._base_ops()
-        arg = ir.Var(alias or self._cur)
-        ops.append(ir.GroupBy([], [(ir.Agg("COUNT", arg), "count")]))
-        return ir.LogicalPlan(ops)
+    # -- chainable relational steps (finish with .plan()) -------------------
+    def project(self, items, distinct: bool = False) -> "GremlinTraversal":
+        self.b.project(items, distinct=distinct)
+        return self
 
-    def group_count(self, alias: str) -> ir.LogicalPlan:
-        ops = self._base_ops()
-        ops.append(ir.GroupBy([(ir.Var(alias), alias)],
-                              [(ir.Agg("COUNT", None), "count")]))
-        return ir.LogicalPlan(ops)
+    def group_by(self, keys, aggs) -> "GremlinTraversal":
+        self.b.group(keys, aggs)
+        return self
+
+    def order_by(self, *items, limit: int | None = None) -> "GremlinTraversal":
+        self.b.order(list(items), limit=limit)
+        return self
+
+    def limit(self, n: int) -> "GremlinTraversal":
+        self.b.limit(n)
+        return self
+
+    def plan(self) -> ir.LogicalPlan:
+        return self.b.build()
+
+    # -- classic terminal steps --------------------------------------------
+    def count(self, alias: str | None = None,
+              as_: str = "count") -> ir.LogicalPlan:
+        arg = ir.Var(alias or self.b.current)
+        return self.b.group([], [(ir.Agg("COUNT", arg), as_)]).build()
+
+    def group_count(self, alias: str, as_: str = "count") -> ir.LogicalPlan:
+        return self.b.group([(ir.Var(alias), alias)],
+                            [(ir.Agg("COUNT", None), as_)]).build()
 
     def values(self, *items) -> ir.LogicalPlan:
-        ops = self._base_ops()
-        ops.append(ir.Project([(it, repr(it)) for it in items]))
-        return ir.LogicalPlan(ops)
+        return self.b.project(list(items)).build()
 
 
-def g(schema: GraphSchema) -> GremlinTraversal:
-    return GremlinTraversal(schema)
+def g(schema: GraphSchema, params: dict | None = None) -> GremlinTraversal:
+    return GremlinTraversal(schema, params)

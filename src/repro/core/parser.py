@@ -1,10 +1,14 @@
 """Cypher-subset frontend (paper §4.2).
 
-Parses PatRelQuery written in Cypher into the unified IR LogicalPlan:
-``MATCH`` clauses become a MATCH_PATTERN (built from SCAN / EXPAND_EDGE /
-GET_VERTEX / EXPAND_PATH parses, kept here directly as the semantically
-equivalent Pattern), ``WHERE`` becomes SELECT, ``RETURN``/``ORDER``/``LIMIT``
-become PROJECT / GROUP / ORDER / LIMIT.
+Tokenizer + grammar only: parsing PatRelQuery text drives the unified
+``GraphIrBuilder`` (``core/ir_builder.py``), which owns alias management,
+schema-constraint lookup and eager validation.  ``$params`` are late bound —
+they lower to first-class ``ir.Param`` nodes resolved at execution time, so
+a parsed/optimized plan is reusable across bindings (the prepared-query
+path, DESIGN.md §3).  The only exception is *structural* parameters (hop
+counts ``*$h``), which change the pattern shape and must be bound at parse
+time via the ``params`` argument; any ``params`` given here also become the
+plan's default bindings and the CBO's selectivity hints.
 
 Supported grammar (enough for every query in the paper's Appendix A):
 
@@ -13,7 +17,7 @@ Supported grammar (enough for every query in the paper's Appendix A):
                  (ORDER BY expr [ASC|DESC] (',' ...)*)? (LIMIT int)?
     path      := node (edge node)*
     node      := '(' [alias] [':' NAME ('|' NAME)*] [props] ')'
-    edge      := '-[' [alias] [':' NAME ('|' NAME)*] ['*' int] ']->' etc.
+    edge      := '-[' [alias] [':' NAME ('|' NAME)*] ['*' (int|$param)] ']->'
 
 A Gremlin-style builder API is provided by ``repro.core.gremlin``.
 """
@@ -22,7 +26,8 @@ from __future__ import annotations
 import re
 
 from repro.core import ir
-from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
+from repro.core.ir_builder import GraphIrBuilder
+from repro.core.pattern import BOTH, IN, OUT
 from repro.core.schema import GraphSchema
 
 _TOKEN_RE = re.compile(r"""
@@ -62,14 +67,9 @@ def _tokenize(text: str):
 class CypherParser:
     def __init__(self, schema: GraphSchema, params: dict | None = None):
         self.schema = schema
-        self.params = params or {}
-        self._anon = 0
+        self.b = GraphIrBuilder(schema, params)
 
     # ------------------------------------------------------------------ util
-    def _fresh(self, prefix):
-        self._anon += 1
-        return f"_{prefix}{self._anon}"
-
     def _peek(self):
         return self.toks[self.i]
 
@@ -91,33 +91,22 @@ class CypherParser:
             raise SyntaxError(f"expected {val or kind}, got {self._peek()}")
         return got
 
-    def _param(self, name):
-        key = name[1:]
-        if key not in self.params:
-            raise KeyError(f"missing query parameter ${key}")
-        return self.params[key]
-
     # ----------------------------------------------------------------- parse
     def parse(self, text: str) -> ir.LogicalPlan:
         self.toks = _tokenize(text)
         self.i = 0
-        pattern = Pattern()
-        prop_preds = []
+        b = self.b
+        saw_match = False
         while self._accept("kw", "MATCH"):
-            self._parse_path(pattern, prop_preds)
+            saw_match = True
+            self._parse_path()
             while self._accept("op", ","):
-                self._parse_path(pattern, prop_preds)
-        if not pattern.vertices:
+                self._parse_path()
+        if not saw_match:
             raise SyntaxError("query must start with MATCH")
 
-        ops: list = [ir.MatchPattern(pattern)]
-
-        where = None
         if self._accept("kw", "WHERE"):
-            where = self._expr()
-        where = ir.make_and([p for p in prop_preds] + ([where] if where else []))
-        if where is not None:
-            ops.append(ir.Select(where))
+            b.select(self._expr())
 
         self._expect("kw", "RETURN")
         distinct = bool(self._accept("kw", "DISTINCT"))
@@ -127,64 +116,63 @@ class CypherParser:
 
         has_agg = any(isinstance(e, ir.Agg) for e, _ in items)
         if has_agg:
-            keys = [(e, n) for e, n in items if not isinstance(e, ir.Agg)]
-            aggs = [(e, n) for e, n in items if isinstance(e, ir.Agg)]
-            ops.append(ir.GroupBy(keys, aggs))
+            b.group([(e, n) for e, n in items if not isinstance(e, ir.Agg)],
+                    [(e, n) for e, n in items if isinstance(e, ir.Agg)])
         else:
-            ops.append(ir.Project(items, distinct=distinct))
+            b.project(items, distinct=distinct)
 
         if self._accept("kw", "ORDER"):
             self._expect("kw", "BY")
             oitems = [self._order_item(items)]
             while self._accept("op", ","):
                 oitems.append(self._order_item(items))
-            ops.append(ir.OrderBy(oitems))
+            b.order(oitems)
         if self._accept("kw", "LIMIT"):
-            n = int(self._expect("num"))
-            ops.append(ir.Limit(n))
+            b.limit(int(self._expect("num")))
         self._expect("eof")
-        return ir.LogicalPlan(ops, dict(self.params))
+        return b.build()
 
     # ------------------------------------------------------------- patterns
-    def _parse_path(self, pattern: Pattern, prop_preds: list):
-        prev = self._node(pattern, prop_preds)
+    def _parse_path(self):
+        alias, types, props = self._node()
+        self.b.scan(alias, types)
+        self._node_props(self.b.current, props)
         while self._peek() in (("op", "-"), ("op", "<-")):
-            direction, alias, labels, hops = self._edge()
-            nxt = self._node(pattern, prop_preds)
-            triples = self.schema.edge_constraint(labels)
-            if direction == "L":  # <-[..]-  : edge from nxt to prev
-                e = PatternEdge(alias, prev, nxt, triples, IN, hops)
-            elif direction == "R":
-                e = PatternEdge(alias, prev, nxt, triples, OUT, hops)
-            else:
-                e = PatternEdge(alias, prev, nxt, triples, BOTH, hops)
-            pattern.add_edge(e)
-            prev = nxt
+            direction, ealias, labels, hops = self._edge()
+            nalias, ntypes, nprops = self._node()
+            self.b.expand(labels, direction=direction, alias=ealias,
+                          hops=hops)
+            self.b.get_vertex(nalias, ntypes)
+            self._node_props(self.b.current, nprops)
 
-    def _node(self, pattern: Pattern, prop_preds: list) -> str:
+    def _node_props(self, alias: str, props: list):
+        for prop, val in props:
+            self.b.select(ir.Cmp("=", ir.Prop(alias, prop), val))
+
+    def _node(self):
+        """Grammar only: returns (alias|None, types|None, [(prop, value)])."""
         self._expect("op", "(")
-        alias = self._accept("name") or self._fresh("v")
+        alias = self._accept("name")
         types = None
         if self._accept("op", ":"):
             types = [self._expect("name").upper()]
             while self._accept("op", "|"):
                 types.append(self._expect("name").upper())
+        props = []
         if self._peek() == ("op", "{"):
             self._next()
             while True:
                 prop = self._expect("name")
                 self._expect("op", ":")
-                val = self._literal()
-                prop_preds.append(ir.Cmp("=", ir.Prop(alias, prop), ir.Lit(val)))
+                props.append((prop, self._value()))
                 if not self._accept("op", ","):
                     break
             self._expect("op", "}")
         self._expect("op", ")")
-        pattern.add_vertex(alias, self.schema.vertex_constraint(types))
-        return alias
+        return alias, types, props
 
     def _edge(self):
-        """Returns (direction L|R|B, alias, labels|None, hops)."""
+        """Returns (direction, alias|None, labels|None, hops)."""
         left = self._accept("op", "<-")
         if left is None:
             self._expect("op", "-")
@@ -200,19 +188,19 @@ class CypherParser:
                 if k == "num":
                     hops = int(self._next()[1])
                 elif k == "param":
-                    hops = int(self._param(self._next()[1]))
+                    hops = self._next()[1]    # structural: builder resolves
                 else:
-                    raise SyntaxError("EXPAND_PATH needs an explicit hop count")
+                    raise SyntaxError("EXPAND_PATH needs an explicit hop "
+                                      "count")
             self._expect("op", "]")
-        alias = alias or self._fresh("e")
         if left:
             self._expect("op", "-")
-            return "L", alias, labels, hops
+            return IN, alias, labels, hops
         # either -> or -
         if self._accept("op", "->"):
-            return "R", alias, labels, hops
+            return OUT, alias, labels, hops
         self._expect("op", "-")
-        return "B", alias, labels, hops
+        return BOTH, alias, labels, hops
 
     # ----------------------------------------------------------- expressions
     def _return_item(self):
@@ -269,20 +257,20 @@ class CypherParser:
             return ir.Cmp("<>" if v == "!=" else v, l, r)
         if k == "kw" and v == "IN":
             self._next()
-            return ir.InSet(l, tuple(self._value_list()))
+            return ir.InSet(l, self._value_list())
         return l
 
     def _value_list(self):
         k, v = self._peek()
         if k == "param":
             self._next()
-            return list(self._param(v))
+            return self.b.param(v)           # whole-list parameter
         self._expect("op", "[")
         vals = [self._literal()]
         while self._accept("op", ","):
             vals.append(self._literal())
         self._expect("op", "]")
-        return vals
+        return tuple(vals)
 
     def _literal(self):
         k, v = self._next()
@@ -290,17 +278,21 @@ class CypherParser:
             return float(v) if "." in v else int(v)
         if k == "str":
             return v[1:-1]
-        if k == "param":
-            return self._param(v)
         raise SyntaxError(f"expected literal, got {v!r}")
+
+    def _value(self):
+        """A literal or a late-bound parameter, as an expression node."""
+        if self._peek()[0] == "param":
+            return self.b.param(self._next()[1])
+        return ir.Lit(self._literal())
 
     def _atom(self):
         k, v = self._peek()
-        if k == "num" or k == "str":
+        if k in ("num", "str"):
             return ir.Lit(self._literal())
         if k == "param":
             self._next()
-            return ir.Lit(self._param(v))
+            return self.b.param(v)
         if k == "op" and v == "(":
             self._next()
             e = self._expr()

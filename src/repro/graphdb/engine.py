@@ -26,6 +26,7 @@ import time
 import numpy as np
 
 from repro.core import ir
+from repro.core.errors import ParamError
 from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
 from repro.core.physical import ExpandNode, JoinNode, PlanNode, ScanNode
 from repro.core.physical_spec import OperatorSet, PhysicalSpec, get_spec
@@ -83,6 +84,7 @@ class Engine:
         self.fuse_expand = fuse_expand
         self.trim_fields = trim_fields
         self.max_rows = max_rows
+        self._params: dict = {}          # execution-time parameter bindings
         self._tindex = store.triple_index()
         if isinstance(backend, OperatorSet):
             self.ops = backend
@@ -280,10 +282,19 @@ class Engine:
         return lkey, rkey
 
     # ============================================================ expressions
+    def _param_value(self, name: str):
+        try:
+            return self._params[name]
+        except KeyError:
+            raise ParamError("unbound parameter at evaluation", missing=[name],
+                             declared=self._params) from None
+
     def _eval(self, tbl: Table, e) -> np.ndarray:
         st = self.store
         if isinstance(e, ir.Lit):
             return np.full(tbl.nrows, e.value)
+        if isinstance(e, ir.Param):
+            return np.full(tbl.nrows, self._param_value(e.name))
         if isinstance(e, ir.Var):
             return tbl.cols[e.alias]
         if isinstance(e, ir.Prop):
@@ -304,7 +315,9 @@ class Engine:
             return ops[e.op](l, r)
         if isinstance(e, ir.InSet):
             item = self._eval(tbl, e.item)
-            vals = [self._encode_scalar(e.item, v) for v in e.values]
+            values = (self._param_value(e.values.name)
+                      if isinstance(e.values, ir.Param) else e.values)
+            vals = [self._encode_scalar(e.item, v) for v in values]
             return np.isin(item, np.asarray(vals, dtype=np.int64))
         if isinstance(e, ir.BoolOp):
             if e.op == "NOT":
@@ -328,12 +341,51 @@ class Engine:
     def _encode_rhs(self, lhs, rhs, tbl):
         if isinstance(rhs, ir.Lit):
             return self._encode_scalar(lhs, rhs.value)
+        if isinstance(rhs, ir.Param):
+            return self._encode_scalar(lhs, self._param_value(rhs.name))
         return self._eval(tbl, rhs)
 
     # ============================================================= relational
-    def run(self, plan: ir.LogicalPlan, pattern_plan: PlanNode | None = None):
-        """Execute a logical plan; returns (result Table, ExecStats)."""
+    def bind_params(self, plan: ir.LogicalPlan,
+                    params: dict | None = None) -> dict:
+        """Resolve execution-time bindings against the plan's declared
+        parameter set.  Build-time bindings (``plan.params``) act as
+        defaults; ``params`` overrides them.  Raises ``ParamError`` on a
+        binding that names no declared parameter, or on a referenced
+        parameter left unbound."""
+        referenced = plan.referenced_params()
+        declared = referenced | set(plan.params)
+        provided = dict(params or {})
+        extra = set(provided) - declared
+        if extra:
+            raise ParamError("binding names no declared parameter",
+                             extra=extra, declared=declared)
+        # structural params (hop counts baked into the pattern shape, as
+        # recorded by GraphIrBuilder) cannot be rebound: silently accepting
+        # a different value would lie about what executes.  Other build-time
+        # bindings that no expression references are simply unused and may
+        # be re-supplied freely (shared bindings dicts across queries).
+        structural = plan.hints.get("structural_params") or {}
+        rebound = {k for k, v in provided.items()
+                   if k in structural and structural[k] != v}
+        if rebound:
+            raise ParamError(
+                "structural parameter(s) were bound at build time and "
+                "cannot be rebound at execution — re-prepare instead",
+                extra=rebound, declared=declared)
+        effective = {**plan.params, **provided}
+        missing = referenced - set(effective)
+        if missing:
+            raise ParamError("unbound parameter(s)", missing=missing,
+                             declared=declared)
+        return effective
+
+    def run(self, plan: ir.LogicalPlan, pattern_plan: PlanNode | None = None,
+            params: dict | None = None):
+        """Execute a logical plan; returns (result Table, ExecStats).
+        ``params`` binds the plan's late-bound ``ir.Param`` nodes."""
         from repro.core.physical import default_left_deep_plan
+        self._params = self.bind_params(plan, params)
         stats = ExecStats()
         t0 = time.perf_counter()
         ops = list(plan.ops)

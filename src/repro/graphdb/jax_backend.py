@@ -208,10 +208,18 @@ class JaxOperators(NumpyOperators):
         return found, np.asarray(pos_d)[:R].astype(np.int64)
 
 
+# Calibrated from BENCH_backends.json (sf=0.2 CPU/interpret timings) via
+# benchmarks/calibrate_costs.py: expand-dominated chain probes run ~5.3x the
+# numpy host path (dispatch + padded-block overhead), while cyclic queries
+# whose plans close edges with WCOJ membership probes run ~34x — so the CBO
+# should spend joins/expansions to avoid intersections on this backend.
+# Scan and the (host-inherited) join stay at the numpy baseline. Re-derive
+# after re-benchmarking (e.g. on real TPU, where these flip dramatically).
 JAX_SPEC = register_spec(PhysicalSpec(
     name="jax",
     make_operators=JaxOperators,
-    cost=CostParams(),
+    cost=CostParams(alpha_scan=1.0, alpha_expand=5.3,
+                    alpha_intersect=34.0, alpha_join=1.0),
     description="jit'd padded-block primitives + wcoj_intersect Pallas "
                 "kernel (interpret on CPU, compiled on TPU)",
 ))

@@ -1,0 +1,235 @@
+"""GraphIrBuilder: eager per-step validation, alias management, structural
+parameters, canonical-form normalization (DESIGN.md §3)."""
+import pytest
+
+from repro.core import ir
+from repro.core.errors import BuildError, ParamError
+from repro.core.ir_builder import GraphIrBuilder
+from repro.core.parser import parse_cypher
+from repro.core.pattern import BOTH, IN, OUT
+from repro.core.schema import ldbc_schema, motivating_schema
+
+SCH = ldbc_schema()
+
+
+def _b(params=None):
+    return GraphIrBuilder(SCH, params)
+
+
+# ------------------------------------------------------------- construction
+
+def test_builder_matches_parser_gir():
+    q = ("MATCH (p:PERSON)-[:KNOWS]->(q:PERSON) WHERE p.id = 3 "
+         "RETURN q, count(p) AS c")
+    via_parser = parse_cypher(q, SCH)
+    via_builder = (_b().scan("p", ["PERSON"])
+                   .expand(["KNOWS"], direction=OUT)
+                   .get_vertex("q", ["PERSON"])
+                   .select(ir.Cmp("=", ir.Prop("p", "id"), ir.Lit(3)))
+                   .group([(ir.Var("q"), "q")],
+                          [(ir.Agg("COUNT", ir.Var("p")), "c")])
+                   .build())
+    assert ir.canonical_form(via_parser) == ir.canonical_form(via_builder)
+
+
+def test_canonical_form_ignores_anon_counters():
+    """Two constructions whose fresh-name counters diverge produce the same
+    canonical form (anon aliases are relabeled structurally)."""
+    b1 = _b().scan("p", ["PERSON"]).expand(["KNOWS"]).get_vertex(
+        "q", ["PERSON"])
+    b2 = _b()
+    b2.scan(None, ["PERSON"])          # mint _v1, rename later
+    b2.alias_as("p")
+    b2.expand(["KNOWS"]).get_vertex(None, ["PERSON"])
+    b2.alias_as("q")
+    p1 = b1.group([], [(ir.Agg("COUNT", ir.Var("p")), "c")]).build()
+    p2 = b2.group([], [(ir.Agg("COUNT", ir.Var("p")), "c")]).build()
+    assert ir.canonical_form(p1) == ir.canonical_form(p2)
+
+
+def test_canonical_form_sorts_conjuncts():
+    a = ir.Cmp("=", ir.Prop("p", "id"), ir.Lit(1))
+    b = ir.Cmp(">", ir.Prop("p", "creationDate"), ir.Lit(5))
+    p1 = _b().scan("p", ["PERSON"]).select(a).select(b).build()
+    p2 = _b().scan("p", ["PERSON"]).select(b).select(a).build()
+    assert ir.canonical_form(p1) == ir.canonical_form(p2)
+
+
+def test_alias_as_merge_closes_cycle():
+    b = (_b().scan("m", ["POST"]).expand(["HASCREATOR"])
+         .get_vertex("person", ["PERSON"])
+         .at("m").expand(["HASTAG"]).get_vertex("tag", ["TAG"])
+         .at("person").expand(["HASINTEREST"]).get_vertex())
+    b.alias_as("tag")                   # merge anon target into tag
+    plan = b.build()
+    pat = plan.pattern()
+    assert set(pat.vertices) == {"m", "person", "tag"}
+    assert pat.n_edges() == 3
+    assert pat.vertices["tag"].types == frozenset({"TAG"})
+
+
+def test_join_keeps_distinct_anonymous_vertices():
+    """Colliding auto-minted aliases on the two sides are distinct pattern
+    vertices — join() must re-mint, not merge them."""
+    left = _b()
+    left.scan(None, ["PERSON"])                       # _v1
+    right = _b()
+    right.scan(None, ["TAG"])                         # also _v1
+    right.select(ir.Cmp("=", ir.Prop(right.current, "name"),
+                        ir.Lit("x")))
+    plan = left.join(right).project([ir.Var(left.current)]).build()
+    pat = plan.pattern()
+    assert pat.n_vertices() == 2
+    types = sorted(tuple(sorted(v.types)) for v in pat.vertices.values())
+    assert types == [("PERSON",), ("TAG",)]
+    # the renamed side's predicate follows the re-minted alias
+    sel = [op for op in plan.ops if isinstance(op, ir.Select)][0]
+    pred_alias = next(iter(ir.expr_aliases(sel.predicate)))
+    assert pat.vertices[pred_alias].types == frozenset({"TAG"})
+
+
+def test_join_composes_patterns():
+    left = _b().scan("a", ["PERSON"]).expand(["KNOWS"]).get_vertex(
+        "b", ["PERSON"])
+    right = _b().scan("b", ["PERSON"]).expand(["LIKES"]).get_vertex(
+        "m", ["POST"])
+    plan = left.join(right).group(
+        [], [(ir.Agg("COUNT", ir.Var("a")), "c")]).build()
+    pat = plan.pattern()
+    assert set(pat.vertices) == {"a", "b", "m"}
+    assert pat.n_edges() == 2
+    assert pat.is_connected()
+
+
+# ----------------------------------------------------------- eager validation
+
+def test_unknown_vertex_type_positional():
+    with pytest.raises(BuildError, match=r"step 1 \(scan\).*NOPE"):
+        _b().scan("a", ["NOPE"])
+
+
+def test_unknown_edge_label_positional():
+    with pytest.raises(BuildError, match=r"step 2 \(expand\).*FRIENDS"):
+        _b().scan("a", ["PERSON"]).expand(["FRIENDS"])
+
+
+def test_unknown_alias_in_predicate():
+    with pytest.raises(BuildError, match="unknown alias 'z'"):
+        _b().scan("a", ["PERSON"]).select(
+            ir.Cmp("=", ir.Prop("z", "id"), ir.Lit(1)))
+
+
+def test_unknown_property_on_vertex():
+    with pytest.raises(BuildError, match="has property 'salary'"):
+        _b().scan("a", ["PERSON"]).select(
+            ir.Cmp("=", ir.Prop("a", "salary"), ir.Lit(1)))
+
+
+def test_unknown_property_on_edge():
+    b = _b().scan("a", ["PERSON"]).expand(["KNOWS"], alias="k").get_vertex(
+        "b", ["PERSON"])
+    b.select(ir.Cmp(">", ir.Prop("k", "creationDate"), ir.Lit(0)))  # ok
+    with pytest.raises(BuildError, match="has property 'weight'"):
+        b.select(ir.Cmp(">", ir.Prop("k", "weight"), ir.Lit(0)))
+
+
+def test_dangling_expand_rejected():
+    b = _b().scan("a", ["PERSON"]).expand(["KNOWS"])
+    with pytest.raises(BuildError, match="get_vertex"):
+        b.build()
+    with pytest.raises(BuildError, match="awaits get_vertex"):
+        b.scan("c", ["PERSON"])
+
+
+def test_get_vertex_without_expand():
+    with pytest.raises(BuildError, match="without a preceding expand"):
+        _b().scan("a", ["PERSON"]).get_vertex("b")
+
+
+def test_order_validates_against_outputs():
+    b = (_b().scan("a", ["PERSON"])
+         .group([], [(ir.Agg("COUNT", ir.Var("a")), "c")]))
+    b.order([(ir.Var("c"), False)])     # output column: fine
+    with pytest.raises(BuildError, match="unknown alias 'nope'"):
+        b.order([ir.Var("nope")])
+
+
+def test_graph_steps_after_relational_rejected():
+    b = _b().scan("a", ["PERSON"]).project([ir.Var("a")])
+    with pytest.raises(BuildError, match="precede relational"):
+        b.scan("b", ["PERSON"])
+
+
+def test_select_after_aggregation_rejected():
+    """A filter written after group() would silently hoist above the
+    aggregation (changing its input) — it must error instead (no HAVING)."""
+    b = (_b().scan("p", ["PERSON"])
+         .group([], [(ir.Agg("COUNT", ir.Var("p")), "c")]))
+    with pytest.raises(BuildError, match="precede relational"):
+        b.select(ir.Cmp(">", ir.Prop("p", "id"), ir.Lit(5)))
+
+
+def test_empty_pattern_rejected():
+    with pytest.raises(BuildError, match="empty pattern"):
+        _b().build()
+
+
+# ----------------------------------------------------------------- parameters
+
+def test_structural_param_resolved_at_build():
+    b = _b({"hops": 3})
+    b.scan("p1", ["PERSON"]).expand(["KNOWS"], direction=BOTH,
+                                    hops="hops").get_vertex("p2", ["PERSON"])
+    plan = b.group([], [(ir.Agg("COUNT", ir.Var("p1")), "c")]).build()
+    assert plan.pattern().edges[0].hops == 3
+    assert b.consumed_params() == {"hops": 3}
+
+
+def test_structural_param_missing_raises_paramerror():
+    with pytest.raises(ParamError, match=r"\$hops"):
+        _b().scan("p1", ["PERSON"]).expand(["KNOWS"], hops="$hops")
+
+
+def test_params_stay_late_bound_in_predicates():
+    b = _b()
+    b.scan("p", ["PERSON"])
+    b.select(ir.Cmp("=", ir.Prop("p", "id"), b.param("pid")))
+    plan = b.project([ir.Var("p")]).build()
+    assert plan.referenced_params() == {"pid"}
+    assert plan.params == {}            # nothing bound at build time
+
+
+def test_parser_lowers_params_to_ir_param():
+    plan = parse_cypher(
+        "MATCH (p:PERSON)-[:KNOWS]->(q:PERSON) "
+        "WHERE p.id = $pid AND q.id IN $ids RETURN count(p)", SCH)
+    assert plan.referenced_params() == {"pid", "ids"}
+    sel = [op for op in plan.ops if isinstance(op, ir.Select)][0]
+    kinds = {type(c).__name__ for c in ir.conjuncts(sel.predicate)}
+    assert kinds == {"Cmp", "InSet"}
+
+
+def test_invalid_param_name():
+    with pytest.raises(BuildError, match="invalid parameter name"):
+        _b().param("not a name")
+
+
+# ---------------------------------------------------------------- frontends
+
+def test_motivating_schema_builder():
+    sch = motivating_schema()
+    b = GraphIrBuilder(sch)
+    plan = (b.scan("v1").expand().get_vertex("v2")
+            .at("v1").expand().get_vertex("v3", ["PLACE"])
+            .at("v2").expand().get_vertex()
+            .alias_as("v3")
+            .select(ir.Cmp("=", ir.Prop("v3", "name"), ir.Lit("China")))
+            .group([(ir.Var("v2"), "v2")],
+                   [(ir.Agg("COUNT", ir.Var("v1")), "cnt")])
+            .build())
+    via_parser = parse_cypher(
+        "MATCH (v1)-[e1]->(v2), (v1)-[e2]->(v3:PLACE), (v2)-[e3]->(v3) "
+        "WHERE v3.name = 'China' RETURN v2, COUNT(v1) AS cnt", sch)
+    pat_b, pat_p = plan.pattern(), via_parser.pattern()
+    assert set(pat_b.vertices) == set(pat_p.vertices)
+    assert pat_b.n_edges() == pat_p.n_edges()

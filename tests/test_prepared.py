@@ -1,0 +1,339 @@
+"""Frontend parity and the prepared-query lifecycle (DESIGN.md §3).
+
+1. For every Appendix-A query expressible in both frontends, the Cypher
+   parser and the Gremlin builder must lower to structurally identical GIR
+   through ``GraphIrBuilder`` (canonical-form comparison).
+2. ``GOpt.prepare(...).execute(params)`` must skip parse/type-inference/
+   RBO/CBO (compile counters), return results identical to ``run()``, and
+   stay row-identical to the unprepared path on both backends.
+3. Parameter errors surface as ``ParamError`` naming the parameter and the
+   declared set.
+4. Backend-calibrated cost params change the CBO's operator rankings where
+   BENCH_backends.json says they should.
+"""
+import numpy as np
+import pytest
+
+from benchmarks import queries as Q
+from repro.core import ir
+from repro.core.errors import ParamError
+from repro.core.gremlin import g
+from repro.core.parser import parse_cypher
+from repro.core.physical import plan_signature
+from repro.core.physical_spec import get_spec
+from repro.core.schema import ldbc_schema
+from repro.core.cbo import GraphOptimizer
+from repro.core.type_inference import infer_types
+
+SCH = ldbc_schema()
+
+C = ir.Cmp
+P = ir.Prop
+V = ir.Var
+L = ir.Lit
+
+
+def _agg(fn, alias=None):
+    return ir.Agg(fn, V(alias) if alias else None)
+
+
+# Appendix-A queries expressible in both frontends: name -> (cypher text,
+# params, traversal factory).  Output names mirror the parser's defaults
+# (``repr`` of the RETURN expression, keywords uppercased).
+def _qt1():
+    return (g(SCH).V().as_("p").in_("HASCREATOR").as_("m")
+            .in_("CONTAINEROF").as_("f").count("p", as_="COUNT(p)"))
+
+
+def _qt2():
+    return (g(SCH).V().as_("p").out().as_("o", types=["ORGANISATION"])
+            .out().as_("c", types=["COUNTRY"]).count("p", as_="COUNT(p)"))
+
+
+def _qt3():
+    return (g(SCH).V().as_("p").in_("ISLOCATEDIN").as_("x")
+            .out().as_("t", types=["TAG"]).select("p")
+            .count("p", as_="COUNT(p)"))
+
+
+def _qr3():
+    return (g(SCH).V("PERSON").as_("author").in_("HASCREATOR")
+            .as_("msg1", types=["POST", "COMMENT"])
+            .count("author", as_="COUNT(author)"))
+
+
+def _qr5():
+    t = g(SCH)
+    (t.V("PERSON").as_("p1").out("KNOWS").as_("p2", types=["PERSON"])
+     .where(C("=", P("p1", "id"), t.param("id1")))
+     .where(C("=", P("p2", "id"), t.param("id2"))))
+    return t.count("p1", as_="COUNT(p1)")
+
+
+def _qc1a():
+    return (g(SCH).V("POST", "COMMENT").as_("message")
+            .out("HASCREATOR").as_("person", types=["PERSON"])
+            .select("message").out("HASTAG").as_("tag", types=["TAG"])
+            .select("person").out("HASINTEREST").as_("tag")
+            .count("person", as_="COUNT(person)"))
+
+
+def _qc3a():
+    return (g(SCH).V("PERSON").as_("person1").in_("HASCREATOR")
+            .as_("comment", types=["COMMENT"]).out("REPLYOF")
+            .as_("post", types=["POST"]).in_("CONTAINEROF")
+            .as_("forum", types=["FORUM"]).out("HASMEMBER")
+            .as_("person2", types=["PERSON"])
+            .count("person1", as_="COUNT(person1)"))
+
+
+def _ic1():
+    t = g(SCH)
+    (t.V("PERSON").as_("p").out_path(2, "KNOWS", direction="BOTH")
+     .as_("friend", types=["PERSON"])
+     .where(C("=", P("p", "id"), t.param("pid"))))
+    return (t.group_by([(V("friend"), "friend")], [(_agg("COUNT", "p"), "c")])
+            .order_by((V("c"), False)).limit(20).plan())
+
+
+def _ic3():
+    t = g(SCH)
+    (t.V("PERSON").as_("p").both("KNOWS").as_("friend", types=["PERSON"])
+     .in_("HASCREATOR").as_("m", types=["POST", "COMMENT"])
+     .out("HASTAG").as_("t", types=["TAG"])
+     .where(C("=", P("p", "id"), t.param("pid"))))
+    return (t.group_by([(V("friend"), "friend")],
+                       [(_agg("COUNT", "m"), "cnt")])
+            .order_by((V("cnt"), False)).limit(20).plan())
+
+
+def _ic11():
+    t = g(SCH)
+    (t.V("PERSON").as_("p").both("KNOWS").as_("friend", types=["PERSON"])
+     .out("WORKAT").as_("org", types=["ORGANISATION"])
+     .out("ISLOCATEDIN").as_("c", types=["COUNTRY"])
+     .where(C("=", P("p", "id"), t.param("pid"))))
+    return (t.group_by([(V("friend"), "friend"), (V("org"), "org")],
+                       [(_agg("COUNT", "c"), "n")])
+            .order_by((V("n"), True)).limit(10).plan())
+
+
+PARITY = {
+    "Qt1": (Q.QT["Qt1"], None, _qt1),
+    "Qt2": (Q.QT["Qt2"], None, _qt2),
+    "Qt3": (Q.QT["Qt3"], None, _qt3),
+    "Qr3": (Q.QR["Qr3"], None, _qr3),
+    "Qr5": (Q.QR["Qr5"], Q.QR_PARAMS["Qr5"], _qr5),
+    "Qc1a": (Q.QC["Qc1a"], None, _qc1a),
+    "Qc3a": (Q.QC["Qc3a"], None, _qc3a),
+    "ic1": (Q.QIC["ic1"], Q.QIC_PARAMS["ic1"], _ic1),
+    "ic3": (Q.QIC["ic3"], Q.QIC_PARAMS["ic3"], _ic3),
+    "ic11": (Q.QIC["ic11"], Q.QIC_PARAMS["ic11"], _ic11),
+}
+
+
+def _table_eq(a, b):
+    assert a.nrows == b.nrows
+    assert set(a.cols) == set(b.cols)
+    for k in a.cols:
+        np.testing.assert_array_equal(a.cols[k], b.cols[k], err_msg=k)
+
+
+# ----------------------------------------------------------- frontend parity
+
+@pytest.mark.parametrize("name", sorted(PARITY))
+def test_cypher_gremlin_identical_gir(name):
+    text, _, make_traversal = PARITY[name]
+    cy = ir.canonical_form(parse_cypher(text, SCH))
+    gr = ir.canonical_form(make_traversal())
+    assert cy == gr, f"{name}: frontends disagree\n{cy}\n----\n{gr}"
+
+
+@pytest.mark.parametrize("name", ["Qr5", "ic3", "ic11"])
+def test_prepared_row_identical_both_backends(gopt_small, name):
+    """Prepared-vs-unprepared execution returns row-identical tables on both
+    backends, for both frontends."""
+    text, params, make_traversal = PARITY[name]
+    for backend in ("numpy", "jax"):
+        opt = gopt_small.optimize(text, params, backend=backend)
+        ref, _ = gopt_small.execute(opt, backend=backend, params=params)
+        pq = gopt_small.prepare(text, backend=backend)
+        tbl, _ = pq.execute(params)
+        _table_eq(ref, tbl)
+        pq2 = gopt_small.prepare(make_traversal(), backend=backend)
+        tbl2, _ = pq2.execute(params)
+        _table_eq(ref, tbl2)
+        # identical GIR -> one shared cached plan across frontends
+        assert pq2 is gopt_small.prepare(text, backend=backend)
+
+
+# ------------------------------------------------------- prepared lifecycle
+
+def test_prepare_execute_skips_compile(gopt_small):
+    text = Q.QIC["ic3"]
+    pq = gopt_small.prepare(text)
+    before = dict(gopt_small.compile_counters)
+    results = [pq.execute({"pid": pid})[0] for pid in (3, 5, 9)]
+    assert dict(gopt_small.compile_counters) == before, \
+        "prepared execution must not re-run parse/TI/RBO/CBO"
+    # and matches one-shot run() with the same bindings
+    for pid, tbl in zip((3, 5, 9), results):
+        ref, _ = gopt_small.run(text, {"pid": pid})
+        _table_eq(ref, tbl)
+
+
+def test_run_lru_compiles_once(gopt_small):
+    text = Q.QR["Qr6"]
+    gopt_small.run(text, Q.QR_PARAMS["Qr6"])
+    before = dict(gopt_small.compile_counters)
+    gopt_small.run(text, {"id1": 1, "id2": 2, "len": 16})
+    assert dict(gopt_small.compile_counters) == before
+
+
+def test_structural_param_variants_reprepared(gopt_small):
+    """Different hop counts are different patterns: the text LRU must miss
+    and re-prepare, and both variants stay correct."""
+    store = gopt_small.store
+    n = store.v_count["PERSON"]
+    rng = np.random.default_rng(3)
+    S1 = sorted(rng.choice(n, 3, replace=False).tolist())
+    S2 = sorted(rng.choice(n, 50, replace=False).tolist())
+    q = Q.MONEY_MULE
+    pq2 = gopt_small.prepare(q, {"hops": 2, "S1": S1, "S2": S2})
+    pq3 = gopt_small.prepare(q, {"hops": 3, "S1": S1, "S2": S2})
+    assert pq2 is not pq3
+    assert pq2.logical.pattern().edges[0].hops != \
+        pq3.logical.pattern().edges[0].hops or \
+        len(pq2.logical.pattern().edges) != len(pq3.logical.pattern().edges)
+    t2, _ = pq2.execute({"S1": S1, "S2": S2})
+    t3, _ = pq3.execute({"S1": S1, "S2": S2})
+    assert t2.nrows == 1 and t3.nrows == 1
+    # same hops again -> cache hit, no recompile
+    before = dict(gopt_small.compile_counters)
+    assert gopt_small.prepare(q, {"hops": 2, "S1": S1, "S2": S2}) is pq2
+    assert dict(gopt_small.compile_counters) == before
+
+
+# ------------------------------------------------------------- param errors
+
+def test_missing_binding_is_param_error(gopt_small):
+    pq = gopt_small.prepare(Q.QIC["ic3"])
+    with pytest.raises(ParamError, match=r"\$pid"):
+        pq.execute()
+
+
+def test_extra_binding_is_param_error(gopt_small):
+    pq = gopt_small.prepare(Q.QIC["ic3"])
+    with pytest.raises(ParamError) as ei:
+        pq.execute({"pid": 5, "spurious": 1})
+    assert "spurious" in str(ei.value) and "$pid" in str(ei.value)
+
+
+def test_structural_param_missing_is_param_error(gopt_small):
+    with pytest.raises(ParamError, match=r"\$hops"):
+        gopt_small.prepare(Q.MONEY_MULE, {"S1": [1], "S2": [2]})
+
+
+def test_run_missing_param_is_param_error(gopt_small):
+    with pytest.raises(ParamError, match=r"\$pid"):
+        gopt_small.run(Q.QIC["ic3"])
+
+
+def test_prepared_queries_are_strict_no_stale_defaults(gopt_small):
+    """Value bindings passed to prepare() must never leak into a later
+    caller's execution as silent defaults."""
+    text = Q.QR["Qr5"]
+    gopt_small.prepare(text, {"id1": 3, "id2": 7})
+    pq = gopt_small.prepare(text, {"id1": 1, "id2": 2})
+    with pytest.raises(ParamError, match=r"\$id1"):
+        pq.execute()                     # no first-caller defaults
+    t, _ = pq.execute({"id1": 1, "id2": 2})
+    ref, _ = gopt_small.execute(
+        gopt_small.optimize(text, {"id1": 1, "id2": 2}),
+        params={"id1": 1, "id2": 2})
+    _table_eq(ref, t)
+
+
+def test_structural_rebind_at_execute_rejected(gopt_small):
+    store = gopt_small.store
+    n = store.v_count["PERSON"]
+    S1, S2 = [1, 2], sorted(np.arange(0, min(40, n)).tolist())
+    pq = gopt_small.prepare(Q.MONEY_MULE, {"hops": 2, "S1": S1, "S2": S2})
+    with pytest.raises(ParamError, match="rebound"):
+        pq.execute({"hops": 3, "S1": S1, "S2": S2})
+    # re-binding to the SAME value is harmless (run() passes everything)
+    t, _ = pq.execute({"hops": 2, "S1": S1, "S2": S2})
+    assert t.nrows == 1
+
+
+def test_shared_bindings_dict_with_unused_keys(gopt_small):
+    """A bindings dict shared across several queries may carry keys a given
+    query never references — those are ignored at build time, and re-running
+    with different values for them must not be mistaken for a structural
+    rebind."""
+    shared1 = {"id1": 3, "id2": 7}
+    shared2 = {"id1": 4, "id2": 9}
+    q = ("Match (p1:PERSON)-[:KNOWS]->(p2:PERSON) Where p1.id = $id1 "
+         "Return count(p1) AS c")                    # uses only $id1
+    t1, _ = gopt_small.run(q, shared1)
+    before = dict(gopt_small.compile_counters)
+    t2, _ = gopt_small.run(q, shared2)               # must not raise/recompile
+    assert dict(gopt_small.compile_counters) == before
+    ref, _ = gopt_small.execute(gopt_small.optimize(q, {"id1": 4}),
+                                params={"id1": 4})
+    _table_eq(ref, t2)
+    # order independence: a cache entry created WITHOUT the unused key must
+    # still serve a later shared-dict call that carries one
+    q2 = ("Match (p1:PERSON)-[:KNOWS]->(p2:PERSON) Where p2.id = $id2 "
+          "Return count(p1) AS c")
+    gopt_small.run(q2, {"id2": 7})
+    t3, _ = gopt_small.run(q2, {"id1": 1, "id2": 9})  # extra unused id1
+    ref3, _ = gopt_small.execute(gopt_small.optimize(q2, {"id2": 9}),
+                                 params={"id2": 9})
+    _table_eq(ref3, t3)
+
+
+def test_gremlin_plan_prepare_reuses_across_bindings(gopt_small):
+    """Plan inputs (no query text) still hit the plan cache across value
+    bindings: the cache key is the canonical GIR, not the bindings."""
+    def traversal():
+        _, _, make = PARITY["ic3"]
+        return make()
+    gopt_small.prepare(traversal(), {"pid": 3})
+    before = dict(gopt_small.compile_counters)
+    pq = gopt_small.prepare(traversal(), {"pid": 5})
+    assert dict(gopt_small.compile_counters) == before
+    t, _ = pq.execute({"pid": 5})
+    ref, _ = gopt_small.run(Q.QIC["ic3"], {"pid": 5})
+    _table_eq(ref, t)
+
+
+# -------------------------------------------------- calibrated cost rankings
+
+def test_backend_cost_params_calibrated():
+    np_cost = get_spec("numpy").cost
+    jx_cost = get_spec("jax").cost
+    # BENCH_backends.json: WCOJ membership probes are far costlier on the
+    # interpret-mode jax path than on numpy; expansions moderately so
+    assert jx_cost.alpha_intersect > 5 * np_cost.alpha_intersect
+    assert jx_cost.alpha_expand > np_cost.alpha_expand
+    assert jx_cost.alpha_intersect > jx_cost.alpha_expand
+
+
+def test_cost_rankings_diverge_across_backends(gopt_small):
+    """Qc2b (83x slower on jax in BENCH_backends.json, intersect-heavy):
+    the calibrated specs must rank plans differently — the jax-optimal plan
+    avoids work the numpy-optimal plan happily takes."""
+    lp = parse_cypher(Q.QC["Qc2b"], SCH)
+    pat = infer_types(lp.pattern(), SCH)
+    plan_np = GraphOptimizer(gopt_small.estimator(),
+                             spec="numpy").optimize(pat)
+    plan_jx = GraphOptimizer(gopt_small.estimator(), spec="jax").optimize(pat)
+    assert plan_signature(plan_np) != plan_signature(plan_jx)
+    # rankings, not just costs: each spec must strictly prefer its own plan,
+    # so re-costing the numpy choice under jax params loses to the jax choice
+    recost_np_under_jx = GraphOptimizer(
+        gopt_small.estimator(), spec="jax",
+        enable_join=False).optimize(pat)
+    assert plan_signature(recost_np_under_jx) != plan_signature(plan_jx)
+    assert recost_np_under_jx.est_cost > plan_jx.est_cost
