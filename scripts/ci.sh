@@ -14,8 +14,20 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== collection gate =="
 python -m pytest -q --collect-only > /dev/null
 
+# fast-fail gates before the full suite: the optimizer-pipeline parity
+# suite (every Appendix-A query: identical plans + rows vs the pre-refactor
+# driver on both backends — rule regressions die here, in seconds) and an
+# EXPLAIN/PROFILE structural smoke (golden-ish assertions, not byte-exact
+# snapshots)
+echo "== pipeline parity gate =="
+python -m pytest -x -q tests/test_pipeline.py
+
+echo "== EXPLAIN smoke =="
+python scripts/explain_smoke.py
+
 echo "== tier-1 tests =="
-python -m pytest -x -q
+# test_pipeline.py already ran (and failed fast) in the parity gate above
+python -m pytest -x -q --ignore=tests/test_pipeline.py
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   # ~30s backend-parity smoke: tiny store, 1 repeat, LDBC IC set on both

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""EXPLAIN/PROFILE smoke for CI (scripts/ci.sh).
+
+Golden-ish *structural* assertions — pass presence, estimate sanity,
+estimated-vs-actual alignment, the invalid-query rendering — never
+byte-exact snapshots, so cost-model recalibration or new default passes
+don't break CI while real regressions (missing traces, crashed EXPLAIN,
+unaligned actuals) still do.
+
+Usage: PYTHONPATH=src python scripts/explain_smoke.py [--sf 0.05]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(1, ".")
+
+from benchmarks import queries as Q                                # noqa: E402
+from repro.core.gopt import GOpt                                   # noqa: E402
+from repro.core.pipeline import UNSAT_MESSAGE                      # noqa: E402
+from repro.graphdb.ldbc import generate_ldbc                       # noqa: E402
+
+REQUIRED_PASSES = ("expand_paths", "type_inference", "FilterIntoMatchRule",
+                   "FieldTrimRule", "ConstantFoldingRule",
+                   "RedundantSelectMergeRule", "cbo", "physical_rules")
+
+SMOKE = [("Qr3", Q.QR["Qr3"], None),
+         ("Qc1a", Q.QC["Qc1a"], None),
+         ("ic3", Q.QIC["ic3"], Q.QIC_PARAMS["ic3"])]
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"EXPLAIN SMOKE FAIL: {msg}")
+        sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.05)
+    args = ap.parse_args()
+    gopt = GOpt(generate_ldbc(sf=args.sf))
+
+    for name, text, params in SMOKE:
+        for backend in ("numpy", "jax"):
+            rep = gopt.explain(text, params, analyze=True, backend=backend)
+            label = f"{name}/{backend}"
+            check(not rep.invalid, f"{label}: unexpectedly invalid")
+            names = rep.pass_names()
+            for p in REQUIRED_PASSES:
+                check(p in names, f"{label}: pass {p!r} missing from trace")
+            check(rep.operators, f"{label}: no physical operators")
+            for op in rep.operators:
+                check(op.est_rows > 0, f"{label}: {op.op} has no estimate")
+                check(op.actual_rows is not None,
+                      f"{label}: {op.op} has no actual row count "
+                      "(plan/ExecStats alignment broke)")
+            check(rep.result_rows is not None, f"{label}: no result rows")
+            rendered = rep.render()
+            check("-- pipeline --" in rendered and "Scan(" in rendered,
+                  f"{label}: renderer output malformed")
+            print(f"  ok {label}: {len(rep.operators)} ops, "
+                  f"{rep.result_rows} rows")
+
+    # EXPLAIN/PROFILE prefixes route through run()
+    rep = gopt.run("EXPLAIN " + Q.QR["Qr3"])
+    check(rep.result_rows is None and rep.operators,
+          "EXPLAIN prefix did not return a compile-only report")
+    rep = gopt.run("PROFILE " + Q.QR["Qr3"])
+    check(rep.result_rows is not None, "PROFILE prefix did not execute")
+
+    # invalid queries render the provably-empty result instead of crashing
+    rep = gopt.explain("Match (a:TAG)-[:KNOWS]->(b) Return count(a) AS c",
+                       analyze=True)
+    check(rep.invalid and UNSAT_MESSAGE in rep.render(),
+          "invalid-query EXPLAIN regressed")
+    print("EXPLAIN SMOKE OK")
+
+
+if __name__ == "__main__":
+    main()

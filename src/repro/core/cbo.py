@@ -21,8 +21,8 @@ import random
 
 from repro.core.cardinality import CardEstimator
 from repro.core.pattern import Pattern
-from repro.core.physical import (ExpandNode, JoinNode, PlanNode, ScanNode,
-                                 plan_signature)
+from repro.core.physical import (ExpandChainNode, ExpandNode, JoinNode,
+                                 PlanNode, ScanNode, plan_signature)
 from repro.core.physical_spec import CostParams, PhysicalSpec, get_spec
 
 
@@ -235,6 +235,76 @@ class GraphOptimizer:
                         cov += 1
                 if cov == len(sub.edges):
                     yield s1, s2
+
+
+def annotate_estimates(node: PlanNode, pattern: Pattern, est: CardEstimator,
+                       cost: CostParams | None = None) -> PlanNode:
+    """Fill in ``est_frequency``/``est_cost`` (Eq. 2/3) on plan nodes that
+    were built outside Algorithm 2 — the left-deep fallback for
+    disconnected patterns and ablation plans carry zeros otherwise, which
+    leaves EXPLAIN without per-operator numbers.  Nodes that already carry
+    a nonzero frequency (CBO output) are left untouched.  Mutates and
+    returns ``node``."""
+    cost = cost or CostParams()
+
+    def expand_op_cost(src_freq: float, edges, new_alias: str) -> float:
+        weighted = 0.0
+        first = True
+        for e in edges:
+            sigma = est.expand_sigma(pattern, e, new_alias if first else None)
+            weighted += (cost.alpha_expand if first
+                         else cost.alpha_intersect) * sigma
+            first = False
+        return src_freq * max(weighted, 1e-12)
+
+    def rec(n: PlanNode) -> float:
+        if isinstance(n, ScanNode):
+            if n.est_frequency == 0.0:
+                f = est.vertex_freq(pattern, n.alias)
+                n.est_frequency = f
+                n.est_cost = cost.alpha_scan * f
+            return n.est_cost
+        if isinstance(n, ExpandNode):
+            child_cost = rec(n.child)
+            if n.est_frequency == 0.0:
+                bound = n.child.bound_aliases()
+                f = est.pattern_freq(pattern, bound | {n.new_alias})
+                n.est_frequency = f
+                n.est_cost = (child_cost + f + expand_op_cost(
+                    n.child.est_frequency, n.edges, n.new_alias))
+            return n.est_cost
+        if isinstance(n, JoinNode):
+            lc, rc = rec(n.left), rec(n.right)
+            if n.est_frequency == 0.0:
+                s1 = n.left.bound_aliases()
+                s2 = n.right.bound_aliases()
+                f = est.join_freq(pattern, s1, s2)
+                n.est_frequency = f
+                n.est_cost = lc + rc + f + cost.alpha_join * (
+                    n.left.est_frequency + n.right.est_frequency)
+            return n.est_cost
+        if isinstance(n, ExpandChainNode):
+            child_cost = rec(n.child)
+            bound = set(n.child.bound_aliases())
+            src_freq = n.child.est_frequency
+            acc = child_cost
+            for s in n.steps:
+                bound.add(s.alias)
+                if s.est_frequency == 0.0:
+                    f = est.pattern_freq(pattern, frozenset(bound))
+                    s.est_frequency = f
+                    s.est_cost = acc + f + expand_op_cost(
+                        src_freq, [s.edge], s.alias)
+                src_freq = s.est_frequency
+                acc = s.est_cost
+            if n.est_frequency == 0.0 and n.steps:
+                n.est_frequency = n.steps[-1].est_frequency
+                n.est_cost = n.steps[-1].est_cost
+            return n.est_cost
+        raise TypeError(n)
+
+    rec(node)
+    return node
 
 
 # ---------------------------------------------------------------- baselines

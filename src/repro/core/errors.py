@@ -24,6 +24,12 @@ class BuildError(GOptError, ValueError):
         super().__init__(message)
 
 
+class PipelineError(GOptError, ValueError):
+    """Invalid ``OptimizerPipeline`` registration: unknown phase, duplicate
+    pass name, or a ``before=``/``after=`` anchor that does not exist (or
+    lives in a different phase)."""
+
+
 class ParamError(GOptError, LookupError):
     """A query-parameter problem, naming the offending parameters and the
     declared set."""

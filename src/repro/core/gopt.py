@@ -3,39 +3,59 @@
     Cypher/Gremlin -> unified GIR (GraphIrBuilder) -> type inference -> RBO
     -> CBO -> physical plan -> binding-table engine execution.
 
-``GOpt`` owns the metadata providers (schema + GLogue) and exposes
-``optimize`` / ``execute`` with per-stage switches so benchmarks can ablate
-each technique exactly like the paper's experiments.
+``GOpt`` owns the metadata providers (schema + GLogue) and the
+**OptimizerPipeline** (DESIGN.md §6): ``optimize`` is a thin driver over a
+registered sequence of passes (``pre -> type_inference -> rbo fixpoint ->
+cbo -> post_physical``); users register custom passes/rules via
+``gopt.pipeline.register(...)`` and backends contribute post-CBO physical
+rewrites through ``PhysicalSpec.physical_rules``.  The historical
+``type_inference=/rbo=/cbo=`` switches are kept as deprecated shims that
+gate the corresponding pipeline phases, so benchmarks can still ablate each
+technique exactly like the paper's experiments.
 
 On top of the one-shot pipeline sits the **prepared-query lifecycle**
 (DESIGN.md §3): ``prepare(query)`` runs the compile pipeline once and caches
 the optimized physical plan keyed by (normalized GIR canonical form,
-backend, optimizer flags, build-time bindings); ``PreparedQuery.execute(
-params)`` skips straight to the engine with fresh parameter bindings.
-``run()`` is sugar over an LRU of prepared queries — repeated calls with new
-bindings for the same query text pay compile cost once.  ``compile_counters``
-meters the pipeline stages so tests (and benchmarks) can assert what re-ran.
+backend, optimizer flags, pipeline signature, build-time bindings);
+``PreparedQuery.execute(params)`` skips straight to the engine with fresh
+parameter bindings, and ``execute_many`` loops a batch of bindings over the
+one cached plan.  ``run()`` is sugar over an LRU of prepared queries.
+``refresh_stats()`` bumps the statistics epoch, invalidating every cached
+plan (stale ``PreparedQuery`` handles keep executing their old plan).
+``compile_counters`` meters the pipeline stages so tests (and benchmarks)
+can assert what re-ran.
+
+The EXPLAIN/PROFILE surface: ``gopt.explain(query, analyze=...)`` (and
+``PreparedQuery.explain``) returns a structured ``ExplainReport`` — per-pass
+traces with plan diffs, per-operator estimated cost/cardinality, and actual
+row counts when ``analyze=True``.  ``run()`` routes queries prefixed with
+``EXPLAIN`` / ``PROFILE`` to the same surface.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import re
 import time
 
 from repro.core import ir
 from repro.core.cardinality import CardEstimator, Statistics
-from repro.core.cbo import GraphOptimizer, low_order_plan, random_plan
+from repro.core.cbo import low_order_plan, random_plan
 from repro.core.glogue import GLogue
 from repro.core.parser import parse_cypher
-from repro.core.pattern import Pattern, expand_path_edges
-from repro.core.physical import PlanNode, default_left_deep_plan
+from repro.core.pattern import Pattern
+from repro.core.physical import PlanNode
 from repro.core.physical_spec import PhysicalSpec, get_spec
-from repro.core.rules import DEFAULT_RULES, apply_rules
-from repro.core.type_inference import INVALID, infer_types
+from repro.core.pipeline import (ExplainReport, OptimizerPipeline,
+                                 PassContext, PipelineTrace,
+                                 build_explain_report, default_pipeline)
 from repro.graphdb.engine import Engine, ExecStats, Table
 from repro.graphdb.storage import GraphStore
 
-_OPT_KEYS = ("type_inference", "rbo", "cbo", "use_glogue", "use_selectivity")
+_OPT_KEYS = ("type_inference", "rbo", "cbo", "use_glogue", "use_selectivity",
+             "physical_rules")
+
+_EXPLAIN_RE = re.compile(r"^\s*(EXPLAIN|PROFILE)\b", re.IGNORECASE)
 
 
 def _freeze(v):
@@ -55,6 +75,7 @@ class OptimizedQuery:
     physical: PlanNode
     compile_s: float
     invalid: bool = False
+    trace: PipelineTrace | None = None
 
 
 @dataclasses.dataclass
@@ -94,27 +115,52 @@ class PreparedQuery:
                                  backend=exec_kw.pop("backend", self.spec),
                                  **exec_kw)
 
-    def explain(self) -> str:
-        if self.opt.physical is None:
-            return "<invalid query>"
-        return self.opt.physical.pretty()
+    def execute_many(self, bindings: list[dict | None],
+                     **exec_kw) -> list[tuple[Table, ExecStats]]:
+        """Batch execution: one cached plan, many parameter bindings.
+
+        Today this is a plain loop over ``execute`` (compile cost is paid
+        zero times, engine cost once per binding); vectorizing the
+        per-binding scan filter into a single engine pass is a ROADMAP
+        item."""
+        return [self.execute(b, **exec_kw) for b in bindings]
+
+    def explain(self, params: dict | None = None, analyze: bool = False,
+                **exec_kw) -> ExplainReport:
+        """Structured EXPLAIN of the cached plan (``analyze=True`` also
+        executes with ``params`` and reports actual row counts).  A
+        type-inference-INVALID query reports its provably-empty result
+        instead of crashing on the missing physical plan."""
+        tbl = stats = None
+        if analyze and not self.opt.invalid:
+            declared = self.declared_params()
+            bound = {k: v for k, v in (params or {}).items() if k in declared}
+            tbl, stats = self.execute(bound, **exec_kw)
+        return build_explain_report(self.opt, spec=self.spec,
+                                    source=self.source, analyze=analyze,
+                                    table=tbl, stats=stats)
 
 
 class GOpt:
     def __init__(self, store: GraphStore, glogue_k: int = 3,
                  build_glogue: bool = True,
                  backend: str | PhysicalSpec = "numpy",
-                 plan_cache_size: int = 256):
+                 plan_cache_size: int = 256,
+                 pipeline: OptimizerPipeline | None = None):
         self.store = store
         self.schema = store.schema
         self.stats = Statistics(store)
         self.glogue = GLogue(store, k=glogue_k) if build_glogue else None
         self.spec = get_spec(backend)
+        # the registered pass sequence driving optimize(); per-instance, so
+        # registering a custom pass/rule never leaks across GOpt instances
+        self.pipeline = pipeline or default_pipeline()
         # pipeline-stage meters: how many times each compile stage ran
         self.compile_counters: collections.Counter = collections.Counter()
         self.plan_cache_size = plan_cache_size
         self._plan_cache: collections.OrderedDict = collections.OrderedDict()
         self._text_cache: collections.OrderedDict = collections.OrderedDict()
+        self._stats_epoch = 0
 
     # ----------------------------------------------------------------- parse
     def parse(self, query: str, params: dict | None = None) -> ir.LogicalPlan:
@@ -129,7 +175,17 @@ class GOpt:
                  cbo: bool = True,
                  use_glogue: bool = True,
                  use_selectivity: bool = True,
-                 backend: str | PhysicalSpec | None = None) -> OptimizedQuery:
+                 physical_rules: bool = True,
+                 backend: str | PhysicalSpec | None = None,
+                 pipeline: OptimizerPipeline | None = None) -> OptimizedQuery:
+        """Thin driver over the registered ``OptimizerPipeline``.
+
+        The boolean stage switches are deprecated shims kept for the
+        paper's ablation benchmarks: they gate the corresponding pipeline
+        phases (``type_inference`` the inference pass, ``rbo`` the whole
+        rbo fixpoint group, ``cbo`` Algorithm 2 vs the left-deep fallback,
+        ``physical_rules`` the backend's post-CBO rewrites).  Prefer
+        configuring ``gopt.pipeline`` directly."""
         t0 = time.perf_counter()
         if isinstance(query, str):
             plan = self.parse(query, params)
@@ -138,33 +194,18 @@ class GOpt:
             if params:
                 for k, v in params.items():
                     plan.params.setdefault(k, v)
-        pattern = expand_path_edges(plan.pattern(), self.schema)
-        plan.replace_pattern(pattern)
-        if type_inference:
-            self.compile_counters["type_inference"] += 1
-            inferred = infer_types(pattern, self.schema)
-            if inferred == INVALID:
-                return OptimizedQuery(plan, None, time.perf_counter() - t0,
-                                      invalid=True)
-            pattern = inferred
-            plan.replace_pattern(pattern)
-        if rbo:
-            self.compile_counters["rbo"] += 1
-            plan = apply_rules(plan, DEFAULT_RULES)
-            pattern = plan.pattern()
-        est = CardEstimator(self.stats,
-                            self.glogue if use_glogue else None,
-                            use_selectivity=use_selectivity,
-                            params=plan.params)
         spec = self.spec if backend is None else get_spec(backend)
-        if cbo and pattern.is_connected():
-            self.compile_counters["cbo"] += 1
-            physical = GraphOptimizer(est, spec=spec).optimize(pattern)
-        else:
-            # disconnected patterns: cross-product plan (Algorithm 2
-            # searches connected sub-patterns only)
-            physical = default_left_deep_plan(pattern)
-        return OptimizedQuery(plan, physical, time.perf_counter() - t0)
+        ctx = PassContext(
+            plan=plan, schema=self.schema, stats=self.stats,
+            glogue=self.glogue, spec=spec,
+            flags={"type_inference": type_inference, "rbo": rbo, "cbo": cbo,
+                   "use_glogue": use_glogue,
+                   "use_selectivity": use_selectivity,
+                   "physical_rules": physical_rules},
+            counters=self.compile_counters)
+        trace = (pipeline or self.pipeline).run(ctx)
+        return OptimizedQuery(plan, ctx.physical, time.perf_counter() - t0,
+                              invalid=ctx.invalid, trace=trace)
 
     # --------------------------------------------------------------- prepare
     def prepare(self, query: str | ir.LogicalPlan,
@@ -173,7 +214,8 @@ class GOpt:
                 **opts) -> PreparedQuery:
         """Compile once, execute many: returns a ``PreparedQuery`` whose
         optimized physical plan is cached keyed by (normalized GIR canonical
-        form, backend, optimizer flags, build-time bindings).
+        form, backend, optimizer flags, pipeline signature, statistics
+        epoch, build-time bindings).
 
         ``params`` here binds *structural* parameters (hop counts) and
         provides defaults / selectivity hints for value parameters; fresh
@@ -185,7 +227,9 @@ class GOpt:
             raise TypeError(f"unknown optimizer option(s): {sorted(unknown)}")
         spec = self.spec if backend is None else get_spec(backend)
         text = query if isinstance(query, str) else None
-        opts_key = tuple(sorted(opts.items()))
+        # the pipeline shape is part of every cache key: registering a pass
+        # must never serve plans compiled by a differently-shaped pipeline
+        opts_key = (tuple(sorted(opts.items())), self.pipeline.signature())
 
         # fast path: seen this exact query text before -> skip the parse
         text_key = None
@@ -241,10 +285,50 @@ class GOpt:
                 self._text_cache.popitem(last=False)
         return pq
 
+    # ---------------------------------------------------- cache invalidation
     def plan_cache_info(self) -> dict:
         return {"plans": len(self._plan_cache),
                 "texts": len(self._text_cache),
-                "max": self.plan_cache_size}
+                "max": self.plan_cache_size,
+                "epoch": self._stats_epoch}
+
+    def bump_stats_epoch(self) -> int:
+        """Invalidate every cached prepared plan (call after the store or
+        its statistics change).  Outstanding ``PreparedQuery`` handles keep
+        executing their — possibly stale-cost — plan; the next
+        ``prepare``/``run`` recompiles against fresh statistics."""
+        self._stats_epoch += 1
+        self._plan_cache.clear()
+        self._text_cache.clear()
+        return self._stats_epoch
+
+    def refresh_stats(self, rebuild_glogue: bool = False) -> int:
+        """Re-derive ``Statistics`` (NDV caches, counts) from the store and
+        bump the epoch; optionally rebuild the GLogue catalogue too."""
+        self.stats = Statistics(self.store)
+        if rebuild_glogue and self.glogue is not None:
+            self.glogue = GLogue(self.store, k=self.glogue.k)
+        return self.bump_stats_epoch()
+
+    # --------------------------------------------------------------- explain
+    def explain(self, query: str | ir.LogicalPlan,
+                params: dict | None = None, analyze: bool = False,
+                backend: str | PhysicalSpec | None = None,
+                **kw) -> ExplainReport:
+        """Structured EXPLAIN/PROFILE: compile (through the prepared-plan
+        cache) and report per-pass traces plus per-operator estimates;
+        ``analyze=True`` (or a ``PROFILE`` prefix) also executes with
+        ``params`` and reports estimated-vs-actual cardinalities."""
+        opts = {k: v for k, v in kw.items() if k in _OPT_KEYS}
+        exec_kw = {k: v for k, v in kw.items() if k not in _OPT_KEYS}
+        if isinstance(query, str):
+            m = _EXPLAIN_RE.match(query)
+            if m:
+                if m.group(1).upper() == "PROFILE":
+                    analyze = True
+                query = query[m.end():]
+        pq = self.prepare(query, params, backend=backend, **opts)
+        return pq.explain(params=params, analyze=analyze, **exec_kw)
 
     # --------------------------------------------------------------- execute
     def execute(self, opt: OptimizedQuery,
@@ -264,10 +348,26 @@ class GOpt:
         return eng.run(opt.logical, opt.physical, params=params)
 
     def run(self, query: str | ir.LogicalPlan, params: dict | None = None,
-            **kw) -> tuple[Table, ExecStats]:
+            **kw) -> tuple[Table, ExecStats] | ExplainReport:
         """Prepared-query sugar: resolve the query through the prepared-plan
         LRU, then execute with ``params``.  Repeated runs of one query text
-        with fresh bindings compile exactly once."""
+        with fresh bindings compile exactly once.
+
+        A query prefixed with ``EXPLAIN`` (compile only) or ``PROFILE``
+        (compile + execute) returns an ``ExplainReport`` instead of a
+        result table; a plan parsed from such a query (the parser records
+        the prefix as ``hints['explain']``) routes the same way."""
+        mode = None
+        if isinstance(query, str):
+            m = _EXPLAIN_RE.match(query)
+            if m:
+                mode = m.group(1).lower()
+                query = query[m.end():]
+        elif isinstance(query, ir.LogicalPlan):
+            mode = query.hints.get("explain")
+        if mode is not None:
+            return self.explain(query, params, analyze=mode == "profile",
+                                backend=kw.pop("backend", None), **kw)
         opts = {k: v for k, v in kw.items() if k in _OPT_KEYS}
         exec_kw = {k: v for k, v in kw.items()
                    if k not in _OPT_KEYS and k != "backend"}

@@ -358,6 +358,12 @@ class LogicalPlan:
         structural params consumed during parsing, e.g. hop counts)."""
         return self.referenced_params() | set(self.params)
 
+    def snapshot(self) -> list[str]:
+        """Deterministic one-line-per-op serialization (the canonical form
+        split into lines) — what optimizer passes diff before/after to
+        record plan changes in their ``PassTrace``."""
+        return canonical_form(self).split("\n")
+
     def __repr__(self):
         return "LogicalPlan[\n  " + "\n  ".join(map(repr, self.ops)) + "\n]"
 

@@ -12,7 +12,8 @@ plan's default bindings and the CBO's selectivity hints.
 
 Supported grammar (enough for every query in the paper's Appendix A):
 
-    query     := MATCH path (',' path)* (MATCH ...)* (WHERE expr)?
+    query     := (EXPLAIN | PROFILE)?
+                 MATCH path (',' path)* (MATCH ...)* (WHERE expr)?
                  RETURN [DISTINCT] item (',' item)*
                  (ORDER BY expr [ASC|DESC] (',' ...)*)? (LIMIT int)?
     path      := node (edge node)*
@@ -96,6 +97,17 @@ class CypherParser:
         self.toks = _tokenize(text)
         self.i = 0
         b = self.b
+        # EXPLAIN/PROFILE prefix: parse the query as usual, record the
+        # requested mode as a plan hint (GOpt.run routes it to explain();
+        # the hint is not part of the canonical form, so the underlying
+        # query shares its cached plan with the plain form).  Recognized
+        # positionally — only as the very first token — so identifiers
+        # named "explain"/"profile" stay valid everywhere else.
+        explain_mode = None
+        k, v = self._peek()
+        if k == "name" and v.upper() in ("EXPLAIN", "PROFILE"):
+            self._next()
+            explain_mode = v.lower()
         saw_match = False
         while self._accept("kw", "MATCH"):
             saw_match = True
@@ -130,7 +142,10 @@ class CypherParser:
         if self._accept("kw", "LIMIT"):
             b.limit(int(self._expect("num")))
         self._expect("eof")
-        return b.build()
+        plan = b.build()
+        if explain_mode is not None:
+            plan.hints["explain"] = explain_mode
+        return plan
 
     # ------------------------------------------------------------- patterns
     def _parse_path(self):

@@ -79,6 +79,50 @@ class JoinNode(PlanNode):
                 + self.right.pretty(indent + 1))
 
 
+@dataclasses.dataclass
+class ChainStep:
+    """One hop of an ``ExpandChainNode``: expand ``from_alias`` along
+    ``edge`` to bind ``alias``.  Carries the per-hop estimates of the
+    ``ExpandNode`` it was fused from, so ``unfused()`` round-trips."""
+    edge: PatternEdge
+    from_alias: str
+    alias: str
+    est_frequency: float = 0.0
+    est_cost: float = 0.0
+
+
+@dataclasses.dataclass
+class ExpandChainNode(PlanNode):
+    """A fused run of consecutive single-edge expansions (backend physical
+    rewrite, DESIGN.md §6.2): the engine expands a *thin* frontier table
+    (hop columns only) hop-by-hop and gathers the full binding table once
+    at the end, instead of round-tripping every bound column through the
+    host at every hop.  Only predicate-free hops are fusable — deferring a
+    filter past a hop would change intermediate semantics."""
+    child: PlanNode
+    steps: list[ChainStep]
+
+    def bound_aliases(self) -> frozenset[str]:
+        return self.child.bound_aliases() | {s.alias for s in self.steps}
+
+    def unfused(self) -> PlanNode:
+        """The equivalent nested-``ExpandNode`` chain (the pre-fusion
+        plan) — used by the engine's fuse ablation and by parity checks."""
+        node = self.child
+        for s in self.steps:
+            node = ExpandNode(node, s.alias, [s.edge],
+                              est_frequency=s.est_frequency,
+                              est_cost=s.est_cost)
+        return node
+
+    def pretty(self, indent=0):
+        pad = "  " * indent
+        hops = ",".join(f"+{s.alias}" for s in self.steps)
+        return (f"{pad}ExpandChain({hops}) "
+                f"[F={self.est_frequency:.3g} C={self.est_cost:.3g}]\n"
+                + self.child.pretty(indent + 1))
+
+
 def plan_signature(node: PlanNode) -> str:
     """Stable string for logging/plan comparison."""
     if isinstance(node, ScanNode):
@@ -88,6 +132,62 @@ def plan_signature(node: PlanNode) -> str:
     if isinstance(node, JoinNode):
         return (f"J({plan_signature(node.left)},{plan_signature(node.right)},"
                 f"k={'/'.join(node.keys)})")
+    if isinstance(node, ExpandChainNode):
+        hops = "".join(f",+{s.alias}" for s in node.steps)
+        return f"C({plan_signature(node.child)}{hops})"
+    raise TypeError(node)
+
+
+def unfuse_chains(node: PlanNode) -> PlanNode:
+    """Normalize a plan by unfolding every ``ExpandChainNode`` back into
+    nested expansions — chain fusion is packaging, not a different join
+    order, so parity checks compare plans modulo fusion through this."""
+    if isinstance(node, ExpandChainNode):
+        return unfuse_chains(node.unfused())
+    if isinstance(node, ExpandNode):
+        return dataclasses.replace(node, child=unfuse_chains(node.child))
+    if isinstance(node, JoinNode):
+        return dataclasses.replace(node, left=unfuse_chains(node.left),
+                                   right=unfuse_chains(node.right))
+    return node
+
+
+def plan_children(node: PlanNode) -> list[PlanNode]:
+    if isinstance(node, ExpandNode):
+        return [node.child]
+    if isinstance(node, ExpandChainNode):
+        return [node.child]
+    if isinstance(node, JoinNode):
+        return [node.left, node.right]
+    return []
+
+
+def plan_operators(node: PlanNode) -> list[PlanNode]:
+    """All operators of a pattern plan in execution (post-)order — the
+    order the engine logs their actual row counts in ``ExecStats``."""
+    out: list[PlanNode] = []
+
+    def rec(n: PlanNode):
+        for c in plan_children(n):
+            rec(c)
+        out.append(n)
+
+    rec(node)
+    return out
+
+
+def describe_node(node: PlanNode) -> str:
+    """Short human-readable operator label for EXPLAIN output."""
+    if isinstance(node, ScanNode):
+        return f"Scan({node.alias})"
+    if isinstance(node, ExpandNode):
+        kind = "ExpandIntersect" if len(node.edges) > 1 else "Expand"
+        return f"{kind}(+{node.new_alias}|{len(node.edges)}e)"
+    if isinstance(node, JoinNode):
+        return f"Join(keys={list(node.keys)})"
+    if isinstance(node, ExpandChainNode):
+        hops = "".join(f"+{s.alias}" for s in node.steps)
+        return f"ExpandChain({hops})"
     raise TypeError(node)
 
 

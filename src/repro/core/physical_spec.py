@@ -96,11 +96,21 @@ class OperatorSet:
 
 @dataclasses.dataclass(frozen=True)
 class PhysicalSpec:
-    """One backend's registration: operator factory + cost model."""
+    """One backend's registration: operator factory + cost model + optional
+    post-CBO physical rewrites.
+
+    ``physical_rules`` is the backend's hook into the optimizer pipeline
+    (DESIGN.md §6.2): each entry is a callable ``(plan_node, ctx) ->
+    PlanNode | None`` run by the ``post_physical`` pipeline phase after the
+    CBO has fixed the join/expansion order.  A rule returns a rewritten
+    plan (or None / the input to decline).  Rewrites must be
+    semantics-preserving — they repackage the plan for the backend (e.g.
+    the jax backend's expand-chain fusion), never change its results."""
     name: str
     make_operators: Callable[..., OperatorSet]   # GraphStore -> OperatorSet
     cost: CostParams = CostParams()
     description: str = ""
+    physical_rules: tuple = ()
 
     def operators(self, store) -> OperatorSet:
         """Operator set for ``store``, cached on the store so device-array

@@ -28,7 +28,8 @@ import numpy as np
 from repro.core import ir
 from repro.core.errors import ParamError
 from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
-from repro.core.physical import ExpandNode, JoinNode, PlanNode, ScanNode
+from repro.core.physical import (ExpandChainNode, ExpandNode, JoinNode,
+                                 PlanNode, ScanNode)
 from repro.core.physical_spec import OperatorSet, PhysicalSpec, get_spec
 from repro.graphdb.storage import GraphStore
 
@@ -246,6 +247,37 @@ class Engine:
             stats.log(f"EXPAND(+{node.new_alias}|{len(edges)}e)", tbl.nrows)
             self._materialize(tbl, node.new_alias, pattern)
             return tbl
+        if isinstance(node, ExpandChainNode):
+            # fused predicate-free expand run (backend physical rewrite):
+            # expand a *thin* frontier table hop-by-hop — the source column,
+            # per-hop alias/edge columns and a provenance row index — and
+            # gather the full binding table once at the end, instead of
+            # taking every bound column through the host at every hop
+            if not self.fuse_expand:
+                # ExpandGetVFusion ablation: run the pre-fusion plan
+                return self.exec_pattern(pattern, node.unfused(), stats)
+            tbl = self.exec_pattern(pattern, node.child, stats)
+            first = node.steps[0].from_alias
+            cur = Table({first: tbl.cols[first],
+                         "__chain_row": np.arange(tbl.nrows,
+                                                  dtype=np.int64)},
+                        tbl.nrows)
+            for s in node.steps:
+                if cur.nrows == 0:
+                    break
+                cur = self._expand_edge(cur, pattern, s.edge, s.from_alias,
+                                        s.alias, stats)
+            hops = "".join(f"+{s.alias}" for s in node.steps)
+            if cur.nrows == 0:
+                stats.log(f"EXPANDCHAIN({hops})", 0)
+                return Table.empty()
+            rows = cur.cols.pop("__chain_row")
+            del cur.cols[first]          # tbl carries the original column
+            out = tbl.take(rows).with_cols(cur.cols)
+            stats.log(f"EXPANDCHAIN({hops})", out.nrows)
+            for s in node.steps:
+                self._materialize(out, s.alias, pattern)
+            return out
         if isinstance(node, JoinNode):
             lt = self.exec_pattern(pattern, node.left, stats)
             rt = self.exec_pattern(pattern, node.right, stats)

@@ -21,8 +21,12 @@ bandwidth-bound gather/sort work that the paper leaves to the wrapped system.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
+from repro.core.physical import (ChainStep, ExpandChainNode, ExpandNode,
+                                 JoinNode, PlanNode)
 from repro.core.physical_spec import CostParams, PhysicalSpec, register_spec
 from repro.graphdb.numpy_backend import NumpyOperators
 
@@ -208,6 +212,83 @@ class JaxOperators(NumpyOperators):
         return found, np.asarray(pos_d)[:R].astype(np.int64)
 
 
+def fuse_expand_chain(node: PlanNode, ctx) -> PlanNode:
+    """Post-CBO physical rewrite (the ``PhysicalSpec.physical_rules`` hook):
+    fuse runs of >= 2 consecutive single-edge expansions into one
+    ``ExpandChainNode``.
+
+    Motivation (ROADMAP follow-up): this backend round-trips the binding
+    table host<->device per operator — every ``Expand`` gathers *all* bound
+    columns of the table for each surviving row.  A fused chain expands a
+    thin frontier (just the hop columns) hop-by-hop and gathers the full
+    table once at the end, amortizing the transfers.  Only predicate-free
+    hops fuse (a filter must run at its own hop to bound intermediates),
+    and each hop's source alias must be bound by the chain itself (or be
+    the first hop's source), so the thin frontier always carries it.
+    Fusion is packaging, not planning: ``ExpandChainNode.unfused()``
+    recovers the exact pre-fusion plan, and results are row-identical."""
+    pattern = ctx.pattern()
+    fused = False
+
+    def rewrite(n: PlanNode) -> PlanNode:
+        if isinstance(n, JoinNode):
+            return dataclasses.replace(n, left=rewrite(n.left),
+                                       right=rewrite(n.right))
+        if not isinstance(n, ExpandNode):
+            return n
+        run = [n]                       # the maximal expand run, bottom-up
+        cur = n.child
+        while isinstance(cur, ExpandNode):
+            run.append(cur)
+            cur = cur.child
+        run.reverse()                   # execution order
+        out = rewrite(cur)
+        pending: list[tuple[ExpandNode, str]] = []
+
+        def flush():
+            nonlocal out, fused
+            if len(pending) >= 2:
+                fused = True
+                steps = [ChainStep(h.edges[0], frm, h.new_alias,
+                                   h.est_frequency, h.est_cost)
+                         for h, frm in pending]
+                out = ExpandChainNode(out, steps,
+                                      est_frequency=steps[-1].est_frequency,
+                                      est_cost=steps[-1].est_cost)
+            else:
+                for h, frm in pending:
+                    out = ExpandNode(out, h.new_alias, h.edges,
+                                     est_frequency=h.est_frequency,
+                                     est_cost=h.est_cost)
+            pending.clear()
+
+        for h in run:
+            v = pattern.vertices[h.new_alias]
+            fusable = (len(h.edges) == 1 and not v.predicates
+                       and not h.edges[0].predicates)
+            frm = h.edges[0].other(h.new_alias) if h.edges else None
+            if fusable and pending:
+                carried = {pending[0][1]} | {x.new_alias for x, _ in pending}
+                if frm not in carried:
+                    # source bound below the current run (e.g. by a join
+                    # child): close this chain and anchor a new one here
+                    flush()
+            if fusable:
+                pending.append((h, frm))
+            else:
+                flush()
+                out = ExpandNode(out, h.new_alias, h.edges,
+                                 est_frequency=h.est_frequency,
+                                 est_cost=h.est_cost)
+        flush()
+        return out
+
+    out = rewrite(node)
+    # no run fused: hand back the input so PhysicalRulesPass (and its
+    # trace) correctly records the plan as unchanged
+    return out if fused else node
+
+
 # Calibrated from BENCH_backends.json (sf=0.2 CPU/interpret timings) via
 # benchmarks/calibrate_costs.py: expand-dominated chain probes run ~5.3x the
 # numpy host path (dispatch + padded-block overhead), while cyclic queries
@@ -222,4 +303,5 @@ JAX_SPEC = register_spec(PhysicalSpec(
                     alpha_intersect=34.0, alpha_join=1.0),
     description="jit'd padded-block primitives + wcoj_intersect Pallas "
                 "kernel (interpret on CPU, compiled on TPU)",
+    physical_rules=(fuse_expand_chain,),
 ))

@@ -1,0 +1,536 @@
+"""OptimizerPipeline: registrable pass/rule API + EXPLAIN/PROFILE
+(DESIGN.md §6).
+
+1. Parity suite: every Appendix-A query produces the same physical plan and
+   row-identical results through the registered default pipeline as through
+   the pre-refactor hardcoded driver (replicated here verbatim as
+   ``legacy_optimize``), on both backends.  The jax backend's expand-chain
+   fusion is packaging, not planning: plans compare equal modulo
+   ``unfuse_chains`` and byte-equal under ``physical_rules=False``.
+2. The registration seam: custom rules/passes change plans without touching
+   the driver; invalid registrations raise ``PipelineError``.
+3. EXPLAIN/PROFILE: structured reports with per-pass traces and
+   estimated-vs-actual per-operator cardinalities; EXPLAIN/PROFILE query
+   prefixes; the type-inference-INVALID regression (render the provably
+   empty result, don't crash on ``physical=None``).
+4. Plan-cache statistics epoch + ``PreparedQuery.execute_many``.
+"""
+import numpy as np
+import pytest
+
+from benchmarks import queries as Q
+from repro.core import ir
+from repro.core.cardinality import CardEstimator
+from repro.core.cbo import GraphOptimizer
+from repro.core.errors import PipelineError
+from repro.core.gopt import GOpt, OptimizedQuery
+from repro.core.parser import parse_cypher
+from repro.core.pattern import expand_path_edges
+from repro.core.physical import (ExpandChainNode, default_left_deep_plan,
+                                 plan_operators, plan_signature,
+                                 unfuse_chains)
+from repro.core.physical_spec import get_spec
+from repro.core.pipeline import Pass, UNSAT_MESSAGE, default_pipeline
+from repro.core.rules import (ConstantFoldingRule, DEFAULT_RULES,
+                              RedundantSelectMergeRule, Rule, apply_rules)
+from repro.core.schema import ldbc_schema
+from repro.core.type_inference import INVALID, infer_types
+
+# every Appendix-A query (+ the money-mule case study): name -> (text, params)
+ALL_QUERIES = {}
+ALL_QUERIES.update({n: (t, None) for n, t in Q.QT.items()})
+ALL_QUERIES.update({n: (t, Q.QR_PARAMS.get(n)) for n, t in Q.QR.items()})
+ALL_QUERIES.update({n: (t, None) for n, t in Q.QC.items()})
+ALL_QUERIES.update({n: (t, Q.QIC_PARAMS.get(n)) for n, t in Q.QIC.items()})
+ALL_QUERIES["money_mule"] = (
+    Q.MONEY_MULE, {"hops": 2, "S1": [1, 2, 3], "S2": list(range(20))})
+
+# jax executes Pallas in interpret mode on CPU (slow); row-parity executes a
+# representative subset there — chains, cycles, unions, multi-hop paths
+JAX_EXEC = ("Qt1", "Qr3", "Qc1a", "ic3", "ic11")
+
+
+def legacy_optimize(gopt, text, params=None, backend=None):
+    """The pre-refactor ``GOpt.optimize`` if-ladder, verbatim (defaults):
+    parse -> expand paths -> infer types -> DEFAULT_RULES fixpoint -> CBO
+    (or left-deep fallback).  The parity oracle for the pipeline."""
+    plan = parse_cypher(text, gopt.schema, params)
+    pattern = expand_path_edges(plan.pattern(), gopt.schema)
+    plan.replace_pattern(pattern)
+    inferred = infer_types(pattern, gopt.schema)
+    if inferred == INVALID:
+        return OptimizedQuery(plan, None, 0.0, invalid=True)
+    plan.replace_pattern(inferred)
+    plan = apply_rules(plan, DEFAULT_RULES)
+    pattern = plan.pattern()
+    est = CardEstimator(gopt.stats, gopt.glogue, use_selectivity=True,
+                        params=plan.params)
+    spec = get_spec(backend or "numpy")
+    if pattern.is_connected():
+        physical = GraphOptimizer(est, spec=spec).optimize(pattern)
+    else:
+        physical = default_left_deep_plan(pattern)
+    return OptimizedQuery(plan, physical, 0.0)
+
+
+def _table_eq(a, b, sort=False):
+    assert a.nrows == b.nrows
+    assert set(a.cols) == set(b.cols)
+    for k in sorted(a.cols):
+        x, y = a.cols[k], b.cols[k]
+        if sort:
+            x, y = np.sort(x), np.sort(y)
+        np.testing.assert_array_equal(x, y, err_msg=k)
+
+
+# ------------------------------------------------------------- parity suite
+
+@pytest.mark.parametrize("name", sorted(ALL_QUERIES))
+def test_pipeline_plan_parity_both_backends(gopt_small, name):
+    """Identical physical plans through the default pipeline vs the
+    pre-refactor driver: byte-equal with the backend's physical rewrites
+    disabled, and equal modulo chain fusion with them on."""
+    text, params = ALL_QUERIES[name]
+    for backend in ("numpy", "jax"):
+        ref = legacy_optimize(gopt_small, text, params, backend)
+        opt = gopt_small.optimize(text, params, backend=backend)
+        assert opt.invalid == ref.invalid
+        if ref.invalid:
+            continue
+        strict = gopt_small.optimize(text, params, backend=backend,
+                                     physical_rules=False)
+        assert plan_signature(strict.physical) == \
+            plan_signature(ref.physical), f"{name}/{backend}"
+        assert plan_signature(unfuse_chains(opt.physical)) == \
+            plan_signature(ref.physical), f"{name}/{backend} (fused)"
+
+
+@pytest.mark.parametrize("name", sorted(ALL_QUERIES))
+def test_pipeline_result_parity_numpy(gopt_small, name):
+    text, params = ALL_QUERIES[name]
+    ref = legacy_optimize(gopt_small, text, params, "numpy")
+    reft, _ = gopt_small.execute(ref, backend="numpy", params=params)
+    opt = gopt_small.optimize(text, params, backend="numpy")
+    tbl, _ = gopt_small.execute(opt, backend="numpy", params=params)
+    _table_eq(reft, tbl)
+
+
+@pytest.mark.parametrize("name", JAX_EXEC)
+def test_pipeline_result_parity_jax(gopt_small, name):
+    text, params = ALL_QUERIES[name]
+    ref = legacy_optimize(gopt_small, text, params, "numpy")
+    reft, _ = gopt_small.execute(ref, backend="numpy", params=params)
+    opt = gopt_small.optimize(text, params, backend="jax")
+    tbl, _ = gopt_small.execute(opt, backend="jax", params=params)
+    _table_eq(reft, tbl, sort=True)
+
+
+# ------------------------------------------------- the registration seam
+
+class TopKClampRule(Rule):
+    """Test rule: clamp any top-k ORDER BY to k<=3."""
+    name = "TopKClampRule"
+
+    def apply(self, plan):
+        changed = False
+        for op in plan.ops:
+            if isinstance(op, ir.OrderBy) and op.limit and op.limit > 3:
+                op.limit = 3
+                changed = True
+        return changed
+
+
+def test_registered_custom_rule_changes_plan_and_results(small_ldbc):
+    gopt = GOpt(small_ldbc, build_glogue=False)
+    text, params = Q.QIC["ic3"], Q.QIC_PARAMS["ic3"]
+    base, _ = gopt.run(text, params)
+    assert base.nrows > 3
+    gopt.pipeline.register_rule(TopKClampRule())
+    opt = gopt.optimize(text, params)
+    order = [op for op in opt.logical.ops if isinstance(op, ir.OrderBy)]
+    assert order and order[0].limit == 3
+    clamped, _ = gopt.run(text, params)          # cache key includes pipeline
+    assert clamped.nrows == 3
+    tr = opt.trace.by_name("TopKClampRule")
+    assert tr is not None and tr.changed and tr.hits >= 1 and tr.diff
+
+
+class HintPass(Pass):
+    name = "hint_pass"
+    phase = "pre"
+
+    def run(self, ctx):
+        ctx.plan.hints["custom_pass_ran"] = True
+        return False
+
+
+def test_register_pass_ordering_and_errors(small_ldbc):
+    gopt = GOpt(small_ldbc, build_glogue=False)
+    gopt.pipeline.register(HintPass(), before="expand_paths")
+    names = [p.name for p in gopt.pipeline.passes("pre")]
+    assert names[0] == "hint_pass"
+    opt = gopt.optimize(Q.QR["Qr3"])
+    assert opt.logical.hints.get("custom_pass_ran") is True
+    assert "pre:hint_pass" in gopt.pipeline.signature()
+
+    with pytest.raises(PipelineError, match="already registered"):
+        gopt.pipeline.register(HintPass())
+
+    class BadPhase(Pass):
+        name = "bad"
+        phase = "nonsense"
+
+    with pytest.raises(PipelineError, match="unknown phase"):
+        gopt.pipeline.register(BadPhase())
+    with pytest.raises(PipelineError, match="no registered pass"):
+        default_pipeline().register(HintPass(), after="nope")
+    # anchor in a different phase is rejected
+    with pytest.raises(PipelineError, match="phase"):
+        default_pipeline().register(HintPass(), before="cbo")
+    # removal round-trips
+    pl = default_pipeline()
+    pl.remove("ConstantFoldingRule")
+    assert "rbo:ConstantFoldingRule" not in pl.signature()
+
+
+def test_ablation_flags_gate_pipeline_phases(gopt_small):
+    """The deprecated type_inference=/rbo=/cbo= shims still ablate."""
+    opt = gopt_small.optimize(Q.QR["Qr3"], rbo=False, cbo=False)
+    rbo_traces = [t for t in opt.trace.passes if t.phase == "rbo"]
+    assert rbo_traces and all(t.skipped for t in rbo_traces)
+    assert opt.trace.by_name("cbo").changed       # fallback plan still built
+    assert opt.physical is not None
+    off = gopt_small.optimize(Q.QT["Qt1"], type_inference=False)
+    assert off.trace.by_name("type_inference").skipped
+
+
+# ------------------------------------------------------ new heuristic rules
+
+def test_constant_folding_drops_tautology_and_detects_contradiction(
+        gopt_small):
+    q = ("Match (p1:PERSON)-[:KNOWS]->(p2:PERSON) "
+         "Where 1 = 1 and p1.id >= 0 Return count(p1) AS c")
+    opt = gopt_small.optimize(q)
+    assert not any(isinstance(op, ir.Select) for op in opt.logical.ops), \
+        "tautological conjunct must fold away entirely"
+    ref, _ = gopt_small.run(
+        "Match (p1:PERSON)-[:KNOWS]->(p2:PERSON) "
+        "Where p1.id >= 0 Return count(p1) AS c")
+    tbl, _ = gopt_small.execute(opt)
+    _table_eq(ref, tbl)
+    assert opt.trace.by_name("ConstantFoldingRule").changed
+
+    qf = ("Match (p1:PERSON)-[:KNOWS]->(p2:PERSON) "
+          "Where 1 = 2 Return count(p1) AS c")
+    optf = gopt_small.optimize(qf)
+    sels = [op for op in optf.logical.ops if isinstance(op, ir.Select)]
+    assert sels and sels[0].predicate == ir.Lit(False)
+    tf, _ = gopt_small.execute(optf)
+    assert int(tf.cols["c"][0]) == 0
+
+
+def test_constant_folding_expression_algebra():
+    fold = ConstantFoldingRule.fold
+    t, f = ir.Lit(True), ir.Lit(False)
+    assert fold(ir.Cmp("<", ir.Lit(1), ir.Lit(2))) == t
+    assert fold(ir.InSet(ir.Lit(5), (1, 2, 3))) == f
+    assert fold(ir.BoolOp("NOT", (ir.Cmp("=", ir.Lit(1), ir.Lit(1)),))) == f
+    p = ir.Cmp(">", ir.Prop("a", "id"), ir.Lit(0))
+    assert fold(ir.BoolOp("AND", (t, p))) == p           # neutral dropped
+    assert fold(ir.BoolOp("AND", (f, p))) == f           # dominant collapses
+    assert fold(ir.BoolOp("OR", (t, p))) == t
+    assert fold(ir.BoolOp("OR", (f, p))) == p
+    # params / incomparable literals are left alone
+    q = ir.Cmp("=", ir.Prop("a", "id"), ir.Param("x"))
+    assert fold(q) is q
+    mixed = ir.Cmp("<", ir.Lit("s"), ir.Lit(1))
+    assert fold(mixed) is mixed
+
+
+def test_constant_folding_reports_change_on_preexisting_tautology():
+    """A predicate that already IS Lit(True) must be dropped AND reported
+    as a change (a rule that mutates while returning False breaks the
+    fixpoint drivers)."""
+    lp = parse_cypher(Q.QR["Qr3"], ldbc_schema())
+    lp.pattern().vertices["author"].predicates.append(ir.Lit(True))
+    rule = ConstantFoldingRule()
+    assert rule.apply(lp) is True
+    assert lp.pattern().vertices["author"].predicates == []
+    assert rule.apply(lp) is False                       # fixpoint
+    lp.ops.append(ir.Select(ir.Lit(True)))
+    assert rule.apply(lp) is True
+    assert not any(isinstance(op, ir.Select) for op in lp.ops)
+
+
+class InvalidatingPass(Pass):
+    name = "invalidating_rule"
+    phase = "rbo"
+
+    def run(self, ctx):
+        ctx.invalid = True
+        return True
+
+
+def test_rbo_pass_setting_invalid_short_circuits(small_ldbc):
+    gopt = GOpt(small_ldbc, build_glogue=False)
+    gopt.pipeline.register(InvalidatingPass())
+    opt = gopt.optimize(Q.QR["Qr3"])
+    assert opt.invalid and opt.physical is None
+    assert opt.trace.invalid
+    assert opt.trace.by_name("cbo") is None      # pipeline stopped early
+
+
+def test_redundant_select_merge():
+    pat = parse_cypher(Q.QR["Qr5"], ldbc_schema(), {"id1": 1, "id2": 2})
+    c1 = ir.Cmp(">", ir.Prop("p1", "id"), ir.Lit(0))
+    c2 = ir.Cmp("<", ir.Prop("p2", "id"), ir.Lit(9))
+    plan = ir.LogicalPlan([pat.ops[0], ir.Select(c1), ir.Select(c2),
+                           ir.Select(c1)])
+    assert RedundantSelectMergeRule().apply(plan)
+    sels = [op for op in plan.ops if isinstance(op, ir.Select)]
+    assert len(sels) == 1
+    assert ir.conjuncts(sels[0].predicate) == [c1, c2]   # deduped, ordered
+    assert not RedundantSelectMergeRule().apply(plan)    # fixpoint
+
+
+# --------------------------------------------------------- EXPLAIN/PROFILE
+
+def test_explain_report_structure(gopt_small):
+    rep = gopt_small.explain(Q.QIC["ic3"], Q.QIC_PARAMS["ic3"])
+    assert not rep.invalid and not rep.analyze
+    names = rep.pass_names()
+    for expected in ("expand_paths", "type_inference", "FilterIntoMatchRule",
+                     "ConstantFoldingRule", "cbo", "physical_rules"):
+        assert expected in names
+    assert rep.operators and all(o.est_rows > 0 for o in rep.operators)
+    assert all(o.actual_rows is None for o in rep.operators)
+    text = rep.render()
+    assert "Scan(" in text and "-- pipeline --" in text
+    assert rep.result_rows is None
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_profile_reports_estimated_vs_actual(gopt_small, backend):
+    """Acceptance: analyze=True reports per-pass traces and per-operator
+    estimated-vs-actual cardinalities on both backends."""
+    rep = gopt_small.explain(Q.QIC["ic11"], Q.QIC_PARAMS["ic11"],
+                             analyze=True, backend=backend)
+    assert rep.analyze and rep.backend == backend
+    assert rep.trace is not None and rep.trace.passes
+    eva = rep.estimated_vs_actual()
+    assert eva and all(est > 0 and act is not None for _, est, act in eva)
+    ref, _ = gopt_small.run(Q.QIC["ic11"], Q.QIC_PARAMS["ic11"],
+                            backend=backend)
+    assert rep.result_rows == ref.nrows
+    assert rep.exec_wall_s is not None and rep.exec_wall_s >= 0
+
+
+def test_explain_profile_query_prefixes(gopt_small):
+    rep = gopt_small.run("EXPLAIN " + Q.QR["Qr3"])
+    assert rep.operators and rep.result_rows is None and not rep.analyze
+    prof = gopt_small.run("profile " + Q.QR["Qr3"])      # case-insensitive
+    assert prof.analyze and prof.result_rows == 1
+    # parser records the mode as a hint; the canonical form is unchanged,
+    # so the EXPLAIN'd query shares its cached plan with the plain form
+    plan = parse_cypher("EXPLAIN " + Q.QR["Qr3"], gopt_small.schema)
+    plain = parse_cypher(Q.QR["Qr3"], gopt_small.schema)
+    assert plan.hints.get("explain") == "explain"
+    assert ir.canonical_form(plan) == ir.canonical_form(plain)
+    # PROFILE of a parameterized query gets its bindings like run()
+    rep2 = gopt_small.run("PROFILE " + Q.QIC["ic3"], Q.QIC_PARAMS["ic3"])
+    assert rep2.analyze and rep2.result_rows is not None
+
+
+def test_explain_prefix_is_positional_not_a_keyword(gopt_small):
+    """Identifiers named explain/profile stay valid (the prefix is only
+    recognized as the very first token)."""
+    q = ("Match (profile:PERSON)-[:KNOWS]->(explain:PERSON) "
+         "Return count(profile) AS c")
+    tbl, _ = gopt_small.run(q)
+    assert tbl.nrows == 1
+    rep = gopt_small.run("EXPLAIN " + q)
+    assert rep.operators and not rep.analyze
+    # a plan parsed with the prefix routes run() to the explain surface too
+    plan = parse_cypher("PROFILE " + Q.QR["Qr3"], gopt_small.schema)
+    rep2 = gopt_small.run(plan)
+    assert rep2.analyze and rep2.result_rows == 1
+
+
+def test_profile_unfused_chain_actuals_align(gopt_small):
+    """analyze=True with the fuse_expand=False ablation executes a chain
+    plan unfused (per-hop EXPAND logs); the chain operator must report the
+    last hop's actual rows, not the first's."""
+    rep_f = gopt_small.explain(CHAIN_Q, analyze=True, backend="jax",
+                               cbo=False)
+    rep_u = gopt_small.explain(CHAIN_Q, analyze=True, backend="jax",
+                               cbo=False, fuse_expand=False)
+    chain_f = [o for o in rep_f.operators if o.op.startswith("ExpandChain(")]
+    chain_u = [o for o in rep_u.operators if o.op.startswith("ExpandChain(")]
+    assert chain_f and chain_u
+    assert chain_u[0].actual_rows == chain_f[0].actual_rows
+    assert rep_u.result_rows == rep_f.result_rows
+
+
+def test_physical_rules_pass_noop_when_nothing_fuses(gopt_small):
+    """A plan with no fusable run must leave the physical-rules trace
+    unchanged (the rewrite hands back the input plan)."""
+    opt = gopt_small.optimize(Q.QR["Qr5"], Q.QR_PARAMS["Qr5"],
+                              backend="jax")   # 2 vertices: no >=2-hop run
+    tr = opt.trace.by_name("physical_rules")
+    assert tr is not None and not tr.skipped and not tr.changed
+
+
+INVALID_Q = "Match (a:TAG)-[:KNOWS]->(b) Return count(a) AS c"
+
+
+def test_explain_invalid_query_regression(gopt_small):
+    """Regression (satellite): explain on a type-inference-INVALID query
+    must render the provably-empty result, not crash on physical=None."""
+    rep = gopt_small.explain(INVALID_Q)
+    assert rep.invalid and rep.physical is None and rep.operators == []
+    assert UNSAT_MESSAGE in rep.render()
+    pq = gopt_small.prepare(INVALID_Q)
+    rep2 = pq.explain()
+    assert rep2.invalid and UNSAT_MESSAGE in rep2.render()
+    # analyze on an invalid query: zero rows, still no crash
+    rep3 = pq.explain(analyze=True)
+    assert rep3.result_rows == 0
+    prof = gopt_small.run("PROFILE " + INVALID_Q)
+    assert prof.invalid and prof.result_rows == 0
+
+
+# -------------------------------------------- stats epoch / cache invalidation
+
+def test_stats_epoch_invalidates_plan_cache(small_ldbc):
+    gopt = GOpt(small_ldbc, build_glogue=False)
+    text, params = Q.QIC["ic3"], Q.QIC_PARAMS["ic3"]
+    pq = gopt.prepare(text)
+    info = gopt.plan_cache_info()
+    assert info["epoch"] == 0 and info["plans"] == 1
+    before = dict(gopt.compile_counters)
+    assert gopt.prepare(text) is pq                  # cache hit
+    assert dict(gopt.compile_counters) == before
+    assert gopt.refresh_stats() == 1
+    info = gopt.plan_cache_info()
+    assert info["epoch"] == 1 and info["plans"] == 0 and info["texts"] == 0
+    pq2 = gopt.prepare(text)                         # recompiles
+    assert pq2 is not pq
+    assert gopt.compile_counters["cbo"] == before["cbo"] + 1
+    # the stale handle still executes its old plan
+    t_old, _ = pq.execute(params)
+    t_new, _ = pq2.execute(params)
+    _table_eq(t_old, t_new)
+
+
+# ------------------------------------------------------------- execute_many
+
+def test_execute_many_row_parity_both_backends(gopt_small):
+    text = Q.QIC["ic3"]
+    pids = (3, 5, 9)
+    refs = [gopt_small.run(text, {"pid": pid})[0] for pid in pids]
+    for backend in ("numpy", "jax"):
+        pq = gopt_small.prepare(text, backend=backend)
+        before = dict(gopt_small.compile_counters)
+        outs = pq.execute_many([{"pid": pid} for pid in pids])
+        assert dict(gopt_small.compile_counters) == before, \
+            "execute_many must reuse the one cached plan"
+        assert len(outs) == len(pids)
+        for ref, (tbl, stats) in zip(refs, outs):
+            _table_eq(ref, tbl, sort=backend == "jax")
+            assert isinstance(stats.rows_produced, int)
+
+
+# --------------------------------------------------- jax expand-chain fusion
+
+CHAIN_Q = ("Match (f:FORUM)-[:CONTAINEROF]->(p:POST)"
+           "-[:HASCREATOR]->(per:PERSON) Return count(f) AS c")
+
+
+def test_jax_fuses_expand_chain_and_stays_row_identical(gopt_small):
+    o_np = gopt_small.optimize(CHAIN_Q, backend="numpy", cbo=False)
+    o_jx = gopt_small.optimize(CHAIN_Q, backend="jax", cbo=False)
+    chains = [n for n in plan_operators(o_jx.physical)
+              if isinstance(n, ExpandChainNode)]
+    assert chains and len(chains[0].steps) == 2
+    assert not any(isinstance(n, ExpandChainNode)
+                   for n in plan_operators(o_np.physical))
+    # fusion is packaging: unfused signature == the numpy plan
+    assert plan_signature(unfuse_chains(o_jx.physical)) == \
+        plan_signature(o_np.physical)
+    t_np, _ = gopt_small.execute(o_np, backend="numpy")
+    t_jx, s_jx = gopt_small.execute(o_jx, backend="jax")
+    _table_eq(t_np, t_jx, sort=True)
+    assert any(name.startswith("EXPANDCHAIN(") for name, _ in s_jx.op_rows)
+    # fuse_expand=False ablation falls back to the unfused plan
+    t_ab, s_ab = gopt_small.execute(o_jx, backend="jax", fuse_expand=False)
+    _table_eq(t_np, t_ab, sort=True)
+    assert not any(name.startswith("EXPANDCHAIN(")
+                   for name, _ in s_ab.op_rows)
+
+
+def test_chain_fusion_respects_predicates(gopt_small):
+    """A predicate pushed into an intermediate hop vertex must block the
+    fusion of that hop (the filter has to run at its own hop)."""
+    q = ("Match (f:FORUM)-[:CONTAINEROF]->(p:POST)"
+         "-[:HASCREATOR]->(per:PERSON) Where p.length >= 0 "
+         "Return count(f) AS c")
+    opt = gopt_small.optimize(q, backend="jax", cbo=False)
+    assert not any(isinstance(n, ExpandChainNode)
+                   for n in plan_operators(opt.physical))
+    ref = gopt_small.optimize(q, backend="numpy", cbo=False)
+    t1, _ = gopt_small.execute(ref, backend="numpy")
+    t2, _ = gopt_small.execute(opt, backend="jax")
+    _table_eq(t1, t2, sort=True)
+
+
+def test_chain_restarts_after_join_boundary(gopt_small):
+    """A fusable hop whose source is bound below the current run (e.g. by
+    a join child) must *anchor a new chain*, not fall out unfused: here the
+    +o hop expands from a, then +po expands from m (bound by the join, not
+    carried) — the rewrite closes the first run and still fuses
+    (+po, +fo)."""
+    from types import SimpleNamespace
+
+    from repro.core.gopt import OptimizedQuery
+    from repro.core.physical import ExpandNode, JoinNode, ScanNode
+    from repro.graphdb.jax_backend import fuse_expand_chain
+
+    q = ("Match (a:PERSON)-[:KNOWS]->(b:PERSON), "
+         "(a)-[:WORKAT]->(o:ORGANISATION), "
+         "(b)<-[:HASCREATOR]-(m:COMMENT), (m)-[:REPLYOF]->(po:POST), "
+         "(po)<-[:CONTAINEROF]-(fo:FORUM) Return count(a) AS c")
+    lp = parse_cypher(q, gopt_small.schema)
+    pattern = infer_types(lp.pattern(), gopt_small.schema)
+    lp.replace_pattern(pattern)
+
+    def edge(x, y):
+        return next(e for e in pattern.edges if {e.src, e.dst} == {x, y})
+
+    join = JoinNode(ExpandNode(ScanNode("a"), "b", [edge("a", "b")]),
+                    ExpandNode(ScanNode("b"), "m", [edge("b", "m")]),
+                    ("b",))
+    plan = ExpandNode(
+        ExpandNode(ExpandNode(join, "o", [edge("a", "o")]),
+                   "po", [edge("m", "po")]),
+        "fo", [edge("po", "fo")])
+
+    fused = fuse_expand_chain(plan, SimpleNamespace(pattern=lambda: pattern))
+    chains = [n for n in plan_operators(fused)
+              if isinstance(n, ExpandChainNode)]
+    assert len(chains) == 1
+    assert [s.alias for s in chains[0].steps] == ["po", "fo"]
+    plain = [n for n in plan_operators(fused) if isinstance(n, ExpandNode)]
+    assert any(n.new_alias == "o" for n in plain)
+    # and the fused plan stays row-identical to the hand-built one
+    ref, _ = gopt_small.execute(OptimizedQuery(lp, plan, 0.0),
+                                backend="numpy")
+    out, _ = gopt_small.execute(OptimizedQuery(lp.copy(), fused, 0.0),
+                                backend="jax")
+    _table_eq(ref, out, sort=True)
+
+
+def test_profile_chain_plan_reports_actuals(gopt_small):
+    rep = gopt_small.explain(CHAIN_Q, analyze=True, backend="jax", cbo=False)
+    ops = [o.op for o in rep.operators]
+    assert any(o.startswith("ExpandChain(") for o in ops)
+    assert all(o.actual_rows is not None for o in rep.operators)
