@@ -25,6 +25,12 @@ python -m pytest -x -q tests/test_pipeline.py
 echo "== EXPLAIN smoke =="
 python scripts/explain_smoke.py
 
+# residency gate (OperatorSet v2, DESIGN.md §7): a 2-hop Appendix-A query
+# on the jax backend must run with zero device->host transfers between
+# plan steps, row-identical to numpy — the device-resident contract
+echo "== residency smoke =="
+python scripts/residency_smoke.py
+
 echo "== tier-1 tests =="
 # test_pipeline.py already ran (and failed fast) in the parity gate above
 python -m pytest -x -q --ignore=tests/test_pipeline.py

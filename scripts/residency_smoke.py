@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Residency smoke for CI (scripts/ci.sh): on the jax backend, a 2-hop
+Appendix-A query must execute with ZERO device->host transfers between plan
+steps — the binding table crosses to the host exactly once, at delivery —
+and stay row-identical to the numpy backend.
+
+Usage: PYTHONPATH=src python scripts/residency_smoke.py [--sf 0.05]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(1, ".")
+
+import numpy as np                                                 # noqa: E402
+
+from benchmarks import queries as Q                                # noqa: E402
+from repro.core.gopt import GOpt                                   # noqa: E402
+from repro.core.physical_spec import get_spec                      # noqa: E402
+from repro.graphdb.ldbc import generate_ldbc                       # noqa: E402
+
+# ic1 is the 2-hop KNOWS*2 friend-of-friend query; Qc1a closes a cycle via
+# the Pallas WCOJ membership probe — together they cover both pattern paths
+SMOKE = [("ic1", Q.QIC["ic1"], Q.QIC_PARAMS["ic1"]),
+         ("Qc1a", Q.QC["Qc1a"], None)]
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"RESIDENCY SMOKE FAIL: {msg}")
+        sys.exit(1)
+
+
+def mid_plan_d2h(transfers):
+    from repro.core.physical_spec import TransferStats
+    if TransferStats.mid_plan_d2h(transfers) == 0:
+        return {}
+    return {k: v for k, v in transfers.items()
+            if k.endswith(":d2h") and not k.startswith("deliver:")}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.05)
+    args = ap.parse_args()
+    gopt = GOpt(generate_ldbc(sf=args.sf))
+    get_spec("jax")     # fail fast if the backend cannot register
+
+    for name, text, params in SMOKE:
+        opt = gopt.optimize(text, params, backend="jax")
+        ref, _ = gopt.execute(opt, backend="numpy")
+        tbl, stats = gopt.execute(opt, backend="jax")
+        check(stats.transfers is not None, f"{name}: no transfer ledger")
+        leaks = mid_plan_d2h(stats.transfers)
+        check(not leaks, f"{name}: mid-plan device->host transfers: {leaks}")
+        check(tbl.nrows == ref.nrows and set(tbl.cols) == set(ref.cols)
+              and all(np.array_equal(tbl.cols[k], ref.cols[k])
+                      for k in tbl.cols),
+              f"{name}: jax result diverged from numpy")
+        delivered = stats.transfers.get("deliver:d2h", {}).get("calls", 0)
+        check(tbl.nrows == 0 or delivered > 0,
+              f"{name}: result not delivered through ops.to_host")
+        print(f"  ok {name}: rows={tbl.nrows} transfers="
+              f"{stats.transfers}")
+    print("RESIDENCY SMOKE OK")
+
+
+if __name__ == "__main__":
+    main()

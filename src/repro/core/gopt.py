@@ -18,8 +18,9 @@ On top of the one-shot pipeline sits the **prepared-query lifecycle**
 the optimized physical plan keyed by (normalized GIR canonical form,
 backend, optimizer flags, pipeline signature, build-time bindings);
 ``PreparedQuery.execute(params)`` skips straight to the engine with fresh
-parameter bindings, and ``execute_many`` loops a batch of bindings over the
-one cached plan.  ``run()`` is sugar over an LRU of prepared queries.
+parameter bindings, and ``execute_many`` runs a whole binding batch through
+one vectorized engine pass over the cached plan (``Engine.run_batch``).
+``run()`` is sugar over an LRU of prepared queries.
 ``refresh_stats()`` bumps the statistics epoch, invalidating every cached
 plan (stale ``PreparedQuery`` handles keep executing their old plan).
 ``compile_counters`` meters the pipeline stages so tests (and benchmarks)
@@ -115,14 +116,31 @@ class PreparedQuery:
                                  backend=exec_kw.pop("backend", self.spec),
                                  **exec_kw)
 
-    def execute_many(self, bindings: list[dict | None],
+    def execute_many(self, bindings: list[dict | None], batch: bool = True,
                      **exec_kw) -> list[tuple[Table, ExecStats]]:
-        """Batch execution: one cached plan, many parameter bindings.
+        """Batch execution: one cached plan, many parameter bindings, one
+        engine pass.
 
-        Today this is a plain loop over ``execute`` (compile cost is paid
-        zero times, engine cost once per binding); vectorizing the
-        per-binding scan filter into a single engine pass is a ROADMAP
-        item."""
+        The engine runs the pattern phase **once**: parameter-dependent
+        predicates execute as the union of the per-binding filters (the
+        bindings stack into a single scan filter), then each binding
+        re-applies its exact predicate and runs its own relational tail —
+        row-identical to looping ``execute`` per binding, with the
+        expansion/join work shared.  ``batch=False`` (or a blow-up of the
+        union intermediate under ``max_rows``) falls back to the loop."""
+        if batch and len(bindings) > 1 and not self.opt.invalid:
+            kw = dict(exec_kw)
+            backend = kw.pop("backend", self.spec)
+            try:
+                out = self.gopt.execute_batch(self.opt, bindings,
+                                              backend=backend, **kw)
+                self.executions += len(bindings)
+                return out
+            except RuntimeError as exc:
+                # only the union intermediate blowing the row cap falls
+                # back to the loop; other engine/XLA failures surface
+                if "intermediate blow-up" not in str(exc):
+                    raise
         return [self.execute(b, **exec_kw) for b in bindings]
 
     def explain(self, params: dict | None = None, analyze: bool = False,
@@ -346,6 +364,23 @@ class GOpt:
         eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
                      max_rows=max_rows, backend=spec)
         return eng.run(opt.logical, opt.physical, params=params)
+
+    def execute_batch(self, opt: OptimizedQuery, bindings: list[dict | None],
+                      fuse_expand: bool | None = None,
+                      trim_fields: bool = True,
+                      max_rows: int = 100_000_000,
+                      backend: str | PhysicalSpec | None = None
+                      ) -> list[tuple[Table, ExecStats]]:
+        """Vectorized sibling of ``execute``: one engine pattern pass for a
+        whole binding batch (``Engine.run_batch``)."""
+        if opt.invalid:
+            return [(Table.empty(), ExecStats()) for _ in bindings]
+        fuse = (opt.logical.hints.get("fuse_expand", True)
+                if fuse_expand is None else fuse_expand)
+        spec = self.spec if backend is None else get_spec(backend)
+        eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
+                     max_rows=max_rows, backend=spec)
+        return eng.run_batch(opt.logical, opt.physical, bindings)
 
     def run(self, query: str | ir.LogicalPlan, params: dict | None = None,
             **kw) -> tuple[Table, ExecStats] | ExplainReport:

@@ -1,4 +1,4 @@
-"""PhysicalSpec — the pluggable backend layer (paper §5.3, DESIGN.md §2).
+"""PhysicalSpec — the pluggable backend layer (paper §5.3, DESIGN.md §2/§7).
 
 The paper's modularity claim at the physical level: a graph system plugs into
 GOpt by *registering* (a) implementations of the physical operators the CBO
@@ -8,16 +8,29 @@ uses to weigh those operators. The optimizer and the binding-table executor
 core are backend-agnostic; everything data-parallel goes through an
 ``OperatorSet`` resolved from the registry.
 
+OperatorSet v2 (DESIGN.md §7): operators take and return **backend-native
+arrays**.  The engine's binding ``Table`` is a thin wrapper over
+backend-owned columns; the only sanctioned device->host conversion is
+``ops.to_host(...)``, which the engine calls exactly once per query — at
+result delivery, never between plan steps.  Besides the six core operators
+(``REQUIRED_OPERATORS``) a backend inherits host-numpy defaults for the
+generic array primitives (``ARRAY_PRIMITIVES``); a device backend overrides
+them so binding tables stay resident.  ``TransferStats`` is the
+instrumentation hook proving residency: backends record every host<->device
+data movement, tagged with the engine's current execution phase.
+
 Two backends ship in-tree (lazily imported on first ``get_spec``):
 
 - ``numpy`` — the host path over ``repro.graphdb.vecops``;
-- ``jax``   — jit'd padded-block primitives (``repro.graphdb.jaxops``) with
-  the ``wcoj_intersect`` Pallas kernel for the expand-and-intersect membership
-  probe (interpret mode on CPU, compiled on TPU).
+- ``jax``   — device-resident columns, jit'd padded-block primitives, the
+  ``wcoj_intersect`` Pallas kernel for membership probes, and a
+  segment-reduce / sort-merge relational tail.
 
 Adding a third backend: subclass ``OperatorSet``, build a ``PhysicalSpec``
-with a ``make_operators`` factory and a ``CostParams``, and call
-``register_spec``. See DESIGN.md for the full contract.
+with a ``make_operators`` factory and a ``CostParams``, call
+``register_spec``, and hold the operator set to
+``validate_operator_set(ops, conformance=True)`` — the v2 conformance
+suite checks semantics *and* the row-order contract against tiny oracles.
 """
 from __future__ import annotations
 
@@ -27,11 +40,17 @@ from typing import Callable
 
 import numpy as np
 
-# operator names every backend must provide (callable attributes on the
-# OperatorSet it returns from make_operators)
+# operator names every backend must implement itself (callable attributes on
+# the OperatorSet it returns from make_operators, not inherited from the base)
 REQUIRED_OPERATORS = ("scan", "expand", "intersect", "join",
                       "combine_keys", "group_reduce")
 
+# v2 array primitives: host-numpy defaults on the base class; a backend with
+# its own array type overrides all of them (plus vertex_prop/edge_prop) so
+# binding-table columns never leave the device between plan steps
+ARRAY_PRIMITIVES = ("asarray", "to_host", "take", "mask", "concat", "nonzero",
+                    "full", "arange", "isin", "searchsorted", "lexsort",
+                    "distinct_indices")
 
 @dataclasses.dataclass(frozen=True)
 class CostParams:
@@ -47,26 +66,160 @@ class CostParams:
     alpha_join: float = 1.0
 
 
+class TransferStats:
+    """Host<->device data-movement ledger of one ``OperatorSet``.
+
+    Backends call ``record("d2h"|"h2d", n_elems)`` on every array that
+    crosses the boundary; the engine tags the current execution phase
+    (``"pattern"`` / ``"tail"`` / ``"deliver"``) so tests and benchmarks can
+    assert the residency invariant: zero ``d2h`` outside ``deliver``.
+    Scalar control-plane syncs (row counts, blow-up guards) are *not*
+    transfers and are not recorded."""
+
+    def __init__(self):
+        self.phase = ""
+        self.events: list[tuple[str, str, int]] = []   # (phase, kind, elems)
+
+    def record(self, kind: str, elems: int):
+        self.events.append((self.phase, kind, int(elems)))
+
+    def set_phase(self, phase: str):
+        self.phase = phase
+
+    def reset(self):
+        self.phase = ""
+        self.events.clear()
+
+    def mark(self) -> int:
+        return len(self.events)
+
+    def count(self, kind: str, phase: str | None = None,
+              since: int = 0) -> int:
+        return sum(1 for ph, k, _ in self.events[since:]
+                   if k == kind and (phase is None or ph == phase))
+
+    def elems(self, kind: str, phase: str | None = None,
+              since: int = 0) -> int:
+        return sum(n for ph, k, n in self.events[since:]
+                   if k == kind and (phase is None or ph == phase))
+
+    def summary(self, since: int = 0) -> dict[str, dict[str, int]]:
+        """``{"phase:kind": {"calls": n, "elems": m}}`` over events recorded
+        after the ``mark()`` value ``since``."""
+        out: dict[str, dict[str, int]] = {}
+        for ph, k, n in self.events[since:]:
+            ent = out.setdefault(f"{ph or 'unphased'}:{k}",
+                                 {"calls": 0, "elems": 0})
+            ent["calls"] += 1
+            ent["elems"] += n
+        return out
+
+    @staticmethod
+    def mid_plan_d2h(transfers: dict | None) -> int:
+        """Device->host transfer calls outside the delivery phase, from a
+        ``summary()`` dict (``ExecStats.transfers``) — THE residency
+        invariant: zero for a conforming device-resident execution.  Lives
+        here because this class owns the summary key format."""
+        return sum(v["calls"] for k, v in (transfers or {}).items()
+                   if k.endswith(":d2h") and not k.startswith("deliver:"))
+
+
 class OperatorSet:
     """Physical operator implementations bound to one ``GraphStore``.
 
-    All array arguments and results are host numpy (int64 binding-table
-    columns); a backend is free to stage through device arrays internally —
-    padded-block / validity-mask layouts stay hidden behind this interface.
+    v2 contract: every array argument and result is **backend-native** —
+    whatever array type the backend keeps its binding-table columns in.
+    ``asarray`` brings host data in, ``to_host`` (the only sanctioned
+    device->host conversion) brings results out.  The base class ships
+    working host-numpy implementations of the generic array primitives and
+    the property gathers, so a host backend only implements
+    ``REQUIRED_OPERATORS``; a device backend overrides the primitives too.
+
+    Output **row order is part of the contract** (DESIGN.md §2.2): operators
+    are order-preserving (row-major over inputs; joins emit pairs in
+    sort-merge order; groups in ascending key order) so any two conforming
+    backends produce row-for-row identical binding tables for one plan.
+    ``validate_operator_set(ops, conformance=True)`` checks both semantics
+    and order against tiny oracles.
     """
 
     name = "abstract"
 
     def __init__(self, store):
         self.store = store
+        self.transfer_stats = TransferStats()
+
+    # ------------------------------------------------- array primitives (v2)
+    def asarray(self, values):
+        """Host values -> backend array (records ``h2d`` on device sets)."""
+        return np.asarray(values)
+
+    def to_host(self, x):
+        """Backend array (or a binding ``Table`` of them) -> host numpy.
+
+        The engine calls this exactly once per query, at result delivery;
+        device backends record the ``d2h`` transfer."""
+        if hasattr(x, "cols") and hasattr(x, "nrows"):      # binding Table
+            return type(x)({k: self._array_to_host(v)
+                            for k, v in x.cols.items()}, x.nrows)
+        return self._array_to_host(x)
+
+    def _array_to_host(self, a) -> np.ndarray:
+        return np.asarray(a)
+
+    def take(self, a, idx):
+        return a[idx]
+
+    def mask(self, a, m):
+        return a[m]
+
+    def concat(self, parts: list):
+        if not parts:
+            return np.zeros(0, dtype=np.int64)
+        if len(parts) == 1:
+            return parts[0]
+        return np.concatenate(parts)
+
+    def nonzero(self, m):
+        return np.nonzero(m)[0]
+
+    def full(self, n: int, value):
+        return np.full(n, value)
+
+    def arange(self, n: int):
+        return np.arange(n, dtype=np.int64)
+
+    def isin(self, a, values) -> np.ndarray:
+        return np.isin(a, np.asarray(list(values), dtype=np.int64))
+
+    def searchsorted(self, sorted_arr, values, side: str = "left"):
+        return np.searchsorted(sorted_arr, values, side=side)
+
+    def lexsort(self, cols: list):
+        """Indices sorting rows by ``cols`` (last col primary, stable)."""
+        return np.lexsort(tuple(cols))
+
+    def distinct_indices(self, key):
+        """First-occurrence row index per distinct key value, ascending —
+        ``take``-ing them preserves the original order of first sightings."""
+        _, first = np.unique(key, return_index=True)
+        return np.sort(first)
+
+    # ------------------------------------------------------ property gathers
+    def vertex_prop(self, ids, prop: str):
+        """Property column gather for (possibly mixed-type) vertex ids;
+        missing -> the backend's integer-min sentinel."""
+        return self.store.vertex_prop(ids, prop)
+
+    def edge_prop(self, triple_ids, pos, prop: str):
+        return self.store.edge_prop(triple_ids, pos, prop)
 
     # ------------------------------------------------------------- pattern
-    def scan(self, lo: int, hi: int) -> np.ndarray:
+    def scan(self, lo: int, hi: int):
         """All vertex ids of one type range ``[lo, hi)`` (SCAN leaf)."""
         raise NotImplementedError
 
-    def expand(self, csr, rows_local: np.ndarray,
-               max_out: int | None = None):
+    def expand(self, csr, rows_local, max_out: int | None = None):
         """Expand each row's vertex (local id into ``csr``) to all neighbors.
 
         Returns ``(row_idx, neighbor_global_id, edge_pos)`` in row-major
@@ -74,23 +227,28 @@ class OperatorSet:
         identity position (``csr.pos``-mapped when present)."""
         raise NotImplementedError
 
-    def intersect(self, csr, rows_local: np.ndarray, targets: np.ndarray):
+    def intersect(self, csr, rows_local, targets):
         """WCOJ membership probe: is ``targets[i]`` in row ``rows_local[i]``?
 
-        Returns ``(found: bool[n], edge_pos: int64[n])`` — ``edge_pos`` is
+        Returns ``(found: bool[n], edge_pos: int[n])`` — ``edge_pos`` is
         the edge identity position, valid only where ``found``."""
         raise NotImplementedError
 
-    def join(self, lkeys: np.ndarray, rkeys: np.ndarray,
-             max_out: int | None = None):
-        """Equi join of two int64 key columns -> (lidx, ridx) row pairs."""
+    def join(self, lkeys, rkeys, max_out: int | None = None):
+        """Equi join of two key columns -> (lidx, ridx) row pairs in
+        sort-merge order (stable by left sorted position, then right)."""
         raise NotImplementedError
 
     # ---------------------------------------------------- relational tail
-    def combine_keys(self, cols: list[np.ndarray]) -> np.ndarray:
+    def combine_keys(self, cols: list):
+        """Pack multiple key columns into one comparable key column whose
+        ascending order is the lexicographic order of the tuples
+        (``cols[0]`` most significant)."""
         raise NotImplementedError
 
-    def group_reduce(self, keys: np.ndarray, values: dict):
+    def group_reduce(self, keys, values: dict):
+        """Group by key; groups ascend by key value.  Returns
+        ``(first_row_index_per_group, {name: aggregated})``."""
         raise NotImplementedError
 
 
@@ -157,11 +315,145 @@ def available_backends() -> list[str]:
     return sorted(set(_REGISTRY) | set(_LAZY_BACKENDS))
 
 
-def validate_operator_set(ops: OperatorSet) -> OperatorSet:
+def validate_operator_set(ops: OperatorSet,
+                          conformance: bool = False) -> OperatorSet:
+    """Interface check (always) + the OperatorSet-v2 conformance suite
+    (``conformance=True``): run every operator against tiny oracles,
+    checking values *and* the row-order contract.  Raises ``TypeError``
+    with the full failure list, so a third backend gets every broken
+    operator in one shot."""
     missing = [n for n in REQUIRED_OPERATORS
                if not callable(getattr(ops, n, None))
                or getattr(type(ops), n, None) is getattr(OperatorSet, n)]
     if missing:
         raise TypeError(f"operator set {type(ops).__name__} does not "
                         f"implement required operators: {missing}")
+    absent = [n for n in ARRAY_PRIMITIVES
+              if not callable(getattr(ops, n, None))]
+    if absent:
+        raise TypeError(f"operator set {type(ops).__name__} lost array "
+                        f"primitives: {absent}")
+    if conformance:
+        failures = run_operator_conformance(ops)
+        if failures:
+            raise TypeError(
+                f"operator set {type(ops).__name__} failed OperatorSet-v2 "
+                f"conformance ({len(failures)}):\n  " + "\n  ".join(failures))
     return ops
+
+
+# --------------------------------------------------------------------------
+# OperatorSet v2 conformance suite
+# --------------------------------------------------------------------------
+
+def _conf_csr():
+    """Tiny sorted-CSR fixture: 4 rows -> [10,12] / [3,7,9] / [] / [12]."""
+    from repro.graphdb.storage import CSR
+    return CSR(indptr=np.array([0, 2, 5, 5, 6], dtype=np.int64),
+               indices=np.array([10, 12, 3, 7, 9, 12], dtype=np.int64))
+
+
+def run_operator_conformance(ops: OperatorSet) -> list[str]:
+    """Exercise every v2 operator against hand-computed oracles; returns a
+    list of human-readable failures (empty = conformant).  Uses only
+    synthetic arrays + a tiny CSR, so any backend can run it without a
+    populated ``GraphStore``."""
+    fails: list[str] = []
+    H = ops.to_host
+    A = ops.asarray
+
+    def check(name, got, want, order_matters=True):
+        got = np.asarray(H(got))
+        want = np.asarray(want)
+        if not order_matters:
+            got, want = np.sort(got), np.sort(want)
+        if got.shape != want.shape or not np.array_equal(
+                got.astype(np.float64), want.astype(np.float64)):
+            fails.append(f"{name}: got {got.tolist()!r}, "
+                         f"want {want.tolist()!r}")
+
+    def expect_raise(name, fn):
+        try:
+            fn()
+            fails.append(f"{name}: expected RuntimeError (blow-up guard)")
+        except RuntimeError:
+            pass
+        except Exception as exc:                       # noqa: BLE001
+            fails.append(f"{name}: wrong exception {type(exc).__name__}")
+
+    try:
+        ids = A(np.array([5, 1, 3, 1, 0], dtype=np.int64))
+        check("asarray/to_host roundtrip", ids, [5, 1, 3, 1, 0])
+        check("take", ops.take(ids, A(np.array([2, 0], np.int64))), [3, 5])
+        check("mask", ops.mask(ids, A(np.array([True, False, True, False,
+                                                False]))), [5, 3])
+        check("concat", ops.concat([ids, A(np.array([9], np.int64))]),
+              [5, 1, 3, 1, 0, 9])
+        check("nonzero", ops.nonzero(A(np.array([False, True, False, True]))),
+              [1, 3])
+        check("full", ops.full(3, 7), [7, 7, 7])
+        check("arange", ops.arange(4), [0, 1, 2, 3])
+        check("isin", ops.isin(ids, [1, 5]),
+              [True, True, False, True, False])
+        check("searchsorted",
+              ops.searchsorted(A(np.array([1, 3, 3, 8], np.int64)),
+                               A(np.array([0, 3, 9], np.int64)), side="right"),
+              [0, 3, 4])
+        # lexsort: last col primary, stable within ties
+        c0 = A(np.array([1, 0, 1, 0], np.int64))
+        c1 = A(np.array([2, 2, 1, 1], np.int64))
+        check("lexsort", ops.lexsort([c0, c1]), [3, 2, 1, 0])
+        check("distinct_indices",
+              ops.distinct_indices(A(np.array([3, 1, 3, 7, 1], np.int64))),
+              [0, 1, 3])
+
+        check("scan", ops.scan(3, 7), [3, 4, 5, 6])
+
+        csr = _conf_csr()
+        rows = A(np.array([1, 0, 2, 3], np.int64))
+        ridx, nbr, epos = ops.expand(csr, rows)
+        check("expand.row_idx", ridx, [0, 0, 0, 1, 1, 3])
+        check("expand.nbr", nbr, [3, 7, 9, 10, 12, 12])
+        check("expand.edge_pos", epos, [2, 3, 4, 0, 1, 5])
+        expect_raise("expand.max_out", lambda: ops.expand(csr, rows,
+                                                          max_out=2))
+
+        found, ipos = ops.intersect(csr, A(np.array([0, 1, 1, 3], np.int64)),
+                                    A(np.array([12, 8, 9, 12], np.int64)))
+        check("intersect.found", found, [True, False, True, True])
+        fh = np.asarray(H(found)).astype(bool)
+        check("intersect.edge_pos", np.asarray(H(ipos))[fh], [1, 4, 5])
+
+        lidx, ridx2 = ops.join(A(np.array([2, 1, 2, 5], np.int64)),
+                               A(np.array([2, 2, 7, 1], np.int64)))
+        check("join.lidx (sort-merge order)", lidx, [1, 0, 0, 2, 2])
+        check("join.ridx (sort-merge order)", ridx2, [3, 0, 1, 0, 1])
+        expect_raise("join.max_out",
+                     lambda: ops.join(A(np.array([2, 1, 2, 5], np.int64)),
+                                      A(np.array([2, 2, 7, 1], np.int64)),
+                                      max_out=2))
+
+        # combine_keys: grouping identity + lexicographic order
+        key = H(ops.combine_keys([A(np.array([1, 1, 2, 2], np.int64)),
+                                  A(np.array([1, 2, 1, 1], np.int64))]))
+        key = np.asarray(key)
+        if not (key[2] == key[3] and key[0] < key[1] < key[2]
+                and key[0] != key[1]):
+            fails.append(f"combine_keys: packed order/identity broken: "
+                         f"{key.tolist()!r}")
+
+        keys = A(np.array([3, 1, 3, 1, 7], np.int64))
+        col = A(np.array([1, 2, 3, 4, 5], np.int64))
+        first, aggs = ops.group_reduce(
+            keys, {"c": ("COUNT", col), "s": ("SUM", col),
+                   "lo": ("MIN", col), "hi": ("MAX", col),
+                   "av": ("AVG", col)})
+        check("group_reduce.first", first, [1, 0, 4])
+        check("group_reduce.COUNT", aggs["c"], [2, 2, 1])
+        check("group_reduce.SUM", aggs["s"], [6, 4, 5])
+        check("group_reduce.MIN", aggs["lo"], [2, 1, 5])
+        check("group_reduce.MAX", aggs["hi"], [4, 3, 5])
+        check("group_reduce.AVG", aggs["av"], [3.0, 2.0, 5.0])
+    except Exception as exc:                           # noqa: BLE001
+        fails.append(f"conformance aborted: {type(exc).__name__}: {exc}")
+    return fails

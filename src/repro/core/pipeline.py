@@ -450,6 +450,9 @@ class OpReport:
     est_rows: float
     est_cost: float
     actual_rows: int | None = None
+    # measured wall time under analyze=True (dispatch time on async
+    # backends; the final device sync is absorbed by delivery)
+    actual_time_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -458,9 +461,9 @@ class ExplainReport:
 
     ``operators`` lists the physical pattern operators in tree order (root
     first, children indented by ``depth``); ``tail`` holds the relational
-    operators' actual row counts under ``analyze=True``.  ``invalid`` marks
-    a query type inference proved unsatisfiable — no physical plan exists
-    and execution returns zero rows."""
+    operators' actual ``(name, rows, wall_s)`` under ``analyze=True``.
+    ``invalid`` marks a query type inference proved unsatisfiable — no
+    physical plan exists and execution returns zero rows."""
     source: str | None
     backend: str
     analyze: bool
@@ -469,7 +472,7 @@ class ExplainReport:
     trace: PipelineTrace | None
     physical: PlanNode | None
     operators: list[OpReport]
-    tail: list[tuple[str, int]]
+    tail: list[tuple[str, int, float]]
     result_rows: int | None = None
     exec_wall_s: float | None = None
 
@@ -489,13 +492,16 @@ class ExplainReport:
             for op in self.operators:
                 act = (f" act={op.actual_rows}"
                        if op.actual_rows is not None else "")
+                if op.actual_time_s is not None:
+                    act += f" time={op.actual_time_s * 1e3:.2f}ms"
                 lines.append(f"  {'  ' * op.depth}{op.op} "
                              f"[est={op.est_rows:.3g} "
                              f"cost={op.est_cost:.3g}{act}]")
             if self.tail:
                 lines.append("-- relational tail --")
-                lines.extend(f"  {name} rows={rows}"
-                             for name, rows in self.tail)
+                lines.extend(f"  {name} rows={rows} "
+                             f"time={secs * 1e3:.2f}ms"
+                             for name, rows, secs in self.tail)
         if self.result_rows is not None:
             wall = (f" in {self.exec_wall_s * 1e3:.2f}ms"
                     if self.exec_wall_s is not None else "")
@@ -545,32 +551,42 @@ def build_explain_report(opt, spec: PhysicalSpec, source: str | None = None,
 
     post = plan_operators(opt.physical)          # execution (post-)order
     actual_by_node: dict[int, int] = {}
-    tail: list[tuple[str, int]] = []
+    time_by_node: dict[int, float] = {}
+    tail: list[tuple[str, int, float]] = []
     if stats is not None:
-        pat_logs = [(name, r) for name, r in stats.op_rows
-                    if name.startswith(_PATTERN_LOG_PREFIXES)]
+        # op_times entries are logged 1:1 with op_rows (same call); zip them
+        # back together, defensively zero-filling foreign ExecStats
+        times = (stats.op_times if len(getattr(stats, "op_times", ()))
+                 == len(stats.op_rows)
+                 else [(n, 0.0) for n, _ in stats.op_rows])
+        logs = [(name, r, secs) for (name, r), (_, secs)
+                in zip(stats.op_rows, times)]
+        pat_logs = [l for l in logs
+                    if l[0].startswith(_PATTERN_LOG_PREFIXES)]
         i = 0
         for n in post:
             if i >= len(pat_logs):
                 break
-            name, rows = pat_logs[i]
+            name, rows, secs = pat_logs[i]
             if (isinstance(n, ExpandChainNode)
                     and not name.startswith("EXPANDCHAIN(")):
                 # the fuse_expand=False ablation executed the unfused plan:
                 # one EXPAND log line per hop — the chain's output is the
-                # last hop's
-                last = min(i + len(n.steps), len(pat_logs)) - 1
-                rows = pat_logs[last][1]
-                i += len(n.steps)
+                # last hop's, its time the hops' sum
+                last = min(i + len(n.steps), len(pat_logs))
+                rows = pat_logs[last - 1][1]
+                secs = sum(l[2] for l in pat_logs[i:last])
+                i = last
             else:
                 i += 1
             actual_by_node[id(n)] = rows
-        tail = [(name, r) for name, r in stats.op_rows
-                if not name.startswith(_PATTERN_LOG_PREFIXES)
-                and not name.startswith("GET_VERTEX")]
+            time_by_node[id(n)] = secs
+        tail = [l for l in logs
+                if not l[0].startswith(_PATTERN_LOG_PREFIXES)
+                and not l[0].startswith("GET_VERTEX")]
     operators = [
         OpReport(describe_node(n), depth, n.est_frequency, n.est_cost,
-                 actual_by_node.get(id(n)))
+                 actual_by_node.get(id(n)), time_by_node.get(id(n)))
         for n, depth in _tree_order(opt.physical)]
     return ExplainReport(
         source=source, backend=spec.name, analyze=analyze, invalid=False,

@@ -1,13 +1,25 @@
 """Binding-table execution engine — the backend-agnostic executor core.
 
-Executes a physical pattern plan (Scan/Expand/ExpandIntersect/Join) followed by
-the relational tail of the unified-IR plan. Intermediate pattern matchings are
-dense integer tables. All data-parallel work (scan, CSR expansion, WCOJ
-membership probes, equi joins, grouped reductions) is delegated to the
-``OperatorSet`` of the active ``PhysicalSpec`` backend (DESIGN.md §2), chosen
-via ``Engine(store, backend="numpy"|"jax"|spec)``. The engine also meters the
-paper's cost-model quantities: rows produced per operator (communication cost
-analogue) and per-operator wall time.
+Executes a physical pattern plan (Scan/Expand/ExpandIntersect/Join) followed
+by the relational tail of the unified-IR plan.  Intermediate pattern
+matchings are dense integer tables whose columns are **backend-native
+arrays** (OperatorSet v2, DESIGN.md §7): ``Table`` is a thin wrapper over
+backend-owned columns, and every data-parallel step — scan, CSR expansion,
+WCOJ membership probes, equi joins, selections, grouped reductions, sorts,
+property gathers — goes through the ``OperatorSet`` of the active
+``PhysicalSpec`` backend, chosen via ``Engine(store,
+backend="numpy"|"jax"|spec)``.  On the jax backend columns are
+device-resident ``jax.Array``s across *all* plan steps; the engine converts
+to host exactly once, with ``ops.to_host(table)`` at result delivery, and
+tags the backend's ``transfer_stats`` with the current phase
+(``pattern`` / ``tail`` / ``deliver``) so the residency invariant — zero
+device->host transfers outside delivery — is testable.
+
+The engine also meters the paper's cost-model quantities: rows produced per
+operator (communication-cost analogue) and per-operator wall time
+(``ExecStats.op_rows`` / ``op_times``; on asynchronously-dispatching
+backends the per-operator times are dispatch times — the final sync is
+absorbed by delivery).
 
 Modes (used by the RBO ablation benchmarks):
 - ``fuse_expand``   — ExpandGetVFusionRule on/off: fused neighbor expansion vs
@@ -17,10 +29,18 @@ Modes (used by the RBO ablation benchmarks):
   step (what an untrimmed distributed plan ships between workers).
 - filters inside pattern vertices/edges (FilterIntoMatchRule) are honored
   during expansion when present.
+
+``run_batch`` executes one plan for many parameter bindings in a single
+pattern pass: parameter-dependent predicates are relaxed to the union of
+the per-binding masks during the pattern phase (a multi-binding scan
+filter), then re-applied exactly per binding before each binding's
+relational tail — row-identical to looping ``run`` per binding, but the
+expansion/join work is shared.
 """
 from __future__ import annotations
 
 import dataclasses
+import operator as _op
 import time
 
 import numpy as np
@@ -35,46 +55,81 @@ from repro.graphdb.storage import GraphStore
 
 INT_MIN = np.iinfo(np.int64).min
 
+_CMP = {"=": _op.eq, "<>": _op.ne, "<": _op.lt, ">": _op.gt,
+        "<=": _op.le, ">=": _op.ge}
+
 
 @dataclasses.dataclass
 class Table:
-    cols: dict[str, np.ndarray]
+    """Binding table: a dict of equally-long backend-native columns.
+
+    ``ops`` is the owning ``OperatorSet``; all row movement (gather, filter,
+    concatenation) delegates to it so columns never leave the backend's
+    array type.  ``ops=None`` (e.g. ``Table.empty()``) means host numpy
+    semantics."""
+    cols: dict[str, object]
     nrows: int
+    ops: OperatorSet | None = None
 
     @staticmethod
     def empty() -> "Table":
         return Table({}, 0)
 
-    def take(self, idx: np.ndarray) -> "Table":
-        return Table({k: v[idx] for k, v in self.cols.items()}, int(idx.shape[0]))
+    def take(self, idx) -> "Table":
+        if self.ops is None:
+            return Table({k: v[idx] for k, v in self.cols.items()},
+                         int(idx.shape[0]))
+        return Table({k: self.ops.take(v, idx) for k, v in self.cols.items()},
+                     int(idx.shape[0]), self.ops)
 
-    def mask(self, m: np.ndarray) -> "Table":
-        return Table({k: v[m] for k, v in self.cols.items()}, int(m.sum()))
+    def mask(self, m) -> "Table":
+        if self.ops is None:
+            return Table({k: v[m] for k, v in self.cols.items()},
+                         int(m.sum()))
+        return self.take(self.ops.nonzero(m))
 
-    def with_cols(self, new: dict[str, np.ndarray]) -> "Table":
+    def head(self, n: int) -> "Table":
+        n = min(int(n), self.nrows)
+        return Table({k: v[:n] for k, v in self.cols.items()}, n, self.ops)
+
+    def with_cols(self, new: dict) -> "Table":
         cols = dict(self.cols)
         cols.update(new)
-        return Table(cols, self.nrows)
+        return Table(cols, self.nrows, self.ops)
 
     @staticmethod
     def concat(tables: list["Table"]) -> "Table":
         tables = [t for t in tables if t.nrows > 0]
         if not tables:
             return Table.empty()
+        if len(tables) == 1:
+            return tables[0]
+        ops = tables[0].ops
         keys = tables[0].cols.keys()
-        return Table({k: np.concatenate([t.cols[k] for t in tables])
-                      for k in keys}, sum(t.nrows for t in tables))
+        if ops is None:
+            cols = {k: np.concatenate([t.cols[k] for t in tables])
+                    for k in keys}
+        else:
+            cols = {k: ops.concat([t.cols[k] for t in tables]) for k in keys}
+        return Table(cols, sum(t.nrows for t in tables), ops)
 
 
 @dataclasses.dataclass
 class ExecStats:
     rows_produced: int = 0          # paper's intermediate-result cost
     op_rows: list = dataclasses.field(default_factory=list)
+    # (opname, seconds) aligned 1:1 with op_rows; on async backends these
+    # are dispatch times (the final device sync lands in delivery/wall_s)
+    op_times: list = dataclasses.field(default_factory=list)
     wall_s: float = 0.0
+    # host<->device movement summary for this run ({"phase:kind": {...}}),
+    # from the backend's TransferStats ledger
+    transfers: dict | None = None
 
-    def log(self, opname: str, rows: int):
+    def log(self, opname: str, rows: int, secs: float = 0.0):
         self.rows_produced += rows
         self.op_rows.append((opname, rows))
+        self.op_times.append((opname, secs))
 
 
 class Engine:
@@ -86,27 +141,38 @@ class Engine:
         self.trim_fields = trim_fields
         self.max_rows = max_rows
         self._params: dict = {}          # execution-time parameter bindings
+        self._batch: list[dict] | None = None    # run_batch binding set
+        self._deferred: list = []        # union-relaxed predicates to re-apply
         self._tindex = store.triple_index()
         if isinstance(backend, OperatorSet):
             self.ops = backend
         else:
             self.ops = get_spec(backend).operators(store)
 
+    def _table(self, cols: dict, nrows: int) -> Table:
+        return Table(cols, nrows, self.ops)
+
     # ================================================================ pattern
-    def _check(self, n):
+    def _check(self, n, label: str):
         if n > self.max_rows:
-            raise RuntimeError(f"intermediate blow-up: {n} rows > cap")
+            raise RuntimeError(f"intermediate blow-up: {n} rows > cap "
+                               f"{self.max_rows} in {label}")
+
+    @staticmethod
+    def _annotate_blowup(exc: RuntimeError, label: str):
+        raise RuntimeError(f"{exc} in {label}") from None
 
     def _scan(self, pattern: Pattern, alias: str, stats: ExecStats) -> Table:
+        t0 = time.perf_counter()
         v = pattern.vertices[alias]
         parts = []
         for t in sorted(v.types):
             lo, hi = self.store.type_range(t)
             parts.append(self.ops.scan(lo, hi))
-        ids = np.concatenate(parts) if parts else np.zeros(0, np.int64)
-        tbl = Table({alias: ids}, ids.shape[0])
+        ids = self.ops.concat(parts)
+        tbl = self._table({alias: ids}, int(ids.shape[0]))
         tbl = self._apply_fused_predicates(tbl, v.predicates, stats)
-        stats.log(f"SCAN({alias})", tbl.nrows)
+        stats.log(f"SCAN({alias})", tbl.nrows, time.perf_counter() - t0)
         self._materialize(tbl, alias, pattern)
         return tbl
 
@@ -124,63 +190,97 @@ class Engine:
                      from_alias: str, new_alias: str, stats: ExecStats) -> Table:
         """Primary expansion: bind new_alias (+ edge alias) from from_alias."""
         st = self.store
+        label = f"EXPAND(+{new_alias}) via edge '{e.alias}' from '{from_alias}'"
+        if tbl.nrows == 0:
+            return Table.empty()
         src_ids = tbl.cols[from_alias]
+        # the column invariant (scan builds from v.types; expansion only
+        # binds type-checked neighbors) lets the type-range membership test
+        # resolve *statically* from pattern metadata: a src row is in the
+        # keyed type's id range iff its vertex type IS the keyed type —
+        # no device mask work unless the alias is genuinely mixed-type
+        src_types = pattern.vertices[from_alias].types
         new_types = pattern.vertices[new_alias].types
         outs = []
         for kind, t in self._orientations(e, from_alias):
             keyed_type = t.src if kind == "out" else t.dst
             value_type = t.dst if kind == "out" else t.src
-            if value_type not in new_types:
+            if value_type not in new_types or keyed_type not in src_types:
                 continue
             lo, hi = st.type_range(keyed_type)
-            m = (src_ids >= lo) & (src_ids < hi)
-            if not m.any():
-                continue
-            rows = np.nonzero(m)[0]
+            if len(src_types) == 1:
+                rows = None                    # fast path: whole table in range
+                local = src_ids - lo
+            else:
+                m = (src_ids >= lo) & (src_ids < hi)
+                rows = self.ops.nonzero(m)
+                if int(rows.shape[0]) == 0:
+                    continue
+                local = self.ops.take(src_ids, rows) - lo
             csr = (st.out_csr if kind == "out" else st.in_csr)[t]
-            ridx, nbr, epos = self.ops.expand(
-                csr, src_ids[rows] - lo, max_out=self.max_rows)
-            part = tbl.take(rows[ridx]).with_cols({
+            try:
+                ridx, nbr, epos = self.ops.expand(csr, local,
+                                                  max_out=self.max_rows)
+            except RuntimeError as exc:
+                self._annotate_blowup(exc, label)
+            n_out = int(ridx.shape[0])
+            gather = ridx if rows is None else self.ops.take(rows, ridx)
+            part = tbl.take(gather).with_cols({
                 new_alias: nbr,
-                f"{e.alias}#t": np.full(nbr.shape, self._tindex[t], np.int64),
+                f"{e.alias}#t": self.ops.full(n_out, self._tindex[t]),
                 f"{e.alias}#p": epos,
             })
             outs.append(part)
         out = Table.concat(outs)
-        self._check(out.nrows)
+        self._check(out.nrows, label)
         return out
 
-    def _intersect_edge(self, tbl: Table, e: PatternEdge, from_alias: str,
-                        cand_alias: str) -> Table:
+    def _intersect_edge(self, tbl: Table, pattern: Pattern, e: PatternEdge,
+                        from_alias: str, cand_alias: str) -> Table:
         """Membership probe: keep rows where edge (from_alias, cand) exists;
         bind the edge. Worst-case-optimal intersection step."""
         st = self.store
+        label = (f"INTERSECT({from_alias}-[{e.alias}]-{cand_alias})")
+        if tbl.nrows == 0:
+            return tbl
         outs = []
         src_ids = tbl.cols[from_alias]
         cand = tbl.cols[cand_alias]
+        src_types = pattern.vertices[from_alias].types
+        cand_types = pattern.vertices[cand_alias].types
         for kind, t in self._orientations(e, from_alias):
             keyed_type = t.src if kind == "out" else t.dst
             value_type = t.dst if kind == "out" else t.src
+            if keyed_type not in src_types or value_type not in cand_types:
+                continue
             klo, khi = st.type_range(keyed_type)
             vlo, vhi = st.type_range(value_type)
-            m = ((src_ids >= klo) & (src_ids < khi) &
-                 (cand >= vlo) & (cand < vhi))
-            if not m.any():
-                continue
-            rows = np.nonzero(m)[0]
+            if len(src_types) == 1 and len(cand_types) == 1:
+                rows = None           # statically in range (see _expand_edge)
+                local = src_ids - klo
+                tgt = cand
+            else:
+                m = ((src_ids >= klo) & (src_ids < khi) &
+                     (cand >= vlo) & (cand < vhi))
+                rows = self.ops.nonzero(m)
+                if int(rows.shape[0]) == 0:
+                    continue
+                local = self.ops.take(src_ids, rows) - klo
+                tgt = self.ops.take(cand, rows)
             csr = (st.out_csr if kind == "out" else st.in_csr)[t]
-            local = src_ids[rows] - klo
-            found, epos = self.ops.intersect(csr, local, cand[rows])
-            hit = rows[found]
-            if hit.size == 0:
+            found, epos = self.ops.intersect(csr, local, tgt)
+            hit = self.ops.nonzero(found)
+            if int(hit.shape[0]) == 0:
                 continue
-            part = tbl.take(hit).with_cols({
-                f"{e.alias}#t": np.full(hit.shape, self._tindex[t], np.int64),
-                f"{e.alias}#p": epos[found],
+            gather = hit if rows is None else self.ops.take(rows, hit)
+            part = tbl.take(gather).with_cols({
+                f"{e.alias}#t": self.ops.full(int(hit.shape[0]),
+                                              self._tindex[t]),
+                f"{e.alias}#p": self.ops.take(epos, hit),
             })
             outs.append(part)
         out = Table.concat(outs)
-        self._check(out.nrows)
+        self._check(out.nrows, label)
         return out
 
     def _materialize(self, tbl: Table, alias: str, pattern: Pattern):
@@ -195,7 +295,7 @@ class Engine:
         for t in v.types:
             props |= set(self.store.v_props.get(t, {}))
         for p in sorted(props):
-            tbl.cols[f"__mat.{alias}.{p}"] = self.store.vertex_prop(
+            tbl.cols[f"__mat.{alias}.{p}"] = self.ops.vertex_prop(
                 tbl.cols[alias], p)
 
     def _apply_fused_predicates(self, tbl: Table, preds: list,
@@ -203,9 +303,28 @@ class Engine:
         for p in preds or []:
             if tbl.nrows == 0:
                 break
-            m = self._eval(tbl, p).astype(bool)
+            if self._batch is not None and ir.expr_params(p):
+                # batched execution: relax to the union of the per-binding
+                # masks (a stacked multi-binding filter); the exact
+                # per-binding predicate re-applies before each tail
+                self._deferred.append(p)
+                m = self._union_mask(tbl, p)
+            else:
+                m = self._eval(tbl, p).astype(bool)
             tbl = tbl.mask(m)
         return tbl
+
+    def _union_mask(self, tbl: Table, pred):
+        saved = self._params
+        m = None
+        try:
+            for b in self._batch:
+                self._params = b
+                mb = self._eval(tbl, pred).astype(bool)
+                m = mb if m is None else (m | mb)
+        finally:
+            self._params = saved
+        return m
 
     def exec_pattern(self, pattern: Pattern, node: PlanNode,
                      stats: ExecStats) -> Table:
@@ -213,6 +332,7 @@ class Engine:
             return self._scan(pattern, node.alias, stats)
         if isinstance(node, ExpandNode):
             tbl = self.exec_pattern(pattern, node.child, stats)
+            t0 = time.perf_counter()
             edges = list(node.edges)
             # primary expansion via the first edge
             e0 = edges[0]
@@ -228,23 +348,31 @@ class Engine:
                                         node.new_alias, stats)
                 if tbl.nrows:
                     nbr = tbl.cols[node.new_alias]
-                    tidx = self.store.type_of_ids(nbr)          # extra pass
-                    types = sorted(self.store._sorted_types())
+                    types = self.store._sorted_types()
+                    bounds = np.array(
+                        [self.store.v_offset[t] for t in types]
+                        + [self.store.n_vertices], dtype=np.int64)
+                    tidx = self.ops.searchsorted(          # extra pass
+                        self.ops.asarray(bounds), nbr, side="right") - 1
                     allowed = np.zeros(len(types), dtype=bool)
-                    for i, t in enumerate(self.store._sorted_types()):
+                    for i, t in enumerate(types):
                         allowed[i] = t in pattern.vertices[
                             node.new_alias].types
-                    tbl = tbl.mask(allowed[tidx])
-                stats.log(f"GET_VERTEX({node.new_alias})", tbl.nrows)
+                    tbl = tbl.mask(self.ops.take(self.ops.asarray(allowed),
+                                                 tidx))
+                stats.log(f"GET_VERTEX({node.new_alias})", tbl.nrows,
+                          time.perf_counter() - t0)
             # intersect the remaining edges (WCOJ step)
             for e in edges[1:]:
                 frm = e.other(node.new_alias)
-                tbl = self._intersect_edge(tbl, e, frm, node.new_alias)
+                tbl = self._intersect_edge(tbl, pattern, e, frm,
+                                           node.new_alias)
             v = pattern.vertices[node.new_alias]
             tbl = self._apply_fused_predicates(tbl, v.predicates, stats)
             for e in edges:
                 tbl = self._apply_fused_predicates(tbl, e.predicates, stats)
-            stats.log(f"EXPAND(+{node.new_alias}|{len(edges)}e)", tbl.nrows)
+            stats.log(f"EXPAND(+{node.new_alias}|{len(edges)}e)", tbl.nrows,
+                      time.perf_counter() - t0)
             self._materialize(tbl, node.new_alias, pattern)
             return tbl
         if isinstance(node, ExpandChainNode):
@@ -252,16 +380,16 @@ class Engine:
             # expand a *thin* frontier table hop-by-hop — the source column,
             # per-hop alias/edge columns and a provenance row index — and
             # gather the full binding table once at the end, instead of
-            # taking every bound column through the host at every hop
+            # taking every bound column through a gather at every hop
             if not self.fuse_expand:
                 # ExpandGetVFusion ablation: run the pre-fusion plan
                 return self.exec_pattern(pattern, node.unfused(), stats)
             tbl = self.exec_pattern(pattern, node.child, stats)
+            t0 = time.perf_counter()
             first = node.steps[0].from_alias
-            cur = Table({first: tbl.cols[first],
-                         "__chain_row": np.arange(tbl.nrows,
-                                                  dtype=np.int64)},
-                        tbl.nrows)
+            cur = self._table({first: tbl.cols[first],
+                               "__chain_row": self.ops.arange(tbl.nrows)},
+                              tbl.nrows)
             for s in node.steps:
                 if cur.nrows == 0:
                     break
@@ -269,49 +397,55 @@ class Engine:
                                         s.alias, stats)
             hops = "".join(f"+{s.alias}" for s in node.steps)
             if cur.nrows == 0:
-                stats.log(f"EXPANDCHAIN({hops})", 0)
+                stats.log(f"EXPANDCHAIN({hops})", 0,
+                          time.perf_counter() - t0)
                 return Table.empty()
             rows = cur.cols.pop("__chain_row")
             del cur.cols[first]          # tbl carries the original column
             out = tbl.take(rows).with_cols(cur.cols)
-            stats.log(f"EXPANDCHAIN({hops})", out.nrows)
+            stats.log(f"EXPANDCHAIN({hops})", out.nrows,
+                      time.perf_counter() - t0)
             for s in node.steps:
                 self._materialize(out, s.alias, pattern)
             return out
         if isinstance(node, JoinNode):
             lt = self.exec_pattern(pattern, node.left, stats)
             rt = self.exec_pattern(pattern, node.right, stats)
+            t0 = time.perf_counter()
             # join on the shared vertex aliases plus any other column both
             # sides bound (shared edges must bind identically on both sides)
             keys = sorted(set(node.keys) |
                           (set(lt.cols) & set(rt.cols) - {"__pad"}))
             keys = [k for k in keys if not k.startswith("__mat.")]
-            lkey = self._pack_join_keys(lt, rt, keys)
-            lidx, ridx = self.ops.join(lkey[0], lkey[1],
-                                       max_out=self.max_rows)
-            self._check(lidx.shape[0])
-            cols = {k: v[lidx] for k, v in lt.cols.items()}
+            label = f"JOIN({'/'.join(keys) or 'cross'})"
+            lkey, rkey = self._pack_join_keys(lt, rt, keys)
+            try:
+                lidx, ridx = self.ops.join(lkey, rkey, max_out=self.max_rows)
+            except RuntimeError as exc:
+                self._annotate_blowup(exc, label)
+            self._check(int(lidx.shape[0]), label)
+            cols = {k: self.ops.take(v, lidx) for k, v in lt.cols.items()}
             for k, v in rt.cols.items():
                 if k not in cols:
-                    cols[k] = v[ridx]
-            out = Table(cols, int(lidx.shape[0]))
-            stats.log(f"JOIN({'/'.join(keys)})", out.nrows)
+                    cols[k] = self.ops.take(v, ridx)
+            out = self._table(cols, int(lidx.shape[0]))
+            stats.log(f"JOIN({'/'.join(keys)})", out.nrows,
+                      time.perf_counter() - t0)
             return out
         raise TypeError(node)
 
-    @staticmethod
-    def _pack_join_keys(lt: Table, rt: Table, keys: list[str]):
-        lcols = [lt.cols[k] for k in keys]
-        rcols = [rt.cols[k] for k in keys]
-        lkey = np.zeros(lt.nrows, dtype=np.int64)
-        rkey = np.zeros(rt.nrows, dtype=np.int64)
-        for lc, rc in zip(lcols, rcols):
-            both = np.concatenate([lc, rc])
-            _, inv = np.unique(both, return_inverse=True)
-            card = int(inv.max()) + 1 if inv.size else 1
-            lkey = lkey * card + inv[:lt.nrows]
-            rkey = rkey * card + inv[lt.nrows:]
-        return lkey, rkey
+    def _pack_join_keys(self, lt: Table, rt: Table, keys: list[str]):
+        """Pack the join columns of both sides into one comparable key
+        column each.  The columns are factorized *jointly* (over the
+        concatenation) so equal tuples get equal keys across the two
+        tables; ``ops.combine_keys`` guarantees ascending key order is the
+        tuples' lexicographic order, which fixes the sort-merge output
+        order identically on every backend."""
+        if not keys:
+            return (self.ops.full(lt.nrows, 0), self.ops.full(rt.nrows, 0))
+        both = self.ops.combine_keys(
+            [self.ops.concat([lt.cols[k], rt.cols[k]]) for k in keys])
+        return both[:lt.nrows], both[lt.nrows:]
 
     # ============================================================ expressions
     def _param_value(self, name: str):
@@ -321,12 +455,17 @@ class Engine:
             raise ParamError("unbound parameter at evaluation", missing=[name],
                              declared=self._params) from None
 
-    def _eval(self, tbl: Table, e) -> np.ndarray:
+    def _full(self, n: int, value):
+        if isinstance(value, str):      # host-only fallback (string literals)
+            return np.full(n, value)
+        return self.ops.full(n, value)
+
+    def _eval(self, tbl: Table, e):
         st = self.store
         if isinstance(e, ir.Lit):
-            return np.full(tbl.nrows, e.value)
+            return self._full(tbl.nrows, e.value)
         if isinstance(e, ir.Param):
-            return np.full(tbl.nrows, self._param_value(e.name))
+            return self._full(tbl.nrows, self._param_value(e.name))
         if isinstance(e, ir.Var):
             return tbl.cols[e.alias]
         if isinstance(e, ir.Prop):
@@ -334,23 +473,20 @@ class Engine:
             if mat is not None:
                 return mat
             if f"{e.alias}#t" in tbl.cols:   # edge alias
-                return st.edge_prop(tbl.cols[f"{e.alias}#t"],
-                                    tbl.cols[f"{e.alias}#p"], e.name)
-            return st.vertex_prop(tbl.cols[e.alias], e.name)
+                return self.ops.edge_prop(tbl.cols[f"{e.alias}#t"],
+                                          tbl.cols[f"{e.alias}#p"], e.name)
+            return self.ops.vertex_prop(tbl.cols[e.alias], e.name)
         if isinstance(e, ir.Cmp):
             lhs, rhs = e.lhs, e.rhs
             l = self._eval(tbl, lhs)
             r = self._encode_rhs(lhs, rhs, tbl)
-            ops = {"=": np.equal, "<>": np.not_equal, "<": np.less,
-                   ">": np.greater, "<=": np.less_equal,
-                   ">=": np.greater_equal}
-            return ops[e.op](l, r)
+            return _CMP[e.op](l, r)
         if isinstance(e, ir.InSet):
             item = self._eval(tbl, e.item)
             values = (self._param_value(e.values.name)
                       if isinstance(e.values, ir.Param) else e.values)
             vals = [self._encode_scalar(e.item, v) for v in values]
-            return np.isin(item, np.asarray(vals, dtype=np.int64))
+            return self.ops.isin(item, vals)
         if isinstance(e, ir.BoolOp):
             if e.op == "NOT":
                 return ~self._eval(tbl, e.args[0]).astype(bool)
@@ -412,41 +548,122 @@ class Engine:
                              declared=declared)
         return effective
 
-    def run(self, plan: ir.LogicalPlan, pattern_plan: PlanNode | None = None,
-            params: dict | None = None):
-        """Execute a logical plan; returns (result Table, ExecStats).
-        ``params`` binds the plan's late-bound ``ir.Param`` nodes."""
+    def _plan_head(self, plan: ir.LogicalPlan, pattern_plan):
         from repro.core.physical import default_left_deep_plan
-        self._params = self.bind_params(plan, params)
-        stats = ExecStats()
-        t0 = time.perf_counter()
         ops = list(plan.ops)
         if not isinstance(ops[0], ir.MatchPattern):
             raise ValueError("plan must start with MATCH_PATTERN")
         pattern = ops[0].pattern
-        node = pattern_plan or default_left_deep_plan(pattern)
-        tbl = self.exec_pattern(pattern, node, stats)
-        for op in ops[1:]:
-            tbl = self._run_relational(tbl, op, stats)
+        return ops, pattern, pattern_plan or default_left_deep_plan(pattern)
+
+    def run(self, plan: ir.LogicalPlan, pattern_plan: PlanNode | None = None,
+            params: dict | None = None):
+        """Execute a logical plan; returns (result Table, ExecStats).
+        ``params`` binds the plan's late-bound ``ir.Param`` nodes.  The
+        returned table is host-resident: the engine converts the
+        backend-native binding table with ``ops.to_host`` exactly once,
+        here at delivery — never between plan steps."""
+        self._params = self.bind_params(plan, params)
+        stats = ExecStats()
+        t0 = time.perf_counter()
+        ops, pattern, node = self._plan_head(plan, pattern_plan)
+        ts = self.ops.transfer_stats
+        mark = ts.mark()
+        ts.set_phase("pattern")
+        try:
+            tbl = self.exec_pattern(pattern, node, stats)
+            ts.set_phase("tail")
+            for op in ops[1:]:
+                tbl = self._run_relational(tbl, op, stats)
+            ts.set_phase("deliver")
+            tbl = self.ops.to_host(tbl)
+        finally:
+            ts.set_phase("")
         stats.wall_s = time.perf_counter() - t0
+        stats.transfers = ts.summary(mark)
         return tbl, stats
 
+    def run_batch(self, plan: ir.LogicalPlan,
+                  pattern_plan: PlanNode | None = None,
+                  bindings: list[dict | None] = ()):
+        """One pattern pass, many parameter bindings (the vectorized
+        ``PreparedQuery.execute_many`` path).  Parameter-dependent pattern
+        predicates execute as the union of the per-binding filters, the
+        exact predicate re-applies per binding, and each binding runs its
+        own relational tail — results are row-identical to looping
+        ``run``.  Returns ``[(host Table, ExecStats), ...]``."""
+        bound = [self.bind_params(plan, b) for b in bindings]
+        if not bound:
+            return []
+        ops, pattern, node = self._plan_head(plan, pattern_plan)
+        ts = self.ops.transfer_stats
+        mark = ts.mark()
+        shared = ExecStats()
+        t0 = time.perf_counter()
+        self._batch = bound
+        self._deferred = []
+        self._params = {}
+        ts.set_phase("pattern")
+        try:
+            tbl = self.exec_pattern(pattern, node, shared)
+        finally:
+            self._batch = None
+            ts.set_phase("")
+        pattern_s = time.perf_counter() - t0
+        # the shared pattern phase's transfers belong to every binding; the
+        # per-binding window starts fresh so binding i never reads binding
+        # i-1's tail/deliver events
+        pattern_transfers = ts.summary(mark)
+        deferred, self._deferred = self._deferred, []
+        results = []
+        for b in bound:
+            bind_mark = ts.mark()
+            tb0 = time.perf_counter()
+            self._params = b
+            st = ExecStats(rows_produced=shared.rows_produced,
+                           op_rows=list(shared.op_rows),
+                           op_times=list(shared.op_times))
+            t = tbl
+            ts.set_phase("tail")
+            try:
+                if deferred and t.nrows:
+                    m = None
+                    for p in deferred:
+                        mp = self._eval(t, p).astype(bool)
+                        m = mp if m is None else (m & mp)
+                    t = t.mask(m)
+                st.log("BATCH_BIND", t.nrows, time.perf_counter() - tb0)
+                for op in ops[1:]:
+                    t = self._run_relational(t, op, st)
+                ts.set_phase("deliver")
+                t = self.ops.to_host(t)
+            finally:
+                ts.set_phase("")
+            st.wall_s = pattern_s + (time.perf_counter() - tb0)
+            st.transfers = {k: dict(v) for k, v in pattern_transfers.items()}
+            for k, v in ts.summary(bind_mark).items():
+                ent = st.transfers.setdefault(k, {"calls": 0, "elems": 0})
+                ent["calls"] += v["calls"]
+                ent["elems"] += v["elems"]
+            results.append((t, st))
+        return results
+
     def _run_relational(self, tbl: Table, op, stats: ExecStats) -> Table:
+        t0 = time.perf_counter()
         if isinstance(op, ir.Select):
             if tbl.nrows:
                 tbl = tbl.mask(self._eval(tbl, op.predicate).astype(bool))
-            stats.log("SELECT", tbl.nrows)
+            stats.log("SELECT", tbl.nrows, time.perf_counter() - t0)
             return tbl
         if isinstance(op, ir.Project):
             cols = {name: (self._eval(tbl, e) if tbl.nrows
-                           else np.zeros(0, np.int64))
+                           else self.ops.full(0, 0))
                     for e, name in op.items}
-            out = Table(cols, tbl.nrows)
+            out = self._table(cols, tbl.nrows)
             if op.distinct and out.nrows:
                 key = self.ops.combine_keys(list(out.cols.values()))
-                _, first = np.unique(key, return_index=True)
-                out = out.take(np.sort(first))
-            stats.log("PROJECT", out.nrows)
+                out = out.take(self.ops.distinct_indices(key))
+            stats.log("PROJECT", out.nrows, time.perf_counter() - t0)
             return out
         if isinstance(op, ir.GroupBy):
             if tbl.nrows == 0:
@@ -459,17 +676,18 @@ class Engine:
                 return Table(cols, 0)
             kcols = [self._eval(tbl, e) for e, _ in op.keys]
             key = (self.ops.combine_keys(kcols) if kcols
-                   else np.zeros(tbl.nrows, dtype=np.int64))
+                   else self.ops.full(tbl.nrows, 0))
             vals = {}
             for a, name in op.aggs:
                 col = (self._eval(tbl, a.arg) if a.arg is not None
-                       else np.zeros(tbl.nrows, np.int64))
+                       else self.ops.full(tbl.nrows, 0))
                 vals[name] = (a.fn, col)
             first, aggd = self.ops.group_reduce(key, vals)
-            cols = {name: kc[first] for (e, name), kc in zip(op.keys, kcols)}
+            cols = {name: self.ops.take(kc, first)
+                    for (e, name), kc in zip(op.keys, kcols)}
             cols.update(aggd)
-            out = Table(cols, first.shape[0])
-            stats.log("GROUP", out.nrows)
+            out = self._table(cols, int(first.shape[0]))
+            stats.log("GROUP", out.nrows, time.perf_counter() - t0)
             return out
         if isinstance(op, ir.OrderBy):
             if tbl.nrows == 0:
@@ -481,13 +699,12 @@ class Engine:
                     name = e.alias
                 col = tbl.cols[name] if name else self._eval_output(tbl, e)
                 sort_cols.append(col if asc else -col)
-            order = np.lexsort(sort_cols)
+            order = self.ops.lexsort(sort_cols)
             if op.limit is not None:
                 order = order[:op.limit]
             return tbl.take(order)
         if isinstance(op, ir.Limit):
-            idx = np.arange(min(op.n, tbl.nrows))
-            return tbl.take(idx)
+            return tbl.head(op.n)
         raise TypeError(op)
 
     def _eval_output(self, tbl: Table, e):

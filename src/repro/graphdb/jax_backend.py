@@ -1,23 +1,34 @@
-"""JAX backend — jit'd padded-block execution of the pattern primitives.
+"""JAX backend — device-resident binding tables + jit'd padded-block kernels.
 
-Registers the ``"jax"`` PhysicalSpec. Shapes must be static under jit, so the
-primitives run on padded row blocks with validity masks (the same contract the
-Pallas kernels use); this module hides that layout behind the ``OperatorSet``
-interface — callers see flat int64 numpy arrays exactly like the numpy
-backend, row-for-row in the same order.
+Registers the ``"jax"`` PhysicalSpec. OperatorSet v2 (DESIGN.md §7): every
+operator takes and returns ``jax.Array`` columns, so the engine's binding
+table stays on device across *all* plan steps — pattern loop and relational
+tail alike — and crosses to the host exactly once, at result delivery
+(``to_host``). ``transfer_stats`` records each host<->device data movement;
+the residency tests assert zero ``d2h`` events outside the delivery phase.
 
 - ``expand``    -> ``jaxops.expand_padded``: [R, D_max] neighbor block +
-  validity mask, flattened on the host.
+  validity mask, compacted to flat rows on device.
 - ``intersect`` -> the ``wcoj_intersect`` Pallas kernel (vectorized
   compare-scan over a padded-ELL adjacency tile; interpret mode on CPU,
   compiled on TPU) for row degrees up to ``MAX_ELL_DEGREE``; beyond that the
-  jit'd ``jaxops.bounded_binary_search`` probes the CSR directly, matching
-  the kernel's documented degree envelope.
+  jit'd ``jaxops.bounded_binary_search`` probes the CSR directly.
+- relational tail on device: ``join`` is a sort-merge join (stable argsort +
+  searchsorted), ``group_reduce`` rides ``jax.ops.segment_*``, and
+  ``combine_keys`` packs tuples into dense lexicographic ranks
+  (``jaxops.lex_ranks``) — rank order matches the numpy backend's packed-key
+  order, so group/join row order stays row-identical across backends.
 
-Row counts and block widths are rounded up to powers of two so the number of
-distinct jit/Pallas compilations stays logarithmic in table size. The
-relational tail (join/group) stays on the host numpy path — it is
-bandwidth-bound gather/sort work that the paper leaves to the wrapped system.
+Shapes must be static under jit.  The intersect path pads row blocks to
+powers of two (compile count logarithmic in table size); the fused
+expand/join/group/combine kernels jit on exact data-dependent shapes —
+their cache grows with distinct intermediate sizes, which recurring
+serving/benchmark shapes amortize (pow2 size-bucketing for these paths is
+a ROADMAP follow-up). Vertex ids, CSR offsets and property columns
+stage through int32 (guarded at construction); ``to_host`` widens back to
+int64 and canonicalizes the missing-property sentinel.  Control-plane
+scalar syncs (row counts, blow-up guards) are not data transfers and are
+not recorded.
 """
 from __future__ import annotations
 
@@ -27,8 +38,8 @@ import numpy as np
 
 from repro.core.physical import (ChainStep, ExpandChainNode, ExpandNode,
                                  JoinNode, PlanNode)
-from repro.core.physical_spec import CostParams, PhysicalSpec, register_spec
-from repro.graphdb.numpy_backend import NumpyOperators
+from repro.core.physical_spec import (CostParams, OperatorSet, PhysicalSpec,
+                                      register_spec)
 
 # degree ceiling for the padded-ELL kernel layout (DESIGN.md §3: the VPU
 # compare-scan beats log-step gathers only while a row block fits in VMEM)
@@ -39,10 +50,15 @@ _MIN_BLOCK_ROWS = 8
 _SLAB_ROWS = 1 << 15
 # padded-block element budget per Pallas input tile (~2 MB of int32)
 _TILE_ELEMS = 1 << 19
-# element budget for one [rows, D_max] expand block (~128 MB of int32);
-# slabs exceeding it split recursively so a lone hub vertex cannot force a
-# rows x hub-degree allocation
+# element budget for one [rows, D_max] padded expand block.  The v2 expand
+# is a flat repeat-based CSR gather (no padded block, footprint == exact
+# output rows, capped by max_out), so this only governs the jit/TPU padded
+# variant (``jaxops.expand_padded``)
 _EXPAND_ELEMS = 1 << 25
+
+_I32_MIN = np.iinfo(np.int32).min
+_I32_MAX = np.iinfo(np.int32).max
+_I64_MIN = np.iinfo(np.int64).min
 
 
 def _pow2(n: int, floor: int = 1) -> int:
@@ -53,9 +69,8 @@ def _pow2_floor(n: int) -> int:
     return 1 << (max(int(n), 1).bit_length() - 1)
 
 
-class JaxOperators(NumpyOperators):
-    """Overrides the two pattern-matching hot loops with device primitives;
-    scan/join/group stay on the inherited host path."""
+class JaxOperators(OperatorSet):
+    """Device-resident operator set: columns are ``jax.Array`` int32."""
 
     name = "jax"
 
@@ -65,151 +80,332 @@ class JaxOperators(NumpyOperators):
         import jax.numpy as jnp
         from repro.graphdb import jaxops
         from repro.kernels.wcoj_intersect.ops import wcoj_intersect
+        self._jax = jax
         self._jnp = jnp
         self._jaxops = jaxops
         self._wcoj = wcoj_intersect
         self._interpret = jax.default_backend() != "tpu"
-        if max(store.n_vertices, store.n_edges) >= np.iinfo(np.int32).max:
+        if max(store.n_vertices, store.n_edges) >= _I32_MAX:
             raise ValueError(
                 "jax backend stages vertex ids and CSR offsets through "
                 f"int32; store has {store.n_vertices} vertices / "
                 f"{store.n_edges} edges")
-        self._dev = {}   # id(csr) -> (indptr_dev, indices_dev_i32)
+        self._dev = {}    # id(csr) -> (indptr_dev, indices_dev, pos_dev|None)
+        self._props = {}  # ("v"|"e", prop) -> device property column(s)
 
+    # ------------------------------------------------------------ transfers
+    def asarray(self, values):
+        if isinstance(values, self._jax.Array):
+            return values
+        a = np.asarray(values)
+        self.transfer_stats.record("h2d", a.size)
+        return self._jnp.asarray(a)
+
+    def _array_to_host(self, a) -> np.ndarray:
+        if not isinstance(a, self._jax.Array):
+            return np.asarray(a)
+        self.transfer_stats.record("d2h", a.size)
+        h = np.asarray(a)
+        if h.dtype == np.int32:
+            h64 = h.astype(np.int64)
+            h64[h64 == _I32_MIN] = _I64_MIN   # missing-prop sentinel widens
+            return h64
+        if h.dtype == np.float32:
+            return h.astype(np.float64)
+        return h
+
+    def _upload(self, a: np.ndarray):
+        """Graph-structure/property upload (cached by callers): int32 on
+        device, recorded as h2d."""
+        if a.dtype.kind == "i" and a.size and (
+                a.max() > _I32_MAX or a.min() < _I32_MIN):
+            raise ValueError("column exceeds the jax backend's int32 "
+                             "staging envelope")
+        self.transfer_stats.record("h2d", a.size)
+        return self._jnp.asarray(a.astype(np.int32)
+                                 if a.dtype.kind == "i" else a)
+
+    # ------------------------------------------------------ array primitives
+    def take(self, a, idx):
+        # jnp.take(mode="clip") skips the eager advanced-indexing rewrite
+        # machinery (~0.5ms of host python per gather); engine indices are
+        # in-range by construction
+        return self._jnp.take(self._jnp.asarray(a), idx, axis=0, mode="clip")
+
+    def mask(self, a, m):
+        return self._jnp.asarray(a)[self._jnp.asarray(m)]
+
+    def concat(self, parts: list):
+        if not parts:
+            return self._jnp.zeros(0, self._jnp.int32)
+        if len(parts) == 1:
+            return self._jnp.asarray(parts[0])
+        return self._jnp.concatenate([self._jnp.asarray(p) for p in parts])
+
+    def nonzero(self, m):
+        # argsort-shaped flatnonzero: jnp.nonzero's eager path rides heavy
+        # python machinery per call.  A stable sort puts True positions
+        # first in original order; the count sync sizes the slice.
+        jnp = self._jnp
+        m = jnp.asarray(m)
+        cnt = int(m.sum())                           # control-plane sync
+        if cnt == 0:
+            return jnp.zeros(0, jnp.int32)
+        order = jnp.argsort(~m)                      # stable
+        return order[:cnt].astype(jnp.int32)
+
+    def full(self, n: int, value):
+        return self._jnp.full(n, value)
+
+    def arange(self, n: int):
+        return self._jnp.arange(n, dtype=self._jnp.int32)
+
+    def isin(self, a, values):
+        vals = np.asarray(list(values), dtype=np.int64)
+        # values outside the int32 envelope cannot match any staged column
+        vals = vals[(vals <= _I32_MAX) & (vals > _I32_MIN)]
+        return self._jnp.isin(self._jnp.asarray(a), self.asarray(vals))
+
+    def searchsorted(self, sorted_arr, values, side: str = "left"):
+        return self._jnp.searchsorted(self._jnp.asarray(sorted_arr),
+                                      self._jnp.asarray(values), side=side)
+
+    def lexsort(self, cols: list):
+        return self._jnp.lexsort(tuple(self._jnp.asarray(c) for c in cols))
+
+    def distinct_indices(self, key):
+        jnp = self._jnp
+        key = jnp.asarray(key)
+        n = key.shape[0]
+        if n == 0:
+            return jnp.zeros(0, jnp.int32)
+        order = jnp.argsort(key)                   # stable -> minimal index
+        sk = self.take(key, order)
+        flag = jnp.concatenate([jnp.ones(1, bool), sk[1:] != sk[:-1]])
+        return jnp.sort(self.take(order, self.nonzero(flag)))
+
+    # ------------------------------------------------------ property gathers
+    def _vprop_dev(self, prop: str):
+        """One device column per vertex property, indexed by *global* id
+        (missing types filled with the int32 sentinel) — a property gather
+        is then a single device take instead of a per-type where-loop."""
+        ent = self._props.get(("v", prop))
+        if ent is None:
+            st = self.store
+            # in-band missing sentinel, like the host path's INT64_MIN:
+            # only a stored value of exactly INT32_MIN would collide
+            col = np.full(st.n_vertices, _I32_MIN, dtype=np.int64)
+            for t in st._sorted_types():
+                tc = st.v_props.get(t, {}).get(prop)
+                if tc is None or tc.shape[0] == 0:
+                    continue
+                off = st.v_offset[t]
+                col[off:off + tc.shape[0]] = tc
+            ent = self._props[("v", prop)] = self._upload(col)
+        return ent
+
+    def _eprop_dev(self, prop: str):
+        """Per-triple edge-property columns concatenated on device, plus the
+        per-triple base offsets: ``col[offset[tidx] + pos]``."""
+        ent = self._props.get(("e", prop))
+        if ent is None:
+            st = self.store
+            triples = sorted(st.out_csr, key=repr)
+            offsets, parts, off = [], [], 0
+            for t in triples:
+                tc = st.e_props.get(t, {}).get(prop)
+                n = st.out_csr[t].nnz
+                offsets.append(off)
+                part = np.full(n, _I32_MIN, dtype=np.int64)
+                if tc is not None and tc.shape[0]:
+                    part[:tc.shape[0]] = tc
+                parts.append(part)
+                off += n
+            flat = (np.concatenate(parts) if parts
+                    else np.zeros(0, np.int64))
+            ent = self._props[("e", prop)] = (
+                self._upload(np.asarray(offsets, dtype=np.int64)),
+                self._upload(flat))
+        return ent
+
+    def vertex_prop(self, ids, prop: str):
+        return self.take(self._vprop_dev(prop), self._jnp.asarray(ids))
+
+    def edge_prop(self, triple_ids, pos, prop: str):
+        offsets, flat = self._eprop_dev(prop)
+        if flat.shape[0] == 0:
+            return self._jnp.full(self._jnp.asarray(pos).shape, _I32_MIN,
+                                  self._jnp.int32)
+        base = self.take(offsets, self._jnp.asarray(triple_ids))
+        return self.take(flat, base + self._jnp.asarray(pos))
+
+    # --------------------------------------------------------------- pattern
     def _csr_dev(self, csr):
         key = id(csr)
         ent = self._dev.get(key)
         if ent is None:
-            ent = (self._jnp.asarray(csr.indptr.astype(np.int32)),
-                   self._jnp.asarray(csr.indices.astype(np.int32)))
+            ent = (self._upload(csr.indptr), self._upload(csr.indices),
+                   self._upload(csr.pos) if csr.pos is not None else None)
             self._dev[key] = ent
         return ent
 
-    @staticmethod
-    def _pad_rows(a: np.ndarray, n: int, fill) -> np.ndarray:
-        out = np.full(n, fill, dtype=a.dtype)
-        out[:a.shape[0]] = a
-        return out
+    def _pad(self, a, n: int, fill=0):
+        return self._jnp.pad(a, (0, n - a.shape[0]), constant_values=fill)
 
-    # ------------------------------------------------------------- expand
+    def scan(self, lo: int, hi: int):
+        return self._jnp.arange(lo, hi, dtype=self._jnp.int32)
+
     def expand(self, csr, rows_local, max_out=None):
-        rows_local = np.asarray(rows_local, dtype=np.int64)
-        R = rows_local.shape[0]
-        deg = csr.indptr[rows_local + 1] - csr.indptr[rows_local]
-        total = int(deg.sum())
+        """Device twin of ``vecops.expand_csr``: repeat-based flat CSR
+        gather (row-major order, exactly the host path's rows).  Sort- and
+        scatter-free — on CPU XLA a scatter serializes, and a padded
+        [R, D_max] block (``jaxops.expand_padded``, the jit/TPU-shaped
+        variant) would cost an extra materialization + compaction pass;
+        the flat gather materializes exactly ``total`` rows, which
+        ``max_out`` caps *before* any device work."""
+        jnp = self._jnp
+        rows = jnp.asarray(rows_local)
+        R = rows.shape[0]
+        z = jnp.zeros(0, jnp.int32)
+        if R == 0:
+            return z, z, z
+        indptr_d, indices_d, pos_d = self._csr_dev(csr)
+        total0, approx0 = self._jaxops.csr_expand_total(indptr_d, rows)
+        total = int(total0)                          # control-plane sync
+        if float(approx0) > _I32_MAX - 256:          # int32 sum wrapped
+            raise RuntimeError(f"intermediate blow-up: expansion would "
+                               f"produce ~{float(approx0):.3g} rows "
+                               f"(beyond the int32 staging envelope)")
         if max_out is not None and total > max_out:
             raise RuntimeError(f"intermediate blow-up: expansion would "
                                f"produce {total} rows > cap {max_out}")
         if total == 0:
-            z = np.zeros(0, dtype=np.int64)
             return z, z, z
-        parts = []
-        for s in range(0, R, _SLAB_ROWS):
-            e = min(s + _SLAB_ROWS, R)
-            self._expand_chunk(csr, rows_local[s:e], deg[s:e], s, parts)
-        ridx = np.concatenate([p[0] for p in parts])
-        nbr = np.concatenate([p[1] for p in parts])
-        fpos = np.concatenate([p[2] for p in parts])
-        epos = csr.pos[fpos] if csr.pos is not None else fpos
-        return ridx, nbr, epos
+        return self._jaxops.csr_expand_flat(
+            indptr_d, indices_d,
+            pos_d if pos_d is not None else indices_d, rows,
+            total=total, has_pos=pos_d is not None)
 
-    def _expand_chunk(self, csr, rows_local, deg, base, parts):
-        """Expand one row chunk, halving it while the padded [rows, d_max]
-        block would bust the element budget (degree skew isolates hub rows
-        into small sub-chunks instead of widening the whole slab)."""
-        if int(deg.sum()) == 0:
-            return
-        d_hi = int(deg.max())
-        R = rows_local.shape[0]
-        if R > 1 and _pow2(R, _MIN_BLOCK_ROWS) * _pow2(d_hi) > _EXPAND_ELEMS:
-            h = R // 2
-            self._expand_chunk(csr, rows_local[:h], deg[:h], base, parts)
-            self._expand_chunk(csr, rows_local[h:], deg[h:], base + h, parts)
-            return
-        ridx, nbr, fpos = self._expand_slab(csr, rows_local, d_hi)
-        parts.append((ridx + base, nbr, fpos))
-
-    def _expand_slab(self, csr, rows_local, d_hi):
-        R = rows_local.shape[0]
-        indptr_d, indices_d = self._csr_dev(csr)
-        d_max = _pow2(d_hi)
-        rp = _pow2(R, _MIN_BLOCK_ROWS)
-        rows_p = self._pad_rows(rows_local, rp, 0).astype(np.int32)
-        nbr, valid, flat = self._jaxops.expand_padded(
-            indptr_d, indices_d, self._jnp.asarray(rows_p), d_max)
-        # padded-block -> flat binding-table rows (drop pad rows + pad slots)
-        valid = np.asarray(valid)[:R]
-        ridx, _slot = np.nonzero(valid)
-        nbr_flat = np.asarray(nbr)[:R][valid].astype(np.int64)
-        fpos = np.asarray(flat)[:R][valid].astype(np.int64)
-        return ridx.astype(np.int64), nbr_flat, fpos
-
-    # ---------------------------------------------------------- intersect
+    # ------------------------------------------------------------- intersect
     def intersect(self, csr, rows_local, targets):
-        rows_local = np.asarray(rows_local, dtype=np.int64)
-        targets = np.asarray(targets, dtype=np.int64)
-        R = rows_local.shape[0]
-        found = np.zeros(R, dtype=bool)
-        fpos = np.zeros(R, dtype=np.int64)
+        jnp = self._jnp
+        rows = jnp.asarray(rows_local)
+        tgt = jnp.asarray(targets)
+        R = rows.shape[0]
         if R == 0:
-            return found, fpos
-        deg = csr.indptr[rows_local + 1] - csr.indptr[rows_local]
+            return jnp.zeros(0, bool), jnp.zeros(0, jnp.int32)
+        indptr_d, indices_d, pos_d = self._csr_dev(csr)
+        deg = self.take(indptr_d, rows + 1) - self.take(indptr_d, rows)
+        founds, fposs = [], []
         for s in range(0, R, _SLAB_ROWS):
             e = min(s + _SLAB_ROWS, R)
-            d_hi = int(deg[s:e].max())
+            d_hi = int(deg[s:e].max())               # control-plane sync
             if d_hi == 0:
-                continue
-            if d_hi <= MAX_ELL_DEGREE:
-                f, p = self._intersect_ell(csr, rows_local[s:e],
-                                           targets[s:e], d_hi)
+                founds.append(jnp.zeros(e - s, bool))
+                fposs.append(jnp.zeros(e - s, jnp.int32))
+            elif d_hi <= MAX_ELL_DEGREE:
+                f, p = self._intersect_ell(indptr_d, indices_d, rows[s:e],
+                                           tgt[s:e], d_hi)
+                founds.append(f)
+                fposs.append(p)
             else:
-                f, p = self._intersect_bsearch(csr, rows_local[s:e],
-                                               targets[s:e])
-            found[s:e] = f
-            fpos[s:e] = p
-        epos = np.zeros(R, dtype=np.int64)
-        if found.any():
-            hp = fpos[found]
-            epos[found] = csr.pos[hp] if csr.pos is not None else hp
+                f, p = self._intersect_bsearch(indptr_d, indices_d,
+                                               rows[s:e], tgt[s:e])
+                founds.append(f)
+                fposs.append(p)
+        found = founds[0] if len(founds) == 1 else jnp.concatenate(founds)
+        fpos = fposs[0] if len(fposs) == 1 else jnp.concatenate(fposs)
+        mapped = self.take(pos_d, fpos) if pos_d is not None else fpos
+        epos = jnp.where(found, mapped, 0)
         return found, epos
 
-    def _intersect_ell(self, csr, rows_local, targets, d_hi):
+    def _intersect_ell(self, indptr_d, indices_d, rows, targets, d_hi):
         """Pallas kernel path: gather padded-ELL rows, compare-scan probe."""
         from repro.kernels.wcoj_intersect.ops import gather_rows
         jnp = self._jnp
-        indptr_d, indices_d = self._csr_dev(csr)
         d_max = _pow2(d_hi)
-        R = rows_local.shape[0]
+        R = rows.shape[0]
         rp = _pow2(R, _MIN_BLOCK_ROWS)
         # tile rows so one [block_rows, d_max] ELL block stays ~VMEM-sized
         # (and interpret mode on CPU runs few, fat grid steps)
         block_rows = max(_MIN_BLOCK_ROWS,
                          min(rp, _pow2_floor(_TILE_ELEMS // d_max)))
-        rows_p = self._pad_rows(rows_local, rp, 0).astype(np.int32)
+        rows_p = self._pad(rows, rp)
         # pad targets with -2: never matches a real id (>=0) or ELL pad (-1)
-        tgt_p = self._pad_rows(targets, rp, -2).astype(np.int32)
-        adj = gather_rows(indices_d, indptr_d, jnp.asarray(rows_p), d_max)
-        found_d, pos_d = self._wcoj(adj, jnp.asarray(tgt_p),
-                                    block_rows=block_rows,
+        tgt_p = self._pad(targets, rp, -2)
+        adj = gather_rows(indices_d, indptr_d, rows_p, d_max)
+        found_d, pos_d = self._wcoj(adj, tgt_p, block_rows=block_rows,
                                     interpret=self._interpret)
-        found = np.asarray(found_d)[:R].astype(bool)
-        pos_in_row = np.asarray(pos_d)[:R].astype(np.int64)
-        return found, csr.indptr[rows_local] + pos_in_row
+        pos_in_row = pos_d[:R].astype(jnp.int32)
+        return found_d[:R], self.take(indptr_d, rows) + pos_in_row
 
-    def _intersect_bsearch(self, csr, rows_local, targets):
+    def _intersect_bsearch(self, indptr_d, indices_d, rows, targets):
         """High-degree fallback: jit'd per-row bounded binary search."""
         jnp = self._jnp
-        indptr_d, indices_d = self._csr_dev(csr)
-        R = rows_local.shape[0]
+        R = rows.shape[0]
         rp = _pow2(R, _MIN_BLOCK_ROWS)
-        lo = self._pad_rows(csr.indptr[rows_local], rp, 0).astype(np.int32)
-        hi = self._pad_rows(csr.indptr[rows_local + 1], rp, 0).astype(np.int32)
-        tgt = self._pad_rows(targets, rp, -2).astype(np.int32)
+        lo = self._pad(self.take(indptr_d, rows), rp)
+        hi = self._pad(self.take(indptr_d, rows + 1), rp)
+        tgt = self._pad(targets, rp, -2)
         found_d, pos_d = self._jaxops.bounded_binary_search(
-            jnp.asarray(indices_d), jnp.asarray(lo), jnp.asarray(hi),
-            jnp.asarray(tgt))
-        found = np.asarray(found_d)[:R].astype(bool)
-        return found, np.asarray(pos_d)[:R].astype(np.int64)
+            indices_d, lo, hi, tgt)
+        return found_d[:R], pos_d[:R].astype(jnp.int32)
+
+    # --------------------------------------------------------- relational tail
+    def join(self, lkeys, rkeys, max_out=None):
+        jnp = self._jnp
+        lk = jnp.asarray(lkeys)
+        rk = jnp.asarray(rkeys)
+        L, R = lk.shape[0], rk.shape[0]
+        z = jnp.zeros(0, jnp.int32)
+        if L == 0 or R == 0:
+            return z, z
+        lorder, rorder, lo, cnt, total0, approx0 = \
+            self._jaxops.sortmerge_bounds(lk, rk)
+        total = int(total0)                         # control-plane sync
+        if float(approx0) > _I32_MAX - 256:         # int32 sum wrapped
+            raise RuntimeError(f"intermediate blow-up: join would produce "
+                               f"~{float(approx0):.3g} rows (beyond the "
+                               f"int32 staging envelope)")
+        if max_out is not None and total > max_out:
+            raise RuntimeError(f"intermediate blow-up: join would produce "
+                               f"{total} rows > cap {max_out}")
+        if total == 0:
+            return z, z
+        return self._jaxops.sortmerge_pairs(lorder, rorder, lo, cnt,
+                                            total=total)
+
+    def combine_keys(self, cols: list):
+        cols = [self._jnp.asarray(c) for c in cols]
+        if len(cols) == 1:
+            return cols[0]
+        return self._jaxops.lex_ranks(cols)
+
+    def group_reduce(self, keys, values):
+        """Sorted-run grouping: one stable sort by key, then every
+        aggregate is a cumsum/boundary gather over the sorted runs —
+        sort/gather-shaped on purpose (XLA scatter, hence
+        ``jax.ops.segment_*``, serializes on CPU).  Groups ascend by key;
+        ``first`` is each group's minimal original row (stable sort)."""
+        jnp = self._jnp
+        keys = jnp.asarray(keys)
+        n = keys.shape[0]
+        if n == 0:
+            z = jnp.zeros(0, jnp.int32)
+            return z, {name: z for name in values}
+        bad = [fn for fn, _ in values.values()
+               if fn not in ("COUNT", "SUM", "AVG", "MIN", "MAX")]
+        if bad:
+            raise ValueError(f"unknown aggregate {bad[0]}")
+        order, _flags, flag_order, ng0 = self._jaxops.group_boundaries(keys)
+        ng = int(ng0)                                # control-plane sync
+        starts = flag_order[:ng]                     # ascending run starts
+        names = list(values)
+        first, outs = self._jaxops.group_aggregate(
+            order, starts, keys,
+            tuple(jnp.asarray(values[nm][1]) for nm in names),
+            tuple(values[nm][0] for nm in names))
+        return first, dict(zip(names, outs))
 
 
 def fuse_expand_chain(node: PlanNode, ctx) -> PlanNode:
@@ -217,16 +413,15 @@ def fuse_expand_chain(node: PlanNode, ctx) -> PlanNode:
     fuse runs of >= 2 consecutive single-edge expansions into one
     ``ExpandChainNode``.
 
-    Motivation (ROADMAP follow-up): this backend round-trips the binding
-    table host<->device per operator — every ``Expand`` gathers *all* bound
-    columns of the table for each surviving row.  A fused chain expands a
-    thin frontier (just the hop columns) hop-by-hop and gathers the full
-    table once at the end, amortizing the transfers.  Only predicate-free
-    hops fuse (a filter must run at its own hop to bound intermediates),
-    and each hop's source alias must be bound by the chain itself (or be
-    the first hop's source), so the thin frontier always carries it.
-    Fusion is packaging, not planning: ``ExpandChainNode.unfused()``
-    recovers the exact pre-fusion plan, and results are row-identical."""
+    With device-resident tables (OperatorSet v2) every hop already stays on
+    device; chaining still pays because the thin frontier carries only the
+    hop columns through the per-hop gathers — the full binding table is
+    gathered once at the end.  Only predicate-free hops fuse (a filter must
+    run at its own hop to bound intermediates), and each hop's source alias
+    must be bound by the chain itself (or be the first hop's source), so
+    the thin frontier always carries it.  Fusion is packaging, not
+    planning: ``ExpandChainNode.unfused()`` recovers the exact pre-fusion
+    plan, and results are row-identical."""
     pattern = ctx.pattern()
     fused = False
 
@@ -294,14 +489,16 @@ def fuse_expand_chain(node: PlanNode, ctx) -> PlanNode:
 # numpy host path (dispatch + padded-block overhead), while cyclic queries
 # whose plans close edges with WCOJ membership probes run ~34x — so the CBO
 # should spend joins/expansions to avoid intersections on this backend.
-# Scan and the (host-inherited) join stay at the numpy baseline. Re-derive
-# after re-benchmarking (e.g. on real TPU, where these flip dramatically).
+# Scan and the (now device-native) join stay at the numpy baseline.
+# Re-derive after re-benchmarking (e.g. on real TPU, where these flip
+# dramatically).
 JAX_SPEC = register_spec(PhysicalSpec(
     name="jax",
     make_operators=JaxOperators,
     cost=CostParams(alpha_scan=1.0, alpha_expand=5.3,
                     alpha_intersect=34.0, alpha_join=1.0),
-    description="jit'd padded-block primitives + wcoj_intersect Pallas "
-                "kernel (interpret on CPU, compiled on TPU)",
+    description="device-resident columns; jit'd padded-block primitives + "
+                "wcoj_intersect Pallas kernel (interpret on CPU, compiled "
+                "on TPU); segment-reduce/sort-merge relational tail",
     physical_rules=(fuse_expand_chain,),
 ))

@@ -59,6 +59,155 @@ def bounded_binary_search(indices: jax.Array, lo: jax.Array, hi: jax.Array,
     return found, pos
 
 
+def range_flatten(start: jax.Array, counts: jax.Array, total: int):
+    """Row-major flattening of per-row index ranges ``[start_i, start_i +
+    counts_i)``: returns ``(row_idx[total], flat_pos[total])``.
+
+    The device twin of the ``np.repeat``-based expansion in
+    ``vecops.expand_csr`` — built from cumsum + searchsorted + gathers
+    because both ``jnp.repeat`` and scatter-based alternatives serialize
+    (or pay heavy eager machinery) on CPU XLA.  ``total`` is the
+    data-dependent output size, synced by the caller and static under jit.
+    """
+    cum = jnp.cumsum(counts)
+    pos = jnp.arange(total, dtype=jnp.int32)
+    ridx = jnp.searchsorted(cum, pos, side="right").astype(jnp.int32)
+    offs = pos - jnp.take(cum - counts, ridx, axis=0, mode="clip")
+    flat = jnp.take(start, ridx, axis=0, mode="clip") + offs
+    return ridx, flat
+
+
+@jax.jit
+def csr_expand_total(indptr: jax.Array, rows: jax.Array):
+    """Predictive output size of a CSR expansion (one dispatch; the caller
+    syncs it for the blow-up guard and the static expand shape).  Returns
+    ``(total_i32, total_f32)``: the int32 sum is exact below 2^31 but
+    wraps above it, so the float32 estimate lets the caller catch the
+    wrap and still raise the blow-up guard instead of silently building
+    an empty/garbled expansion."""
+    deg = (jnp.take(indptr, rows + 1, axis=0, mode="clip")
+           - jnp.take(indptr, rows, axis=0, mode="clip"))
+    return deg.sum(), deg.astype(jnp.float32).sum()
+
+
+@functools.partial(jax.jit, static_argnames=("total", "has_pos"))
+def csr_expand_flat(indptr: jax.Array, indices: jax.Array, pos: jax.Array,
+                    rows: jax.Array, total: int, has_pos: bool):
+    """Fused expand step: degree lookup + row-major flattening + neighbor /
+    edge-position gathers in ONE dispatch (eager would be ~10).  Keyed by
+    (rows.shape, total); the caller syncs ``total`` from the degrees first.
+    ``pos`` is ignored (pass ``indices``) when ``has_pos`` is False."""
+    start = jnp.take(indptr, rows, axis=0, mode="clip")
+    deg = jnp.take(indptr, rows + 1, axis=0, mode="clip") - start
+    ridx, flat = range_flatten(start, deg, total)
+    nbr = jnp.take(indices, flat, axis=0, mode="clip")
+    epos = jnp.take(pos, flat, axis=0, mode="clip") if has_pos else flat
+    return ridx, nbr, epos
+
+
+@jax.jit
+def lex_ranks(cols: list[jax.Array]) -> jax.Array:
+    """Dense lexicographic ranks of row tuples (``cols[0]`` most
+    significant): equal tuples share a rank, and rank order equals the
+    tuples' lexicographic sort order — the device-native equivalent of
+    ``vecops.combine_keys``'s factorized packing (identical grouping and
+    identical ascending order, so cross-backend row order is preserved).
+
+    Sort/gather-shaped on purpose: a scatter (``.at[order].set``)
+    serializes on CPU XLA, so the group ids are carried back through an
+    argsort-based inverse permutation.  jit'd into one dispatch, keyed by
+    (n, len(cols)).
+    """
+    n = cols[0].shape[0]
+    if n == 0:
+        return jnp.zeros(0, jnp.int32)
+    order = jnp.lexsort(tuple(reversed(cols)))
+    ne = jnp.zeros(n - 1, bool)
+    for c in cols:
+        s = jnp.take(c, order, axis=0, mode="clip")
+        ne = ne | (s[1:] != s[:-1])
+    gid_sorted = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(ne.astype(jnp.int32))])
+    inv_order = jnp.argsort(order)
+    return jnp.take(gid_sorted, inv_order, axis=0, mode="clip")
+
+
+@jax.jit
+def group_boundaries(keys: jax.Array):
+    """Stage 1 of sorted-run grouping: stable sort by key and flag run
+    starts.  Returns ``(order, start_flags, flag_order, n_groups0d)`` — the
+    caller syncs ``n_groups`` and slices ``flag_order[:n_groups]`` to get
+    the run-start positions (ascending, since argsort is stable)."""
+    n = keys.shape[0]
+    order = jnp.argsort(keys)
+    sk = jnp.take(keys, order, axis=0, mode="clip")
+    flags = jnp.concatenate([jnp.ones(1, bool), sk[1:] != sk[:-1]])
+    flag_order = jnp.argsort(~flags)
+    return order, flags, flag_order, flags.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("fns",))
+def group_aggregate(order: jax.Array, starts: jax.Array, keys: jax.Array,
+                    cols: tuple, fns: tuple):
+    """Stage 2 of sorted-run grouping, one dispatch for every aggregate:
+    counts/sums via cumsum + boundary gathers, MIN/MAX via a secondary
+    value sort within key runs.  ``fns`` is the static aggregate spec
+    aligned with ``cols``.
+
+    Staging envelope: SUM/AVG accumulate through an int32/float32 cumsum
+    (x64 is disabled), so running totals past 2^31 wrap where the numpy
+    backend's int64 path stays exact — a known limit, tracked in the
+    ROADMAP (widen to pairwise or i64-emulated accumulation before
+    hub-scale stores)."""
+    n = order.shape[0]
+    bounds = jnp.concatenate([starts, jnp.asarray([n], starts.dtype)])
+    ends = bounds[1:] - 1
+    counts = (bounds[1:] - bounds[:-1]).astype(jnp.int32)
+    first = jnp.take(order, starts, axis=0, mode="clip")
+    outs = []
+    for fn, col in zip(fns, cols):
+        if fn == "COUNT":
+            outs.append(counts)
+            continue
+        if fn in ("SUM", "AVG"):
+            cs = jnp.cumsum(jnp.take(col, order, axis=0, mode="clip"))
+            ce = jnp.take(cs, ends, axis=0, mode="clip")
+            sums = ce - jnp.concatenate([jnp.zeros(1, cs.dtype), ce[:-1]])
+            outs.append(sums.astype(jnp.float32) / jnp.maximum(counts, 1)
+                        if fn == "AVG" else sums.astype(jnp.int32))
+            continue
+        # MIN/MAX: secondary sort by value within each key run — minima at
+        # run starts, maxima at run ends
+        sv = jnp.take(col, jnp.lexsort((col, keys)), axis=0, mode="clip")
+        outs.append(jnp.take(sv, starts if fn == "MIN" else ends,
+                             axis=0, mode="clip"))
+    return first, tuple(outs)
+
+
+@jax.jit
+def sortmerge_bounds(lkeys: jax.Array, rkeys: jax.Array):
+    """Stage 1 of the sort-merge join (one dispatch): stable sorts + the
+    per-left-row matching right range.  Returns ``(lorder, rorder, lo,
+    cnt, total0d)``; the caller syncs ``total`` for the pair expansion."""
+    lorder = jnp.argsort(lkeys)
+    rorder = jnp.argsort(rkeys)
+    ls = jnp.take(lkeys, lorder, axis=0, mode="clip")
+    rs = jnp.take(rkeys, rorder, axis=0, mode="clip")
+    lo = jnp.searchsorted(rs, ls, side="left")
+    cnt = jnp.searchsorted(rs, ls, side="right") - lo
+    # int32 total (exact below 2^31) + float32 estimate (wrap detector)
+    return lorder, rorder, lo, cnt, cnt.sum(), cnt.astype(jnp.float32).sum()
+
+
+@functools.partial(jax.jit, static_argnames=("total",))
+def sortmerge_pairs(lorder: jax.Array, rorder: jax.Array, lo: jax.Array,
+                    cnt: jax.Array, total: int):
+    """Fused pair expansion of the sort-merge join (one dispatch)."""
+    lrep, rpos = range_flatten(lo, cnt, total)
+    return (jnp.take(lorder, lrep, axis=0, mode="clip").astype(jnp.int32),
+            jnp.take(rorder, rpos, axis=0, mode="clip").astype(jnp.int32))
+
+
 @jax.jit
 def segment_count(segment_ids: jax.Array, num_segments: int):
     return jax.ops.segment_sum(jnp.ones_like(segment_ids), segment_ids,

@@ -1,9 +1,12 @@
 """Numpy backend — the host path of the binding-table engine.
 
-Registers the ``"numpy"`` PhysicalSpec: every operator is the corresponding
-``repro.graphdb.vecops`` primitive (flat gathers, sorted binary search,
-sort-merge join, segmented reductions). This is the seed engine's original
-execution path, now declared through the registry (DESIGN.md §2).
+Registers the ``"numpy"`` PhysicalSpec: every core operator is the
+corresponding ``repro.graphdb.vecops`` primitive (flat gathers, sorted
+binary search, sort-merge join, segmented reductions), and the v2 array
+primitives (``take``/``mask``/``concat``/...) are the host-numpy defaults
+inherited from ``OperatorSet`` — for this backend ``to_host`` is the
+identity and ``transfer_stats`` stays empty.  This is the seed engine's
+original execution path, declared through the registry (DESIGN.md §2/§7).
 """
 from __future__ import annotations
 

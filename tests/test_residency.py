@@ -1,0 +1,226 @@
+"""OperatorSet v2: device residency, transfer accounting, the conformance
+suite, host-staging baseline, batched execute_many, and blow-up naming."""
+import numpy as np
+import pytest
+
+from benchmarks import queries as Q
+from repro.core.gopt import GOpt
+from repro.core.physical_spec import (OperatorSet, TransferStats,
+                                      get_spec, run_operator_conformance,
+                                      validate_operator_set)
+
+_d2h_mid_plan = TransferStats.mid_plan_d2h
+from repro.graphdb.engine import Engine
+from repro.graphdb.host_staging import HostStagingOperators
+from repro.graphdb.numpy_backend import NumpyOperators
+
+
+def _table_eq(a, b):
+    assert a.nrows == b.nrows
+    assert set(a.cols) == set(b.cols)
+    for k in a.cols:
+        np.testing.assert_array_equal(a.cols[k], b.cols[k], err_msg=k)
+
+
+# ---------------------------------------------------------------- residency
+
+# (name, text, params, delivers): ``delivers`` marks queries whose result
+# actually carries device data home — Qr6's bindings match nothing at small
+# sf, so its COUNT()==0 result is a host-built constant with no d2h at all
+RESIDENCY_QUERIES = [
+    ("ic1", Q.QIC["ic1"], Q.QIC_PARAMS["ic1"], True),   # 2-hop chain + group
+    ("Qc1a", Q.QC["Qc1a"], None, True),                 # WCOJ intersect cycle
+    ("Qr6", Q.QR["Qr6"], Q.QR_PARAMS["Qr6"], False),    # params + predicates
+]
+
+
+@pytest.mark.parametrize("name,text,params,delivers", RESIDENCY_QUERIES,
+                         ids=[q[0] for q in RESIDENCY_QUERIES])
+def test_jax_zero_midplan_transfers(gopt_small, name, text, params, delivers):
+    """Acceptance: on the jax backend, pattern and tail phases perform zero
+    device->host transfers — the binding table crosses once, at delivery —
+    and results stay row-identical to the numpy backend."""
+    opt = gopt_small.optimize(text, params, backend="jax")
+    ref, _ = gopt_small.execute(opt, backend="numpy")
+    jx, stats = gopt_small.execute(opt, backend="jax")
+    _table_eq(ref, jx)
+    assert stats.transfers is not None
+    assert _d2h_mid_plan(stats.transfers) == 0, stats.transfers
+    if delivers:
+        # the one sanctioned conversion happened (results came home)
+        assert stats.transfers.get("deliver:d2h", {}).get("calls", 0) > 0
+
+
+def test_host_staging_baseline_transfers_and_parity(gopt_small):
+    """Negative control for the instrumentation: the v1-style host-staging
+    wrapper must record mid-plan d2h on every expand/intersect round trip —
+    while still producing identical rows."""
+    store = gopt_small.store
+    inner = get_spec("jax").operators(store)
+    staged = HostStagingOperators(inner)
+    opt = gopt_small.optimize(Q.QIC["ic3"], Q.QIC_PARAMS["ic3"],
+                              backend="jax")
+    jx, jstats = gopt_small.execute(opt, backend="jax")
+    eng = Engine(store, backend=staged)
+    v1, vstats = eng.run(opt.logical, opt.physical)
+    _table_eq(jx, v1)
+    assert _d2h_mid_plan(vstats.transfers) > 0, vstats.transfers
+    assert _d2h_mid_plan(jstats.transfers) == 0, jstats.transfers
+
+
+def test_numpy_backend_records_no_transfers(gopt_small):
+    _, stats = gopt_small.run(Q.QT["Qt2"], backend="numpy")
+    assert stats.transfers == {}
+
+
+# --------------------------------------------------------------- conformance
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_operator_conformance_registered_backends(small_ldbc, backend):
+    ops = get_spec(backend).operators(small_ldbc)
+    assert run_operator_conformance(ops) == []
+    assert validate_operator_set(ops, conformance=True) is ops
+
+
+class _WrongJoinOrder(NumpyOperators):
+    """Deliberately broken: join pairs are correct as a set but emitted in
+    reversed order — violates the row-order contract."""
+
+    def join(self, lkeys, rkeys, max_out=None):
+        lidx, ridx = super().join(lkeys, rkeys, max_out=max_out)
+        return lidx[::-1], ridx[::-1]
+
+
+class _LossyIntersect(NumpyOperators):
+    """Deliberately broken: membership probe that never finds anything."""
+
+    def intersect(self, csr, rows_local, targets):
+        found, pos = super().intersect(csr, rows_local, targets)
+        return np.zeros_like(found), pos
+
+
+class _NoBlowupGuard(NumpyOperators):
+    """Deliberately broken: ignores the predictive max_out cap."""
+
+    def expand(self, csr, rows_local, max_out=None):
+        return super().expand(csr, rows_local, max_out=None)
+
+
+@pytest.mark.parametrize("broken,needle", [
+    (_WrongJoinOrder, "join"),
+    (_LossyIntersect, "intersect"),
+    (_NoBlowupGuard, "max_out"),
+])
+def test_conformance_catches_broken_backend(small_ldbc, broken, needle):
+    ops = broken(small_ldbc)
+    fails = run_operator_conformance(ops)
+    assert any(needle in f for f in fails), fails
+    with pytest.raises(TypeError, match="conformance"):
+        validate_operator_set(ops, conformance=True)
+
+
+def test_transfer_stats_ledger():
+    ts = TransferStats()
+    ts.set_phase("pattern")
+    ts.record("h2d", 10)
+    ts.set_phase("deliver")
+    ts.record("d2h", 4)
+    ts.record("d2h", 6)
+    assert ts.count("d2h") == 2 and ts.elems("d2h") == 10
+    assert ts.count("d2h", phase="pattern") == 0
+    mark = ts.mark()
+    ts.record("d2h", 1)
+    assert ts.summary(mark) == {"deliver:d2h": {"calls": 1, "elems": 1}}
+    ts.reset()
+    assert ts.events == [] and ts.phase == ""
+
+
+def test_validate_rejects_missing_primitives(small_ldbc):
+    class Broken(NumpyOperators):
+        take = None
+
+    with pytest.raises(TypeError, match="array"):
+        validate_operator_set(Broken(small_ldbc))
+
+
+# ----------------------------------------------------- batched execute_many
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_execute_many_single_pattern_pass(gopt_small, backend, monkeypatch):
+    """The batched path runs the pattern phase once for the whole binding
+    set (expand-call count must not scale with bindings) and still returns
+    per-binding rows identical to the loop path."""
+    text = Q.QR["Qr5"]
+    bindings = [{"id1": 3, "id2": 7}, {"id1": 1, "id2": 4},
+                {"id1": 2, "id2": 9}]
+    pq = gopt_small.prepare(text, backend=backend)
+    loop = pq.execute_many(bindings, batch=False)
+
+    ops = get_spec(backend).operators(gopt_small.store)
+    calls = {"n": 0}
+    orig = type(ops).expand
+
+    def spy(self, *a, **k):
+        calls["n"] += 1
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(type(ops), "expand", spy)
+    batched = pq.execute_many(bindings)
+    batched_calls = calls["n"]
+    calls["n"] = 0
+    pq.execute(bindings[0])
+    single_calls = calls["n"]
+    # one batched pass costs as many expand calls as ONE binding, not three
+    assert batched_calls == single_calls > 0
+    assert len(batched) == len(loop) == len(bindings)
+    for (lt, _), (bt, bstats) in zip(loop, batched):
+        _table_eq(lt, bt)
+        assert isinstance(bstats.rows_produced, int)
+        assert any(n == "BATCH_BIND" for n, _ in bstats.op_rows)
+
+
+def test_execute_many_batch_keeps_residency(gopt_small):
+    pq = gopt_small.prepare(Q.QIC["ic3"], backend="jax")
+    outs = pq.execute_many([{"pid": p} for p in (3, 5, 9)])
+    for _, stats in outs:
+        assert _d2h_mid_plan(stats.transfers) == 0, stats.transfers
+
+
+def test_execute_many_empty_and_single(gopt_small):
+    pq = gopt_small.prepare(Q.QIC["ic3"])
+    assert pq.execute_many([]) == []
+    (tbl, _), = pq.execute_many([{"pid": 5}])
+    ref, _ = pq.execute({"pid": 5})
+    _table_eq(ref, tbl)
+
+
+# ------------------------------------------------------- blow-up diagnostics
+
+def test_blowup_error_names_operator_and_alias(tiny_store):
+    from repro.core.parser import parse_cypher
+    from repro.core.type_inference import infer_types
+    q = "MATCH (p1:PERSON)-[k:KNOWS*3]-(p2:PERSON) RETURN count(p1) AS c"
+    lp = parse_cypher(q, tiny_store.schema)
+    lp.replace_pattern(infer_types(lp.pattern(), tiny_store.schema))
+    with pytest.raises(RuntimeError) as exc:
+        Engine(tiny_store, max_rows=10).run(lp)
+    msg = str(exc.value)
+    assert "intermediate blow-up" in msg
+    assert "EXPAND(+" in msg and "via edge" in msg    # operator + alias
+
+
+# -------------------------------------------------------- PROFILE op times
+
+def test_profile_reports_per_operator_times(gopt_small):
+    rep = gopt_small.explain(Q.QIC["ic3"], Q.QIC_PARAMS["ic3"],
+                             analyze=True)
+    assert all(o.actual_time_s is not None and o.actual_time_s >= 0
+               for o in rep.operators)
+    assert rep.tail and all(len(t) == 3 and t[2] >= 0 for t in rep.tail)
+    text = rep.render()
+    assert "time=" in text
+
+
+def test_explain_without_analyze_has_no_times(gopt_small):
+    rep = gopt_small.explain(Q.QT["Qt2"])
+    assert all(o.actual_time_s is None for o in rep.operators)
