@@ -1,6 +1,6 @@
 """Performance comparisons.
 
-Four modes:
+Five modes:
 
 1. Backend comparison (PhysicalSpec layer): run the LDBC query set through
    every registered execution backend, check row-for-row result parity, and
@@ -35,7 +35,18 @@ Four modes:
            [--sf 0.2] [--queries ic,rbo,typeinf] [--repeats 3] \
            [--gate-perf] [--out ...]
 
-4. Legacy sweep comparison (§Perf closing table) of two dry-run result files:
+4. Fusion comparison (DESIGN.md §8): run the query set on the jax backend
+   three ways — fused single-dispatch chain programs, the per-hop v2 loop
+   (``chain_dispatch=False``), and the host-staged baseline — recording
+   walls plus per-query fused dispatch/compile counts; emits
+   ``BENCH_fusion.json`` and exits nonzero on a result mismatch or when the
+   fused path's geomean wall regresses against the per-hop loop on the
+   ic/point-query set:
+
+       PYTHONPATH=src python -m benchmarks.perf_compare --fusion \
+           [--sf 0.2] [--queries ic,cbo,rbo,typeinf] [--repeats 3] [--out ...]
+
+5. Legacy sweep comparison (§Perf closing table) of two dry-run result files:
 
        PYTHONPATH=src python -m benchmarks.perf_compare \
            dryrun_results.json dryrun_results_optimized.json
@@ -352,6 +363,122 @@ def run_residency(args) -> dict:
     return out
 
 
+# ------------------------------------------------------------- fusion mode
+
+def run_fusion(args) -> dict:
+    """Fused single-dispatch chain execution vs the per-hop v2 loop vs the
+    host-staged baseline on the jax backend (DESIGN.md §8): same optimized
+    plans, three execution paths, with per-query dispatch/compile counts
+    from the KernelStats ledger.  Gates on result parity and on the fused
+    path's geomean wall being no worse than the per-hop v2 path over the
+    ic/point-query set (the dispatch-bound workloads PR 4 measured)."""
+    import numpy as np
+
+    from benchmarks import queries as Q
+    from repro.core.gopt import GOpt
+    from repro.core.physical_spec import get_spec
+    from repro.graphdb.engine import Engine
+    from repro.graphdb.host_staging import HostStagingOperators
+    from repro.graphdb.ldbc import generate_ldbc
+
+    sets = {"ic": (Q.QIC, Q.QIC_PARAMS),
+            "cbo": (Q.QC, {}),
+            "rbo": (Q.QR, Q.QR_PARAMS),
+            "typeinf": (Q.QT, {})}
+    t0 = time.time()
+    print(f"# building LDBC-like store sf={args.sf} + GLogue ...", flush=True)
+    gopt = GOpt(generate_ldbc(sf=args.sf, seed=7))
+    print(f"# store: V={gopt.store.n_vertices} E={gopt.store.n_edges} "
+          f"({time.time() - t0:.1f}s)", flush=True)
+    resident = get_spec("jax").operators(gopt.store)
+    staged = HostStagingOperators(resident)
+
+    def timed(run, *a, **kw):
+        run(*a, **kw)                     # warmup (jit / chain measuring)
+        run(*a, **kw)                     # warmup 2 (fused compile)
+        best, stats = float("inf"), None
+        tbl = None
+        for _ in range(args.repeats):
+            t1 = time.perf_counter()
+            tbl, stats = run(*a, **kw)
+            best = min(best, time.perf_counter() - t1)
+        return best, tbl, stats
+
+    results, mismatches, regressions = [], [], []
+    for setname in args.queries.split(","):
+        queries, params = sets[setname]
+        for name, text in queries.items():
+            opt = gopt.optimize(text, params.get(name), backend="jax")
+            try:
+                ref, _ = gopt.execute(opt, backend="numpy",
+                                      max_rows=ROW_CAP)
+                fused_s, f_tbl, f_stats = timed(
+                    gopt.execute, opt, backend="jax", max_rows=ROW_CAP)
+                hop_s, h_tbl, h_stats = timed(
+                    gopt.execute, opt, backend="jax", max_rows=ROW_CAP,
+                    chain_dispatch=False)
+                v1_s, v1_tbl, _ = timed(
+                    Engine(gopt.store, backend=staged,
+                           max_rows=ROW_CAP).run, opt.logical, opt.physical)
+            except (RuntimeError, MemoryError) as exc:
+                results.append({"set": setname, "query": name,
+                                "error": str(exc)[:120]})
+                print(f"{setname}/{name}: ERROR {str(exc)[:80]}", flush=True)
+                continue
+            match = (_tables_equal(ref, f_tbl) and _tables_equal(ref, h_tbl)
+                     and _tables_equal(ref, v1_tbl))
+            kern = f_stats.kernels or {}
+            rec = {
+                "set": setname, "query": name, "rows": f_tbl.nrows,
+                "match": match,
+                "fused_s": fused_s, "perhop_v2_s": hop_s,
+                "host_staged_s": v1_s,
+                "fused_over_perhop": hop_s / fused_s if fused_s else None,
+                "fused_dispatches": kern.get("dispatch:fused_chain", 0),
+                "fused_compiles": kern.get("compile:fused_chain", 0),
+                "fused_kernels": kern,
+                "perhop_kernels": h_stats.kernels,
+            }
+            results.append(rec)
+            if not match:
+                mismatches.append(name)
+            print(f"{setname}/{name}: fused={fused_s:.4f}s "
+                  f"perhop={hop_s:.4f}s staged={v1_s:.4f}s "
+                  f"speedup={rec['fused_over_perhop']:.2f}x "
+                  f"chain_dispatches={rec['fused_dispatches']} "
+                  f"match={match}", flush=True)
+
+    ok = [r for r in results if "error" not in r and r["fused_over_perhop"]]
+    geo = (float(np.exp(np.mean(np.log([r["fused_over_perhop"]
+                                        for r in ok])))) if ok else None)
+    # the ic/point set of the acceptance gate: the LDBC-interactive queries
+    # plus the rbo point lookups — not the whole rbo set, whose join-heavy
+    # members would average a point-query regression away
+    ic_ok = [r for r in ok
+             if r["set"] == "ic" or r["query"] in ("Qr5", "Qr6")]
+    ic_geo = (float(np.exp(np.mean(np.log([r["fused_over_perhop"]
+                                           for r in ic_ok]))))
+              if ic_ok else None)
+    # acceptance gate: fused geomean wall <= per-hop v2 on the ic/point set
+    if ic_geo is not None and ic_geo < 1.0:
+        regressions.append(f"ic/point geomean {ic_geo:.3f}x < 1.0")
+    out = {"sf": args.sf, "repeats": args.repeats, "results": results,
+           "mismatches": mismatches, "regressions": regressions,
+           "summary": {"fused_over_perhop_geomean": geo,
+                       "ic_point_fused_over_perhop_geomean": ic_geo},
+           "note": "fused = single-dispatch chain programs (DESIGN.md §8); "
+                   "perhop_v2 = chain_dispatch=False device-resident loop; "
+                   "host_staged = PR-3-style padded-block round trips. "
+                   "Timings are CPU/interpret; chain compile counts "
+                   "amortize across the repeats (pow2-bucketed cache)."}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"# wrote {args.out}; mismatches={mismatches or 'none'} "
+          f"regressions={regressions or 'none'} "
+          f"geomean={geo} ic_point={ic_geo} ({time.time() - t0:.1f}s total)")
+    return out
+
+
 # ------------------------------------------------------------- legacy mode
 
 def legacy_sweep(base_p: str, opt_p: str) -> None:
@@ -388,6 +515,9 @@ def main():
                     help="compare prepared vs unprepared execution")
     ap.add_argument("--residency", action="store_true",
                     help="compare device-resident vs host-staged jax paths")
+    ap.add_argument("--fusion", action="store_true",
+                    help="compare fused single-dispatch chains vs the "
+                         "per-hop v2 loop vs the host-staged baseline")
     ap.add_argument("--gate-perf", action="store_true",
                     help="with --residency: also fail on per-query wall-time"
                          " regressions (meaningful on a real accelerator)")
@@ -415,6 +545,10 @@ def main():
         if args.gate_perf:
             fail = fail or bool(out["regressions"])
         sys.exit(1 if fail else 0)
+    if args.fusion:
+        args.out = args.out or "BENCH_fusion.json"
+        out = run_fusion(args)
+        sys.exit(1 if out["mismatches"] or out["regressions"] else 0)
     base_p = args.files[0] if args.files else "dryrun_results.json"
     opt_p = (args.files[1] if len(args.files) > 1
              else "dryrun_results_optimized.json")

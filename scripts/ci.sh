@@ -31,6 +31,12 @@ python scripts/explain_smoke.py
 echo "== residency smoke =="
 python scripts/residency_smoke.py
 
+# fusion gate (DESIGN.md §8): a 3-hop Appendix-A chain must execute as
+# exactly ONE fused device dispatch once warm (no per-hop expand launches),
+# row-identical to numpy — the single-dispatch contract
+echo "== fusion smoke =="
+python scripts/fusion_smoke.py
+
 echo "== tier-1 tests =="
 # test_pipeline.py already ran (and failed fast) in the parity gate above
 python -m pytest -x -q --ignore=tests/test_pipeline.py

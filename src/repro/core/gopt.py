@@ -56,7 +56,21 @@ from repro.graphdb.storage import GraphStore
 _OPT_KEYS = ("type_inference", "rbo", "cbo", "use_glogue", "use_selectivity",
              "physical_rules")
 
-_EXPLAIN_RE = re.compile(r"^\s*(EXPLAIN|PROFILE)\b", re.IGNORECASE)
+_EXPLAIN_RE = re.compile(r"^\s*(EXPLAIN\b|PROFILE\b(\s+SYNC\b)?)",
+                         re.IGNORECASE)
+
+
+def _explain_prefix(query: str):
+    """Parse an EXPLAIN / PROFILE / PROFILE SYNC prefix; returns
+    (mode | None, stripped query) — mode is 'explain', 'profile', or
+    'profile_sync'."""
+    m = _EXPLAIN_RE.match(query)
+    if not m:
+        return None, query
+    head = m.group(1).split()[0].lower()
+    if head == "profile" and m.group(2):
+        head = "profile_sync"
+    return head, query[m.end():]
 
 
 def _freeze(v):
@@ -144,19 +158,22 @@ class PreparedQuery:
         return [self.execute(b, **exec_kw) for b in bindings]
 
     def explain(self, params: dict | None = None, analyze: bool = False,
-                **exec_kw) -> ExplainReport:
+                sync: bool = False, **exec_kw) -> ExplainReport:
         """Structured EXPLAIN of the cached plan (``analyze=True`` also
-        executes with ``params`` and reports actual row counts).  A
+        executes with ``params`` and reports actual row counts;
+        ``sync=True`` — the ``PROFILE SYNC`` mode — blocks on the device
+        after every operator so ``OpReport.actual_time_s`` reports true
+        device times instead of dispatch times on async backends).  A
         type-inference-INVALID query reports its provably-empty result
         instead of crashing on the missing physical plan."""
         tbl = stats = None
         if analyze and not self.opt.invalid:
             declared = self.declared_params()
             bound = {k: v for k, v in (params or {}).items() if k in declared}
-            tbl, stats = self.execute(bound, **exec_kw)
+            tbl, stats = self.execute(bound, sync_per_op=sync, **exec_kw)
         return build_explain_report(self.opt, spec=self.spec,
                                     source=self.source, analyze=analyze,
-                                    table=tbl, stats=stats)
+                                    table=tbl, stats=stats, sync=sync)
 
 
 class GOpt:
@@ -331,22 +348,26 @@ class GOpt:
     # --------------------------------------------------------------- explain
     def explain(self, query: str | ir.LogicalPlan,
                 params: dict | None = None, analyze: bool = False,
+                sync: bool = False,
                 backend: str | PhysicalSpec | None = None,
                 **kw) -> ExplainReport:
         """Structured EXPLAIN/PROFILE: compile (through the prepared-plan
         cache) and report per-pass traces plus per-operator estimates;
         ``analyze=True`` (or a ``PROFILE`` prefix) also executes with
-        ``params`` and reports estimated-vs-actual cardinalities."""
+        ``params`` and reports estimated-vs-actual cardinalities.
+        ``sync=True`` (or ``PROFILE SYNC``) syncs the device per operator
+        for true per-operator device times."""
         opts = {k: v for k, v in kw.items() if k in _OPT_KEYS}
         exec_kw = {k: v for k, v in kw.items() if k not in _OPT_KEYS}
         if isinstance(query, str):
-            m = _EXPLAIN_RE.match(query)
-            if m:
-                if m.group(1).upper() == "PROFILE":
-                    analyze = True
-                query = query[m.end():]
+            mode, query = _explain_prefix(query)
+            if mode is not None and mode.startswith("profile"):
+                analyze = True
+                if mode == "profile_sync":
+                    sync = True
         pq = self.prepare(query, params, backend=backend, **opts)
-        return pq.explain(params=params, analyze=analyze, **exec_kw)
+        return pq.explain(params=params, analyze=analyze, sync=sync,
+                          **exec_kw)
 
     # --------------------------------------------------------------- execute
     def execute(self, opt: OptimizedQuery,
@@ -354,7 +375,9 @@ class GOpt:
                 trim_fields: bool = True,
                 max_rows: int = 100_000_000,
                 backend: str | PhysicalSpec | None = None,
-                params: dict | None = None
+                params: dict | None = None,
+                chain_dispatch: bool = True,
+                sync_per_op: bool = False
                 ) -> tuple[Table, ExecStats]:
         if opt.invalid:
             return Table.empty(), ExecStats()
@@ -362,24 +385,28 @@ class GOpt:
                 if fuse_expand is None else fuse_expand)
         spec = self.spec if backend is None else get_spec(backend)
         eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
-                     max_rows=max_rows, backend=spec)
+                     max_rows=max_rows, backend=spec,
+                     chain_dispatch=chain_dispatch, sync_per_op=sync_per_op)
         return eng.run(opt.logical, opt.physical, params=params)
 
     def execute_batch(self, opt: OptimizedQuery, bindings: list[dict | None],
                       fuse_expand: bool | None = None,
                       trim_fields: bool = True,
                       max_rows: int = 100_000_000,
-                      backend: str | PhysicalSpec | None = None
+                      backend: str | PhysicalSpec | None = None,
+                      chain_dispatch: bool = True
                       ) -> list[tuple[Table, ExecStats]]:
         """Vectorized sibling of ``execute``: one engine pattern pass for a
-        whole binding batch (``Engine.run_batch``)."""
+        whole binding batch (``Engine.run_batch``), with the relational
+        tails stacked on a binding-id segment column."""
         if opt.invalid:
             return [(Table.empty(), ExecStats()) for _ in bindings]
         fuse = (opt.logical.hints.get("fuse_expand", True)
                 if fuse_expand is None else fuse_expand)
         spec = self.spec if backend is None else get_spec(backend)
         eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
-                     max_rows=max_rows, backend=spec)
+                     max_rows=max_rows, backend=spec,
+                     chain_dispatch=chain_dispatch)
         return eng.run_batch(opt.logical, opt.physical, bindings)
 
     def run(self, query: str | ir.LogicalPlan, params: dict | None = None,
@@ -394,14 +421,13 @@ class GOpt:
         the prefix as ``hints['explain']``) routes the same way."""
         mode = None
         if isinstance(query, str):
-            m = _EXPLAIN_RE.match(query)
-            if m:
-                mode = m.group(1).lower()
-                query = query[m.end():]
+            mode, query = _explain_prefix(query)
         elif isinstance(query, ir.LogicalPlan):
             mode = query.hints.get("explain")
         if mode is not None:
-            return self.explain(query, params, analyze=mode == "profile",
+            return self.explain(query, params,
+                                analyze=mode.startswith("profile"),
+                                sync=mode == "profile_sync",
                                 backend=kw.pop("backend", None), **kw)
         opts = {k: v for k, v in kw.items() if k in _OPT_KEYS}
         exec_kw = {k: v for k, v in kw.items()

@@ -108,6 +108,11 @@ class CypherParser:
         if k == "name" and v.upper() in ("EXPLAIN", "PROFILE"):
             self._next()
             explain_mode = v.lower()
+            k2, v2 = self._peek()
+            if (explain_mode == "profile" and k2 == "name"
+                    and v2.upper() == "SYNC"):
+                self._next()                 # PROFILE SYNC: per-op device sync
+                explain_mode = "profile_sync"
         saw_match = False
         while self._accept("kw", "MATCH"):
             saw_match = True

@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core import ir
 from repro.core.pattern import Pattern, PatternEdge
 
 
@@ -83,12 +84,21 @@ class JoinNode(PlanNode):
 class ChainStep:
     """One hop of an ``ExpandChainNode``: expand ``from_alias`` along
     ``edge`` to bind ``alias``.  Carries the per-hop estimates of the
-    ``ExpandNode`` it was fused from, so ``unfused()`` round-trips."""
+    ``ExpandNode`` it was fused from, so ``unfused()`` round-trips.
+
+    ``intersect_edges`` (only ever non-empty on a chain's *last* step) are
+    the extra edges of a fused expand-and-intersect: after the expansion
+    the step probes each of them as a WCOJ membership filter, exactly like
+    a multi-edge ``ExpandNode`` — the chain then ends in a wcoj step."""
     edge: PatternEdge
     from_alias: str
     alias: str
     est_frequency: float = 0.0
     est_cost: float = 0.0
+    intersect_edges: tuple = ()
+
+    def all_edges(self) -> list[PatternEdge]:
+        return [self.edge, *self.intersect_edges]
 
 
 @dataclasses.dataclass
@@ -110,14 +120,16 @@ class ExpandChainNode(PlanNode):
         plan) — used by the engine's fuse ablation and by parity checks."""
         node = self.child
         for s in self.steps:
-            node = ExpandNode(node, s.alias, [s.edge],
+            node = ExpandNode(node, s.alias, s.all_edges(),
                               est_frequency=s.est_frequency,
                               est_cost=s.est_cost)
         return node
 
     def pretty(self, indent=0):
         pad = "  " * indent
-        hops = ",".join(f"+{s.alias}" for s in self.steps)
+        hops = ",".join(f"+{s.alias}" + (f"x{1 + len(s.intersect_edges)}"
+                                         if s.intersect_edges else "")
+                        for s in self.steps)
         return (f"{pad}ExpandChain({hops}) "
                 f"[F={self.est_frequency:.3g} C={self.est_cost:.3g}]\n"
                 + self.child.pretty(indent + 1))
@@ -133,7 +145,9 @@ def plan_signature(node: PlanNode) -> str:
         return (f"J({plan_signature(node.left)},{plan_signature(node.right)},"
                 f"k={'/'.join(node.keys)})")
     if isinstance(node, ExpandChainNode):
-        hops = "".join(f",+{s.alias}" for s in node.steps)
+        hops = "".join(f",+{s.alias}x{1 + len(s.intersect_edges)}"
+                       if s.intersect_edges else f",+{s.alias}"
+                       for s in node.steps)
         return f"C({plan_signature(node.child)}{hops})"
     raise TypeError(node)
 
@@ -189,6 +203,87 @@ def describe_node(node: PlanNode) -> str:
         hops = "".join(f"+{s.alias}" for s in node.steps)
         return f"ExpandChain({hops})"
     raise TypeError(node)
+
+
+# --------------------------------------------------------------------------
+# Chain-fusable predicates (DESIGN.md §8)
+# --------------------------------------------------------------------------
+# A hop predicate can fold into a fused ExpandChainNode program when it is a
+# boolean combination of comparisons / IN-set probes whose column side reads
+# an alias the thin chain frontier carries and whose value side is a literal
+# or a late-bound parameter.  ``compile_chain_predicate`` turns such a
+# predicate into (a) a hashable *static* signature — part of the fused
+# program's compile-cache key, shared across literal/parameter values — and
+# (b) runtime *slot* descriptors the engine evaluates per execution (value
+# encoding, parameter resolution), so rebinding a parameter never recompiles.
+
+_I32_LO, _I32_HI = -(1 << 31), (1 << 31) - 1
+
+
+def _chain_value_ok(v) -> bool:
+    """Literal values the int32-staged fused program can honor: in-envelope
+    integers, or strings (encoded to ints at slot evaluation).  Anything
+    else is rejected *statically* so the hop stays on the plain path
+    instead of fusing and then falling back on every execution."""
+    if isinstance(v, str):
+        return True
+    return (not isinstance(v, bool) and isinstance(v, int)
+            and _I32_LO < v <= _I32_HI)
+
+
+def _chain_col_ref(e, vertex_aliases, edge_aliases):
+    if isinstance(e, ir.Var) and e.alias in vertex_aliases:
+        return ("col", e.alias)
+    if isinstance(e, ir.Prop):
+        if e.alias in vertex_aliases:
+            return ("vprop", e.alias, e.name)
+        if e.alias in edge_aliases:
+            return ("eprop", e.alias, e.name)
+    return None
+
+
+def compile_chain_predicate(expr, vertex_aliases, edge_aliases, slots):
+    """Compile one pattern predicate into its chain-fusable form.
+
+    Returns the static signature (appending runtime slot descriptors —
+    ``("scalar", lhs_expr, rhs_expr)`` or ``("values", item_expr, values)``
+    — to ``slots``), or ``None`` when the predicate falls outside the
+    fusable subset; the caller then leaves the hop to the per-hop loop."""
+    if isinstance(expr, ir.Cmp):
+        ref = _chain_col_ref(expr.lhs, vertex_aliases, edge_aliases)
+        if ref is None or not isinstance(expr.rhs, (ir.Lit, ir.Param)):
+            return None
+        if isinstance(expr.rhs, ir.Lit) and not _chain_value_ok(
+                expr.rhs.value):
+            return None
+        slots.append(("scalar", expr.lhs, expr.rhs))
+        return ("cmp", expr.op, ref, len(slots) - 1)
+    if isinstance(expr, ir.InSet):
+        ref = _chain_col_ref(expr.item, vertex_aliases, edge_aliases)
+        if ref is None:
+            return None
+        if not isinstance(expr.values, ir.Param) and not all(
+                _chain_value_ok(v) for v in expr.values):
+            return None
+        slots.append(("values", expr.item, expr.values))
+        return ("in", ref, len(slots) - 1)
+    if isinstance(expr, ir.BoolOp):
+        subs = tuple(compile_chain_predicate(a, vertex_aliases, edge_aliases,
+                                             slots)
+                     for a in expr.args)
+        if any(s is None for s in subs):
+            return None
+        return (expr.op.lower(), subs)
+    return None
+
+
+def chain_fusable_predicates(preds, vertex_aliases, edge_aliases) -> bool:
+    """True when every predicate in ``preds`` compiles to chain-fusable
+    form — the fusion rule's gate for folding a predicated hop."""
+    scratch: list = []
+    return all(
+        compile_chain_predicate(p, vertex_aliases, edge_aliases, scratch)
+        is not None for p in preds or [])
 
 
 def _component_left_deep(pattern: Pattern,

@@ -124,6 +124,41 @@ class TransferStats:
                    if k.endswith(":d2h") and not k.startswith("deliver:"))
 
 
+class KernelStats:
+    """Compiled-program launch/compile ledger — ``TransferStats``' sibling.
+
+    Backends record one ``dispatch`` event per *compiled program launch*
+    (jit'd compound primitives, Pallas kernels, fused chain programs) and
+    one ``compile`` event per program they newly build; cheap eager glue
+    (takes, masks, pads, slices) is deliberately not recorded.  The engine
+    snapshots the ledger into ``ExecStats.kernels`` per run, so tests and
+    benchmarks can assert dispatch counts — e.g. that a fused 3-hop chain
+    executes as exactly one ``fused_chain`` dispatch (DESIGN.md §8)."""
+
+    def __init__(self):
+        self.events: list[tuple[str, str, int]] = []   # (kind, label, n)
+
+    def record(self, kind: str, label: str, n: int = 1):
+        self.events.append((kind, label, int(n)))
+
+    def reset(self):
+        self.events.clear()
+
+    def mark(self) -> int:
+        return len(self.events)
+
+    def count(self, kind: str, label: str | None = None,
+              since: int = 0) -> int:
+        return sum(n for k, lb, n in self.events[since:]
+                   if k == kind and (label is None or lb == label))
+
+    def summary(self, since: int = 0) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for k, lb, n in self.events[since:]:
+            out[f"{k}:{lb}"] = out.get(f"{k}:{lb}", 0) + n
+        return out
+
+
 class OperatorSet:
     """Physical operator implementations bound to one ``GraphStore``.
 
@@ -144,10 +179,14 @@ class OperatorSet:
     """
 
     name = "abstract"
+    # True on backends that implement chain_program (fused whole-chain
+    # execution, DESIGN.md §8); the engine checks this before building specs
+    supports_chains = False
 
     def __init__(self, store):
         self.store = store
         self.transfer_stats = TransferStats()
+        self.kernel_stats = KernelStats()
 
     # ------------------------------------------------- array primitives (v2)
     def asarray(self, values):
@@ -251,6 +290,25 @@ class OperatorSet:
         ``(first_row_index_per_group, {name: aggregated})``."""
         raise NotImplementedError
 
+    # ------------------------------------------------- optional capabilities
+    def chain_program(self, spec):
+        """Fused whole-chain execution (DESIGN.md §8): given a
+        ``graphdb.chain.ChainSpec``, return a program handle with
+        ``ready() -> bool``, ``observe(hop_sizes)`` (capacity feedback from
+        a per-hop measuring run) and ``run(src_col, nrows, scalars,
+        value_lists, max_rows) -> (rows, cols, n) | None`` — ``None`` means
+        "fall back to the per-hop loop for this execution" (capacity
+        overflow; the handle regrows its buckets).  ``run`` must be
+        row-identical to the per-hop loop.  The base returns ``None``: no
+        fused-chain capability."""
+        return None
+
+    def block_ready(self, arrays):
+        """Synchronization barrier for the sync-per-op PROFILE mode: block
+        until every array in ``arrays`` (any pytree) is computed.  Host
+        backends are synchronous — the default is a no-op."""
+        return arrays
+
 
 @dataclasses.dataclass(frozen=True)
 class PhysicalSpec:
@@ -351,6 +409,61 @@ def _conf_csr():
     from repro.graphdb.storage import CSR
     return CSR(indptr=np.array([0, 2, 5, 5, 6], dtype=np.int64),
                indices=np.array([10, 12, 3, 7, 9, 12], dtype=np.int64))
+
+
+def _conf_csr2():
+    """Second-hop fixture keyed over ids 0..12 (the value range of
+    ``_conf_csr``): 3->[5], 7->[2,4], 10->[1], 12->[0,8], rest empty."""
+    from repro.graphdb.storage import CSR
+    return CSR(indptr=np.array([0, 0, 0, 0, 1, 1, 1, 1, 3, 3, 3, 4, 4, 6],
+                               dtype=np.int64),
+               indices=np.array([5, 2, 4, 1, 0, 8], dtype=np.int64))
+
+
+def _conformance_chain(ops, fails: list[str]):
+    """Fused-chain contract: a 2-hop chain over the tiny fixtures must be
+    row-identical to the hand-computed per-hop expansion — provenance rows,
+    bound aliases, and edge identity columns alike."""
+    from repro.graphdb.chain import ChainSpec, HopSpec, OrientSpec
+    spec = ChainSpec("a", [
+        HopSpec("a", "b", "e1", [OrientSpec("out", _conf_csr(), 0, 4, 0)],
+                [], None),
+        HopSpec("b", "c", "e2", [OrientSpec("out", _conf_csr2(), 0, 13, 1)],
+                [], None),
+    ], [])
+    prog = ops.chain_program(spec)
+    if prog is None:
+        fails.append("chain_program: supports_chains backend returned None")
+        return
+    prog.observe([6, 8])
+    res = prog.run(ops.asarray(np.array([1, 0, 3], dtype=np.int64)), 3,
+                   [], [], max_rows=1 << 20)
+    if res is None:
+        fails.append("chain_program.run: refused after observe()")
+        return
+    rows, cols, n = res
+    H = ops.to_host
+    oracle = {
+        "rows": [0, 0, 0, 1, 1, 1, 2, 2],
+        "b": [3, 7, 7, 10, 12, 12, 12, 12],
+        "c": [5, 2, 4, 1, 0, 8, 0, 8],
+        "e2#p": [0, 1, 2, 3, 4, 5, 4, 5],
+        "e1#p": [2, 3, 3, 0, 1, 1, 5, 5],
+        "e1#t": [0] * 8, "e2#t": [1] * 8,
+    }
+    got = {"rows": np.asarray(H(rows))[:n]}
+    for k in ("b", "c", "e1#t", "e1#p", "e2#t", "e2#p"):
+        if k not in cols:
+            fails.append(f"chain_program: missing output column {k!r}")
+            return
+        got[k] = np.asarray(H(cols[k]))[:n]
+    if n != 8:
+        fails.append(f"chain_program: got {n} rows, want 8")
+        return
+    for k, want in oracle.items():
+        if not np.array_equal(got[k].astype(np.int64), np.asarray(want)):
+            fails.append(f"chain_program.{k}: got {got[k].tolist()!r}, "
+                         f"want {want!r}")
 
 
 def run_operator_conformance(ops: OperatorSet) -> list[str]:
@@ -454,6 +567,9 @@ def run_operator_conformance(ops: OperatorSet) -> list[str]:
         check("group_reduce.MIN", aggs["lo"], [2, 1, 5])
         check("group_reduce.MAX", aggs["hi"], [4, 3, 5])
         check("group_reduce.AVG", aggs["av"], [3.0, 2.0, 5.0])
+
+        if getattr(ops, "supports_chains", False):
+            _conformance_chain(ops, fails)
     except Exception as exc:                           # noqa: BLE001
         fails.append(f"conformance aborted: {type(exc).__name__}: {exc}")
     return fails

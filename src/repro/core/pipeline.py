@@ -475,9 +475,13 @@ class ExplainReport:
     tail: list[tuple[str, int, float]]
     result_rows: int | None = None
     exec_wall_s: float | None = None
+    # PROFILE SYNC mode: the engine blocked on the device after every
+    # operator, so actual_time_s are true device times, not dispatch times
+    sync: bool = False
 
     def render(self, diffs: bool = False) -> str:
-        head = "PROFILE" if self.analyze else "EXPLAIN"
+        head = ("PROFILE SYNC" if self.analyze and self.sync
+                else "PROFILE" if self.analyze else "EXPLAIN")
         lines = [f"{head} (backend={self.backend}, "
                  f"compile={self.compile_s * 1e3:.2f}ms)"]
         if self.source:
@@ -534,7 +538,7 @@ def _tree_order(node: PlanNode) -> list[tuple[PlanNode, int]]:
 
 def build_explain_report(opt, spec: PhysicalSpec, source: str | None = None,
                          analyze: bool = False, table=None,
-                         stats=None) -> ExplainReport:
+                         stats=None, sync: bool = False) -> ExplainReport:
     """Assemble an ``ExplainReport`` from an ``OptimizedQuery`` (and, under
     ``analyze=True``, the execution's result table + ``ExecStats``).
 
@@ -547,7 +551,8 @@ def build_explain_report(opt, spec: PhysicalSpec, source: str | None = None,
             compile_s=opt.compile_s, trace=trace, physical=None,
             operators=[], tail=[],
             result_rows=0 if analyze else None,
-            exec_wall_s=stats.wall_s if stats is not None else None)
+            exec_wall_s=stats.wall_s if stats is not None else None,
+            sync=sync)
 
     post = plan_operators(opt.physical)          # execution (post-)order
     actual_by_node: dict[int, int] = {}
@@ -593,4 +598,5 @@ def build_explain_report(opt, spec: PhysicalSpec, source: str | None = None,
         compile_s=opt.compile_s, trace=trace, physical=opt.physical,
         operators=operators, tail=tail,
         result_rows=table.nrows if table is not None else None,
-        exec_wall_s=stats.wall_s if stats is not None else None)
+        exec_wall_s=stats.wall_s if stats is not None else None,
+        sync=sync)

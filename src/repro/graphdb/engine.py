@@ -47,10 +47,12 @@ import numpy as np
 
 from repro.core import ir
 from repro.core.errors import ParamError
-from repro.core.pattern import BOTH, IN, OUT, Pattern, PatternEdge
+from repro.core.pattern import Pattern, PatternEdge
 from repro.core.physical import (ExpandChainNode, ExpandNode, JoinNode,
                                  PlanNode, ScanNode)
 from repro.core.physical_spec import OperatorSet, PhysicalSpec, get_spec
+from repro.graphdb.chain import (ChainFallback, build_chain_spec,
+                                 orientations)
 from repro.graphdb.storage import GraphStore
 
 INT_MIN = np.iinfo(np.int64).min
@@ -120,11 +122,15 @@ class ExecStats:
     op_rows: list = dataclasses.field(default_factory=list)
     # (opname, seconds) aligned 1:1 with op_rows; on async backends these
     # are dispatch times (the final device sync lands in delivery/wall_s)
+    # unless the engine ran with sync_per_op=True (PROFILE SYNC)
     op_times: list = dataclasses.field(default_factory=list)
     wall_s: float = 0.0
     # host<->device movement summary for this run ({"phase:kind": {...}}),
     # from the backend's TransferStats ledger
     transfers: dict | None = None
+    # compiled-program launch/compile summary ({"kind:label": n}) from the
+    # backend's KernelStats ledger — e.g. {"dispatch:fused_chain": 1}
+    kernels: dict | None = None
 
     def log(self, opname: str, rows: int, secs: float = 0.0):
         self.rows_produced += rows
@@ -135,11 +141,18 @@ class ExecStats:
 class Engine:
     def __init__(self, store: GraphStore, fuse_expand: bool = True,
                  trim_fields: bool = True, max_rows: int = 100_000_000,
-                 backend: str | PhysicalSpec | OperatorSet = "numpy"):
+                 backend: str | PhysicalSpec | OperatorSet = "numpy",
+                 chain_dispatch: bool = True, sync_per_op: bool = False):
         self.store = store
         self.fuse_expand = fuse_expand
         self.trim_fields = trim_fields
         self.max_rows = max_rows
+        # chain_dispatch=False keeps ExpandChainNodes on the per-hop loop
+        # (the fused path's parity oracle); sync_per_op=True blocks on the
+        # device after every operator so op_times are true device times
+        # (the PROFILE SYNC mode) instead of dispatch times
+        self.chain_dispatch = chain_dispatch
+        self.sync_per_op = sync_per_op
         self._params: dict = {}          # execution-time parameter bindings
         self._batch: list[dict] | None = None    # run_batch binding set
         self._deferred: list = []        # union-relaxed predicates to re-apply
@@ -151,6 +164,13 @@ class Engine:
 
     def _table(self, cols: dict, nrows: int) -> Table:
         return Table(cols, nrows, self.ops)
+
+    def _tick(self, tbl: Table | None, t0: float) -> float:
+        """Per-operator elapsed time; under sync_per_op the device finishes
+        the operator's work before the clock is read."""
+        if self.sync_per_op and tbl is not None and tbl.cols:
+            self.ops.block_ready(tbl.cols)
+        return time.perf_counter() - t0
 
     # ================================================================ pattern
     def _check(self, n, label: str):
@@ -172,19 +192,16 @@ class Engine:
         ids = self.ops.concat(parts)
         tbl = self._table({alias: ids}, int(ids.shape[0]))
         tbl = self._apply_fused_predicates(tbl, v.predicates, stats)
-        stats.log(f"SCAN({alias})", tbl.nrows, time.perf_counter() - t0)
+        stats.log(f"SCAN({alias})", tbl.nrows, self._tick(tbl, t0))
         self._materialize(tbl, alias, pattern)
         return tbl
 
-    def _orientations(self, e: PatternEdge, from_alias: str):
-        """Yield (csr_kind, triple) pairs for expanding edge ``e`` from
-        ``from_alias``. csr_kind 'out' keys the CSR by the data-edge source."""
-        dirs = [OUT, IN] if e.direction == BOTH else [e.direction]
-        for d in dirs:
-            data_src, data_dst = (e.src, e.dst) if d == OUT else (e.dst, e.src)
-            use_out = from_alias == data_src
-            for t in sorted(e.triples, key=repr):
-                yield ("out" if use_out else "in"), t
+    @staticmethod
+    def _orientations(e: PatternEdge, from_alias: str):
+        """(csr_kind, triple) pairs for expanding ``e`` from ``from_alias``
+        — shared with the fused-chain spec builder (``chain.orientations``)
+        so both execution paths concatenate identically."""
+        return orientations(e, from_alias)
 
     def _expand_edge(self, tbl: Table, pattern: Pattern, e: PatternEdge,
                      from_alias: str, new_alias: str, stats: ExecStats) -> Table:
@@ -361,7 +378,7 @@ class Engine:
                     tbl = tbl.mask(self.ops.take(self.ops.asarray(allowed),
                                                  tidx))
                 stats.log(f"GET_VERTEX({node.new_alias})", tbl.nrows,
-                          time.perf_counter() - t0)
+                          self._tick(tbl, t0))
             # intersect the remaining edges (WCOJ step)
             for e in edges[1:]:
                 frm = e.other(node.new_alias)
@@ -372,67 +389,154 @@ class Engine:
             for e in edges:
                 tbl = self._apply_fused_predicates(tbl, e.predicates, stats)
             stats.log(f"EXPAND(+{node.new_alias}|{len(edges)}e)", tbl.nrows,
-                      time.perf_counter() - t0)
+                      self._tick(tbl, t0))
             self._materialize(tbl, node.new_alias, pattern)
             return tbl
         if isinstance(node, ExpandChainNode):
-            # fused predicate-free expand run (backend physical rewrite):
-            # expand a *thin* frontier table hop-by-hop — the source column,
-            # per-hop alias/edge columns and a provenance row index — and
-            # gather the full binding table once at the end, instead of
-            # taking every bound column through a gather at every hop
             if not self.fuse_expand:
                 # ExpandGetVFusion ablation: run the pre-fusion plan
                 return self.exec_pattern(pattern, node.unfused(), stats)
             tbl = self.exec_pattern(pattern, node.child, stats)
-            t0 = time.perf_counter()
-            first = node.steps[0].from_alias
-            cur = self._table({first: tbl.cols[first],
-                               "__chain_row": self.ops.arange(tbl.nrows)},
-                              tbl.nrows)
-            for s in node.steps:
-                if cur.nrows == 0:
-                    break
-                cur = self._expand_edge(cur, pattern, s.edge, s.from_alias,
-                                        s.alias, stats)
-            hops = "".join(f"+{s.alias}" for s in node.steps)
-            if cur.nrows == 0:
-                stats.log(f"EXPANDCHAIN({hops})", 0,
-                          time.perf_counter() - t0)
-                return Table.empty()
-            rows = cur.cols.pop("__chain_row")
-            del cur.cols[first]          # tbl carries the original column
-            out = tbl.take(rows).with_cols(cur.cols)
-            stats.log(f"EXPANDCHAIN({hops})", out.nrows,
-                      time.perf_counter() - t0)
-            for s in node.steps:
-                self._materialize(out, s.alias, pattern)
-            return out
+            return self._exec_chain(pattern, node, tbl, stats)
         if isinstance(node, JoinNode):
             lt = self.exec_pattern(pattern, node.left, stats)
             rt = self.exec_pattern(pattern, node.right, stats)
-            t0 = time.perf_counter()
-            # join on the shared vertex aliases plus any other column both
-            # sides bound (shared edges must bind identically on both sides)
-            keys = sorted(set(node.keys) |
-                          (set(lt.cols) & set(rt.cols) - {"__pad"}))
-            keys = [k for k in keys if not k.startswith("__mat.")]
-            label = f"JOIN({'/'.join(keys) or 'cross'})"
-            lkey, rkey = self._pack_join_keys(lt, rt, keys)
+            return self._exec_join(pattern, node, lt, rt, stats)
+        raise TypeError(node)
+
+    # ================================================================= chains
+    def _chain_spec(self, node: ExpandChainNode, pattern: Pattern):
+        """ChainSpec for the fused dispatch, memoized on the plan node per
+        (store, backend) — plans are shared through the prepared-plan cache,
+        so one compiled chain serves every engine over the same store."""
+        key = (id(self.store), self.ops.name)
+        cached = node.__dict__.get("_chain_spec")
+        if cached is None or cached[0] != key:
+            spec = build_chain_spec(self.store, self._tindex, pattern, node)
+            node.__dict__["_chain_spec"] = cached = (key, spec)
+        return cached[1]
+
+    def _chain_slot_values(self, spec):
+        """Evaluate the spec's runtime slots against the current parameter
+        bindings.  Raises ``ChainFallback`` for values the int32-staged
+        fused program cannot honor (non-integers, out-of-envelope scalars);
+        the per-hop loop then executes with full host semantics."""
+        i32lo, i32hi = np.iinfo(np.int32).min, np.iinfo(np.int32).max
+        scalars, value_lists = [], []
+        for kind, lhs, rhs in spec.slots:
+            if kind == "scalar":
+                v = (self._param_value(rhs.name) if isinstance(rhs, ir.Param)
+                     else rhs.value)
+                v = self._encode_scalar(lhs, v)
+                if (isinstance(v, bool) or not isinstance(v, (int, np.integer))
+                        or not i32lo < int(v) <= i32hi):
+                    raise ChainFallback(repr(v))
+                scalars.append(int(v))
+            else:
+                values = (self._param_value(rhs.name)
+                          if isinstance(rhs, ir.Param) else rhs)
+                enc = []
+                for x in values:
+                    xv = self._encode_scalar(lhs, x)
+                    if isinstance(xv, bool) or not isinstance(
+                            xv, (int, np.integer)):
+                        raise ChainFallback(repr(xv))
+                    if i32lo < int(xv) <= i32hi:   # out-of-envelope: no match
+                        enc.append(int(xv))
+                value_lists.append(enc)
+        return scalars, value_lists
+
+    def _exec_chain(self, pattern: Pattern, node: ExpandChainNode,
+                    tbl: Table, stats: ExecStats) -> Table:
+        """Fused chain execution: ONE backend dispatch through
+        ``ops.chain_program`` when the backend advertises it and the shape
+        is in the fusable envelope; otherwise (and on the first, measuring
+        execution of a shape) the thin-frontier per-hop loop — the parity
+        oracle the fused program is held to."""
+        t0 = time.perf_counter()
+        first = node.steps[0].from_alias
+        hops = "".join(f"+{s.alias}" for s in node.steps)
+        label = f"EXPANDCHAIN({hops})"
+        prog = None
+        if (self.chain_dispatch and tbl.nrows
+                and getattr(self.ops, "supports_chains", False)):
+            spec = self._chain_spec(node, pattern)
+            # batched runs relax parameter predicates to per-binding unions;
+            # the fused program bakes exact slot values, so those chains
+            # stay on the loop (which defers them correctly)
+            if spec is not None and not (self._batch is not None
+                                         and spec.has_params):
+                prog = self.ops.chain_program(spec)
+        if prog is not None and prog.ready():
             try:
-                lidx, ridx = self.ops.join(lkey, rkey, max_out=self.max_rows)
+                res = prog.run(tbl.cols[first], tbl.nrows,
+                               *self._chain_slot_values(spec), self.max_rows)
+            except ChainFallback:
+                res = None
             except RuntimeError as exc:
                 self._annotate_blowup(exc, label)
-            self._check(int(lidx.shape[0]), label)
-            cols = {k: self.ops.take(v, lidx) for k, v in lt.cols.items()}
-            for k, v in rt.cols.items():
-                if k not in cols:
-                    cols[k] = self.ops.take(v, ridx)
-            out = self._table(cols, int(lidx.shape[0]))
-            stats.log(f"JOIN({'/'.join(keys)})", out.nrows,
-                      time.perf_counter() - t0)
-            return out
-        raise TypeError(node)
+            if res is not None:
+                rows, cols, n = res
+                out = tbl.take(rows).with_cols(cols) if n else Table.empty()
+                stats.log(label, out.nrows, self._tick(out, t0))
+                for s in node.steps:
+                    self._materialize(out, s.alias, pattern)
+                return out
+        # per-hop loop: thin frontier (source column, hop columns, a
+        # provenance row index), full table gathered once at the end
+        cur = self._table({first: tbl.cols[first],
+                           "__chain_row": self.ops.arange(tbl.nrows)},
+                          tbl.nrows)
+        sizes = []
+        for s in node.steps:
+            if cur.nrows == 0:
+                sizes.append(0)
+                continue
+            cur = self._expand_edge(cur, pattern, s.edge, s.from_alias,
+                                    s.alias, stats)
+            sizes.append(cur.nrows)     # pre-filter total = fused capacity
+            for e in s.intersect_edges:
+                cur = self._intersect_edge(cur, pattern, e,
+                                           e.other(s.alias), s.alias)
+            v = pattern.vertices[s.alias]
+            cur = self._apply_fused_predicates(cur, v.predicates, stats)
+            for e in s.all_edges():
+                cur = self._apply_fused_predicates(cur, e.predicates, stats)
+        if prog is not None:
+            prog.observe(sizes)         # fix/regrow the capacity schedule
+        if cur.nrows == 0:
+            stats.log(label, 0, self._tick(None, t0))
+            return Table.empty()
+        rows = cur.cols.pop("__chain_row")
+        del cur.cols[first]          # tbl carries the original column
+        out = tbl.take(rows).with_cols(cur.cols)
+        stats.log(label, out.nrows, self._tick(out, t0))
+        for s in node.steps:
+            self._materialize(out, s.alias, pattern)
+        return out
+
+    def _exec_join(self, pattern: Pattern, node: JoinNode, lt: Table,
+                   rt: Table, stats: ExecStats) -> Table:
+        t0 = time.perf_counter()
+        # join on the shared vertex aliases plus any other column both
+        # sides bound (shared edges must bind identically on both sides)
+        keys = sorted(set(node.keys) |
+                      (set(lt.cols) & set(rt.cols) - {"__pad"}))
+        keys = [k for k in keys if not k.startswith("__mat.")]
+        label = f"JOIN({'/'.join(keys) or 'cross'})"
+        lkey, rkey = self._pack_join_keys(lt, rt, keys)
+        try:
+            lidx, ridx = self.ops.join(lkey, rkey, max_out=self.max_rows)
+        except RuntimeError as exc:
+            self._annotate_blowup(exc, label)
+        self._check(int(lidx.shape[0]), label)
+        cols = {k: self.ops.take(v, lidx) for k, v in lt.cols.items()}
+        for k, v in rt.cols.items():
+            if k not in cols:
+                cols[k] = self.ops.take(v, ridx)
+        out = self._table(cols, int(lidx.shape[0]))
+        stats.log(f"JOIN({'/'.join(keys)})", out.nrows, self._tick(out, t0))
+        return out
 
     def _pack_join_keys(self, lt: Table, rt: Table, keys: list[str]):
         """Pack the join columns of both sides into one comparable key
@@ -568,7 +672,9 @@ class Engine:
         t0 = time.perf_counter()
         ops, pattern, node = self._plan_head(plan, pattern_plan)
         ts = self.ops.transfer_stats
+        ks = self.ops.kernel_stats
         mark = ts.mark()
+        kmark = ks.mark()
         ts.set_phase("pattern")
         try:
             tbl = self.exec_pattern(pattern, node, stats)
@@ -581,6 +687,7 @@ class Engine:
             ts.set_phase("")
         stats.wall_s = time.perf_counter() - t0
         stats.transfers = ts.summary(mark)
+        stats.kernels = ks.summary(kmark)
         return tbl, stats
 
     def run_batch(self, plan: ir.LogicalPlan,
@@ -589,15 +696,20 @@ class Engine:
         """One pattern pass, many parameter bindings (the vectorized
         ``PreparedQuery.execute_many`` path).  Parameter-dependent pattern
         predicates execute as the union of the per-binding filters, the
-        exact predicate re-applies per binding, and each binding runs its
-        own relational tail — results are row-identical to looping
-        ``run``.  Returns ``[(host Table, ExecStats), ...]``."""
+        exact predicate re-applies per binding, and the relational tails
+        run **stacked**: a ``__seg`` binding-id column turns the per-binding
+        group/order/limit/distinct loops into one segmented pass (falling
+        back to the per-binding loop on any RuntimeError or when a tail
+        operator is outside the segmented envelope) — results are
+        row-identical to looping ``run``.  Returns
+        ``[(host Table, ExecStats), ...]``."""
         bound = [self.bind_params(plan, b) for b in bindings]
         if not bound:
             return []
         ops, pattern, node = self._plan_head(plan, pattern_plan)
         ts = self.ops.transfer_stats
         mark = ts.mark()
+        kmark = self.ops.kernel_stats.mark()
         shared = ExecStats()
         t0 = time.perf_counter()
         self._batch = bound
@@ -614,24 +726,78 @@ class Engine:
         # per-binding window starts fresh so binding i never reads binding
         # i-1's tail/deliver events
         pattern_transfers = ts.summary(mark)
+        pattern_kernels = self.ops.kernel_stats.summary(kmark)
         deferred, self._deferred = self._deferred, []
+        env = (ops, tbl, bound, deferred, shared, pattern_s,
+               pattern_transfers, pattern_kernels)
+        if len(bound) > 1 and self._tail_stackable(ops[1:]):
+            try:
+                return self._run_tails_stacked(*env)
+            except RuntimeError:
+                pass                       # fall back to the binding loop
+        return self._run_tails_loop(*env)
+
+    @staticmethod
+    def _tail_stackable(rel_ops) -> bool:
+        """Tail operators the segmented (``__seg``-stacked) pass supports:
+        parameter-free expressions only (parameters would need per-segment
+        values), no string-literal outputs (host-only columns cannot ride
+        the backend's segment ops), and no global aggregate downstream of a
+        row-reducing operator (its empty-input COUNT()=0 fix-up is
+        per-binding)."""
+        exprs: list = []
+        reducing = False
+        for op in rel_ops:
+            if isinstance(op, ir.Select):
+                exprs.append(op.predicate)
+                reducing = True
+            elif isinstance(op, ir.Project):
+                exprs.extend(e for e, _ in op.items)
+            elif isinstance(op, ir.GroupBy):
+                if not op.keys and reducing:
+                    return False
+                exprs.extend(e for e, _ in op.keys)
+                exprs.extend(a.arg for a, _ in op.aggs if a.arg is not None)
+            elif isinstance(op, ir.OrderBy):
+                exprs.extend(e for e, _ in op.items)
+                reducing = reducing or op.limit is not None
+            elif isinstance(op, ir.Limit):
+                reducing = True
+            else:
+                return False
+        return not any(ir.expr_params(e)
+                       or (isinstance(e, ir.Lit) and isinstance(e.value, str))
+                       for e in exprs)
+
+    def _refilter(self, tbl: Table, deferred, b: dict) -> Table:
+        """Exact per-binding re-application of the union-relaxed pattern
+        predicates."""
+        self._params = b
+        if not deferred or tbl.nrows == 0:
+            return tbl
+        m = None
+        for p in deferred:
+            mp = self._eval(tbl, p).astype(bool)
+            m = mp if m is None else (m & mp)
+        return tbl.mask(m)
+
+    def _run_tails_loop(self, ops, tbl, bound, deferred, shared, pattern_s,
+                        pattern_transfers, pattern_kernels):
+        """The per-binding tail loop — the stacked path's fallback and
+        parity oracle."""
+        ts = self.ops.transfer_stats
+        ks = self.ops.kernel_stats
         results = []
         for b in bound:
             bind_mark = ts.mark()
+            kbind = ks.mark()
             tb0 = time.perf_counter()
-            self._params = b
             st = ExecStats(rows_produced=shared.rows_produced,
                            op_rows=list(shared.op_rows),
                            op_times=list(shared.op_times))
-            t = tbl
             ts.set_phase("tail")
             try:
-                if deferred and t.nrows:
-                    m = None
-                    for p in deferred:
-                        mp = self._eval(t, p).astype(bool)
-                        m = mp if m is None else (m & mp)
-                    t = t.mask(m)
+                t = self._refilter(tbl, deferred, b)
                 st.log("BATCH_BIND", t.nrows, time.perf_counter() - tb0)
                 for op in ops[1:]:
                     t = self._run_relational(t, op, st)
@@ -645,15 +811,167 @@ class Engine:
                 ent = st.transfers.setdefault(k, {"calls": 0, "elems": 0})
                 ent["calls"] += v["calls"]
                 ent["elems"] += v["elems"]
+            st.kernels = dict(pattern_kernels)
+            for k, v in ks.summary(kbind).items():
+                st.kernels[k] = st.kernels.get(k, 0) + v
             results.append((t, st))
         return results
+
+    def _run_tails_stacked(self, ops, tbl, bound, deferred, shared,
+                           pattern_s, pattern_transfers, pattern_kernels):
+        """One segmented tail for the whole binding batch: per-binding rows
+        are stacked with a ``__seg`` binding-id column, every relational
+        operator runs once over the stack (grouping keys on (seg, key);
+        order/limit per segment), and the stack crosses to the host in ONE
+        delivery before splitting per binding.  Like the shared pattern
+        phase, the stacked tail's wall time / op rows / kernel and transfer
+        windows are shared work and attributed to every binding's
+        ``ExecStats`` — they describe the batch, not one binding's slice."""
+        ts = self.ops.transfer_stats
+        ks = self.ops.kernel_stats
+        bind_mark = ts.mark()
+        kbind = ks.mark()
+        tb0 = time.perf_counter()
+        st = ExecStats(rows_produced=shared.rows_produced,
+                       op_rows=list(shared.op_rows),
+                       op_times=list(shared.op_times))
+        ts.set_phase("tail")
+        try:
+            parts, counts = [], []
+            for i, b in enumerate(bound):
+                t = self._refilter(tbl, deferred, b)
+                counts.append(t.nrows)
+                if t.nrows:
+                    parts.append(t.with_cols(
+                        {"__seg": self.ops.full(t.nrows, i)}))
+            if not parts:
+                raise RuntimeError("stacked tail: all bindings empty")
+            self._params = {}
+            stacked = Table.concat(parts)
+            st.log("BATCH_BIND", stacked.nrows, time.perf_counter() - tb0)
+            for op in ops[1:]:
+                stacked = self._run_relational_seg(stacked, op, len(bound),
+                                                   st)
+            ts.set_phase("deliver")
+            host = self.ops.to_host(stacked)
+        finally:
+            ts.set_phase("")
+        tail_s = time.perf_counter() - tb0
+        seg = np.asarray(host.cols.pop("__seg"))
+        window = ts.summary(bind_mark)
+        kwindow = ks.summary(kbind)
+        results = []
+        for i, c in enumerate(counts):
+            if c == 0:
+                # empty bindings keep the loop path's host-side semantics
+                # (e.g. the COUNT()-over-empty fix-up) at zero device cost
+                t = Table.empty()
+                bst = ExecStats(rows_produced=shared.rows_produced,
+                                op_rows=list(shared.op_rows),
+                                op_times=list(shared.op_times))
+                bst.log("BATCH_BIND", 0, 0.0)
+                for op in ops[1:]:
+                    t = self._run_relational(t, op, bst)
+                if t.ops is not None:
+                    t = self.ops.to_host(t)
+            else:
+                m = seg == i
+                t = Table({k: v[m] for k, v in host.cols.items()},
+                          int(m.sum()))
+                bst = ExecStats(rows_produced=st.rows_produced,
+                                op_rows=list(st.op_rows),
+                                op_times=list(st.op_times))
+            bst.wall_s = pattern_s + tail_s
+            bst.transfers = {k: dict(v) for k, v in
+                             pattern_transfers.items()}
+            for k, v in window.items():
+                ent = bst.transfers.setdefault(k, {"calls": 0, "elems": 0})
+                ent["calls"] += v["calls"]
+                ent["elems"] += v["elems"]
+            bst.kernels = dict(pattern_kernels)
+            for k, v in kwindow.items():
+                bst.kernels[k] = bst.kernels.get(k, 0) + v
+            results.append((t, bst))
+        return results
+
+    def _seg_head_mask(self, seg, nrows: int, k: int, limit: int):
+        """Boolean mask keeping each segment's first ``limit`` rows of a
+        segment-major table."""
+        starts = self.ops.searchsorted(seg, self.ops.arange(k))
+        pos = self.ops.arange(nrows) - self.ops.take(starts, seg)
+        return pos < limit
+
+    def _run_relational_seg(self, tbl: Table, op, k: int,
+                            stats: ExecStats) -> Table:
+        """Segment-aware twin of ``_run_relational``: one pass over the
+        ``__seg``-stacked batch table, row-identical per segment to running
+        the plain operator on that segment alone.  The stack is segment-
+        major throughout (every operator preserves or re-establishes it)."""
+        t0 = time.perf_counter()
+        seg = tbl.cols["__seg"]
+        if isinstance(op, ir.Select):
+            if tbl.nrows:
+                tbl = tbl.mask(self._eval(tbl, op.predicate).astype(bool))
+            stats.log("SELECT", tbl.nrows, self._tick(tbl, t0))
+            return tbl
+        if isinstance(op, ir.Project):
+            cols = {name: (self._eval(tbl, e) if tbl.nrows
+                           else self.ops.full(0, 0))
+                    for e, name in op.items}
+            cols["__seg"] = seg
+            out = self._table(cols, tbl.nrows)
+            if op.distinct and out.nrows:
+                key = self.ops.combine_keys(list(out.cols.values()))
+                out = out.take(self.ops.distinct_indices(key))
+            stats.log("PROJECT", out.nrows, self._tick(out, t0))
+            return out
+        if isinstance(op, ir.GroupBy):
+            if tbl.nrows == 0:   # empty-input fix-ups are per-binding
+                raise RuntimeError("stacked tail: stack emptied")
+            kcols = [self._eval(tbl, e) for e, _ in op.keys]
+            key = self.ops.combine_keys([seg] + kcols)
+            vals = {}
+            for a, name in op.aggs:
+                col = (self._eval(tbl, a.arg) if a.arg is not None
+                       else self.ops.full(tbl.nrows, 0))
+                vals[name] = (a.fn, col)
+            first, aggd = self.ops.group_reduce(key, vals)
+            cols = {name: self.ops.take(kc, first)
+                    for (e, name), kc in zip(op.keys, kcols)}
+            cols.update(aggd)
+            cols["__seg"] = self.ops.take(seg, first)
+            out = self._table(cols, int(first.shape[0]))
+            stats.log("GROUP", out.nrows, self._tick(out, t0))
+            return out
+        if isinstance(op, ir.OrderBy):
+            if tbl.nrows == 0:
+                return tbl
+            sort_cols = []
+            for e, asc in reversed(op.items):
+                name = None
+                if isinstance(e, ir.Var) and e.alias in tbl.cols:
+                    name = e.alias
+                col = tbl.cols[name] if name else self._eval_output(tbl, e)
+                sort_cols.append(col if asc else -col)
+            sort_cols.append(seg)            # last column = primary key
+            order = self.ops.lexsort(sort_cols)
+            out = tbl.take(order)
+            if op.limit is not None:
+                out = out.mask(self._seg_head_mask(out.cols["__seg"],
+                                                   out.nrows, k, op.limit))
+            return out
+        if isinstance(op, ir.Limit):
+            if tbl.nrows == 0:
+                return tbl
+            return tbl.mask(self._seg_head_mask(seg, tbl.nrows, k, op.n))
+        raise RuntimeError(f"stacked tail: unsupported operator {op!r}")
 
     def _run_relational(self, tbl: Table, op, stats: ExecStats) -> Table:
         t0 = time.perf_counter()
         if isinstance(op, ir.Select):
             if tbl.nrows:
                 tbl = tbl.mask(self._eval(tbl, op.predicate).astype(bool))
-            stats.log("SELECT", tbl.nrows, time.perf_counter() - t0)
+            stats.log("SELECT", tbl.nrows, self._tick(tbl, t0))
             return tbl
         if isinstance(op, ir.Project):
             cols = {name: (self._eval(tbl, e) if tbl.nrows
@@ -663,7 +981,7 @@ class Engine:
             if op.distinct and out.nrows:
                 key = self.ops.combine_keys(list(out.cols.values()))
                 out = out.take(self.ops.distinct_indices(key))
-            stats.log("PROJECT", out.nrows, time.perf_counter() - t0)
+            stats.log("PROJECT", out.nrows, self._tick(out, t0))
             return out
         if isinstance(op, ir.GroupBy):
             if tbl.nrows == 0:
@@ -687,7 +1005,7 @@ class Engine:
                     for (e, name), kc in zip(op.keys, kcols)}
             cols.update(aggd)
             out = self._table(cols, int(first.shape[0]))
-            stats.log("GROUP", out.nrows, time.perf_counter() - t0)
+            stats.log("GROUP", out.nrows, self._tick(out, t0))
             return out
         if isinstance(op, ir.OrderBy):
             if tbl.nrows == 0:

@@ -19,12 +19,18 @@ the residency tests assert zero ``d2h`` events outside the delivery phase.
   (``jaxops.lex_ranks``) — rank order matches the numpy backend's packed-key
   order, so group/join row order stays row-identical across backends.
 
+- ``chain_program`` -> ``FusedChain``: every ``ExpandChainNode`` compiles
+  into ONE jit program (``jaxops.build_fused_chain``) — a single device
+  dispatch per chain, with pow2 shape-bucketed capacities bounding the
+  compile cache and the ``KernelStats`` ledger counter-proving the
+  dispatch contract (DESIGN.md §8).
+
 Shapes must be static under jit.  The intersect path pads row blocks to
-powers of two (compile count logarithmic in table size); the fused
-expand/join/group/combine kernels jit on exact data-dependent shapes —
-their cache grows with distinct intermediate sizes, which recurring
-serving/benchmark shapes amortize (pow2 size-bucketing for these paths is
-a ROADMAP follow-up). Vertex ids, CSR offsets and property columns
+powers of two (compile count logarithmic in table size), and fused chains
+bucket their input and per-hop capacities the same way; the remaining
+compound tail kernels (join/group/combine) still jit on exact
+data-dependent shapes, which recurring serving/benchmark shapes amortize.
+Vertex ids, CSR offsets and property columns
 stage through int32 (guarded at construction); ``to_host`` widens back to
 int64 and canonicalizes the missing-property sentinel.  Control-plane
 scalar syncs (row counts, blow-up guards) are not data transfers and are
@@ -36,8 +42,10 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.pattern import BOTH
 from repro.core.physical import (ChainStep, ExpandChainNode, ExpandNode,
-                                 JoinNode, PlanNode)
+                                 JoinNode, PlanNode,
+                                 chain_fusable_predicates)
 from repro.core.physical_spec import (CostParams, OperatorSet, PhysicalSpec,
                                       register_spec)
 
@@ -60,6 +68,20 @@ _I32_MIN = np.iinfo(np.int32).min
 _I32_MAX = np.iinfo(np.int32).max
 _I64_MIN = np.iinfo(np.int64).min
 
+# fused-chain bucketing (DESIGN.md §8): frontier sizes and per-hop
+# capacities round up to powers of two with this floor, so the compile
+# cache is logarithmic in the size range a chain shape ever sees
+_CHAIN_MIN_BUCKET = 8
+_CHAIN_PROGRAMS_PER_SHAPE = 4     # bucketed jit programs kept per chain
+_CHAIN_SHAPES = 64                # chain handles kept per operator set
+# under CPU interpret, fusion pays off while chains are *dispatch-bound*;
+# once a hop's capacity grows past this, the pow2 padding + final-argsort
+# work of the fused program outweighs the saved launches and the per-hop
+# loop is faster (BENCH_fusion.json: ic5 at 2^17 wins fused 3.6x, ic6 at
+# 2^18 loses) — volume-bound chains stay on the loop.  On a real
+# accelerator one large launch still wins, so the cutoff is interpret-only.
+_CHAIN_VOLUME_CUTOFF = 1 << 17
+
 
 def _pow2(n: int, floor: int = 1) -> int:
     return max(floor, 1 << max(int(n) - 1, 0).bit_length())
@@ -69,10 +91,180 @@ def _pow2_floor(n: int) -> int:
     return 1 << (max(int(n), 1).bit_length() - 1)
 
 
+class FusedChain:
+    """One chain shape's fused-program handle (OperatorSet.chain_program).
+
+    Lifecycle: the engine's first execution of the chain runs the per-hop
+    loop and reports the observed per-hop expansion totals via
+    ``observe()``; that fixes the pow2 capacity schedule (``caps``), and
+    every later execution compiles/reuses ONE jit program per (caps,
+    input-bucket, IN-set buckets) key and dispatches the whole chain in a
+    single launch.  Capacities only grow (element-wise pow2 max), so the
+    compile count for one shape is bounded by the log of the largest size
+    it ever sees; an execution whose true totals overflow the current caps
+    returns ``None`` (the engine re-runs that one through the loop) and
+    regrows the schedule for the next execution."""
+
+    def __init__(self, ops: "JaxOperators", spec):
+        self.ops = ops
+        self.spec = spec
+        self.caps: tuple | None = None
+        self._progs: dict = {}    # (caps, in_bucket, value_buckets) -> entry
+
+    def ready(self) -> bool:
+        if self.caps is None:
+            return False
+        return not (self.ops._interpret
+                    and max(self.caps) > _CHAIN_VOLUME_CUTOFF)
+
+    def observe(self, sizes):
+        caps = tuple(_pow2(max(int(s), 1), _CHAIN_MIN_BUCKET) for s in sizes)
+        if self.caps is not None and len(self.caps) == len(caps):
+            caps = tuple(max(a, b) for a, b in zip(self.caps, caps))
+        self.caps = caps
+
+    # ------------------------------------------------------------ marshaling
+    def _build_desc(self, caps):
+        """Static program description for ``jaxops.build_fused_chain`` +
+        the ordered property-column requirements."""
+        spec = self.spec
+        vprops: list[str] = []
+        eprops: list[str] = []
+
+        def ref(r):
+            if r[0] == "vprop":
+                if r[2] not in vprops:
+                    vprops.append(r[2])
+                return ("vprop", r[1], vprops.index(r[2]))
+            if r[0] == "eprop":
+                if r[2] not in eprops:
+                    eprops.append(r[2])
+                return ("eprop", r[1], eprops.index(r[2]))
+            return r
+
+        s_map: dict[int, int] = {}
+        v_map: dict[int, int] = {}
+        for i, s in enumerate(spec.slots):
+            if s[0] == "scalar":
+                s_map[i] = len(s_map)
+            else:
+                v_map[i] = len(v_map)
+
+        def sig(p):
+            if p is None:
+                return None
+            if p[0] == "cmp":
+                return ("cmp", p[1], ref(p[2]), s_map[p[3]])
+            if p[0] == "in":
+                return ("in", ref(p[1]), v_map[p[2]])
+            return (p[0], tuple(sig(s) for s in p[1]))
+
+        hops = []
+        for k, h in enumerate(spec.hops):
+            orients = tuple((o.lo, o.hi, o.tidx, o.csr.pos is not None)
+                            for o in h.orients)
+            probes = []
+            for p in h.probes:
+                d_hi = self.ops._csr_max_degree(p.orient.csr)
+                d_max = _pow2(max(d_hi, 1))
+                # Pallas ELL tiles on compiled backends (and for tiny
+                # shapes under interpret, to keep the path tested on CPU);
+                # per-row bounded binary search otherwise
+                ell = (d_hi > 0 and d_hi <= MAX_ELL_DEGREE
+                       and (not self.ops._interpret
+                            or (d_max <= 64 and caps[k] <= 4096)))
+                block_rows = max(_MIN_BLOCK_ROWS,
+                                 min(caps[k],
+                                     _pow2_floor(_TILE_ELEMS // d_max)))
+                probes.append((p.from_alias, p.edge_alias, p.orient.lo,
+                               p.orient.hi, p.vlo, p.vhi,
+                               p.orient.tidx, p.orient.csr.pos is not None,
+                               "ell" if ell else "bsearch", d_max,
+                               block_rows))
+            hops.append((h.from_alias, h.alias, h.edge_alias, orients,
+                         tuple(probes), sig(h.pred_sig)))
+        return (spec.source, tuple(hops)), tuple(vprops), tuple(eprops)
+
+    def _csr_args(self, o):
+        indptr, indices, pos = self.ops._csr_dev(o.csr)
+        return (indptr, indices, pos if pos is not None else indices)
+
+    # -------------------------------------------------------------- dispatch
+    def run(self, src, nrows, scalars, value_lists, max_rows):
+        """One fused dispatch; returns ``(rows, cols, n)`` with exact-size
+        device columns, or ``None`` after a capacity overflow (caps regrow;
+        the caller falls back to the per-hop loop for this execution)."""
+        ops = self.ops
+        jnp = ops._jnp
+        n = int(nrows)
+        in_bucket = _pow2(n, _CHAIN_MIN_BUCKET)
+        vb = tuple(_pow2(max(len(v), 1)) for v in value_lists)
+        # a runtime-empty IN-set is a *static* program variant (matches
+        # nothing even under NOT/OR), part of the bucketed cache key
+        empties = tuple(i for i, v in enumerate(value_lists) if len(v) == 0)
+        key = (self.caps, in_bucket, vb, empties)
+        entry = self._progs.get(key)
+        if entry is not None:
+            self._progs[key] = self._progs.pop(key)   # LRU touch
+        else:
+            from repro.graphdb import jaxops
+            desc, vprops, eprops = self._build_desc(self.caps)
+            fn = ops._jax.jit(jaxops.build_fused_chain(
+                desc, self.caps, in_bucket, ops._interpret,
+                empty_values=empties))
+            entry = (fn, vprops, eprops)
+            if len(self._progs) >= _CHAIN_PROGRAMS_PER_SHAPE:
+                self._progs.pop(next(iter(self._progs)))
+            self._progs[key] = entry
+            ops.kernel_stats.record("compile", "fused_chain")
+        fn, vprops, eprops = entry
+        src = jnp.asarray(src)
+        if in_bucket > n:
+            src = jnp.pad(src, (0, in_bucket - n))
+        csrs = tuple((tuple(self._csr_args(o) for o in h.orients),
+                      tuple(self._csr_args(p.orient) for p in h.probes))
+                     for h in self.spec.hops)
+        vp = tuple(ops._vprop_dev(p) for p in vprops)
+        ep = tuple(ops._eprop_dev(p) for p in eprops)
+        scal = ops.asarray(np.asarray(list(scalars), dtype=np.int32))
+        vals = []
+        for v, b in zip(value_lists, vb):
+            a = np.asarray(v, dtype=np.int32)
+            if a.shape[0] == 0:
+                a = np.zeros(b, np.int32)          # dead arg (empty variant)
+            elif a.shape[0] < b:                   # duplicate-pad: same set
+                a = np.concatenate([a, np.full(b - a.shape[0], a[0],
+                                               np.int32)])
+            vals.append(ops.asarray(a))
+        out, n0, needed, needed_f = fn(src, n, csrs, vp, ep, scal,
+                                       tuple(vals))
+        ops.kernel_stats.record("dispatch", "fused_chain")
+        needed_h = np.asarray(needed)              # control-plane sync
+        nf = np.asarray(needed_f)
+        if nf.size and float(nf.max()) > _I32_MAX - 256:
+            raise RuntimeError(
+                f"intermediate blow-up: chain expansion would produce "
+                f"~{float(nf.max()):.3g} rows (beyond the int32 staging "
+                f"envelope)")
+        if (needed_h > max_rows).any():
+            raise RuntimeError(
+                f"intermediate blow-up: chain expansion would produce "
+                f"{int(needed_h.max())} rows > cap {max_rows}")
+        if (needed_h > np.asarray(self.caps)).any():
+            self.observe(needed_h.tolist())
+            return None
+        n_out = int(n0)
+        rows = out["__rows"][:n_out]
+        cols = {k: v[:n_out] for k, v in out.items()
+                if k not in ("__rows", self.spec.source)}
+        return rows, cols, n_out
+
+
 class JaxOperators(OperatorSet):
     """Device-resident operator set: columns are ``jax.Array`` int32."""
 
     name = "jax"
+    supports_chains = True
 
     def __init__(self, store):
         super().__init__(store)
@@ -92,6 +284,33 @@ class JaxOperators(OperatorSet):
                 f"{store.n_edges} edges")
         self._dev = {}    # id(csr) -> (indptr_dev, indices_dev, pos_dev|None)
         self._props = {}  # ("v"|"e", prop) -> device property column(s)
+        self._chains = {}     # (chain signature, csr ids) -> FusedChain
+        self._max_deg = {}    # id(csr) -> int global max degree
+
+    # ---------------------------------------------------------- fused chains
+    def chain_program(self, spec) -> FusedChain:
+        key = (spec.signature(),
+               tuple(id(o.csr) for h in spec.hops
+                     for o in list(h.orients) + [p.orient
+                                                 for p in h.probes]))
+        prog = self._chains.get(key)
+        if prog is not None:
+            self._chains[key] = self._chains.pop(key)   # LRU touch
+        else:
+            if len(self._chains) >= _CHAIN_SHAPES:
+                self._chains.pop(next(iter(self._chains)))
+            prog = self._chains[key] = FusedChain(self, spec)
+        return prog
+
+    def _csr_max_degree(self, csr) -> int:
+        d = self._max_deg.get(id(csr))
+        if d is None:
+            deg = csr.indptr[1:] - csr.indptr[:-1]
+            d = self._max_deg[id(csr)] = int(deg.max()) if deg.size else 0
+        return d
+
+    def block_ready(self, arrays):
+        return self._jax.block_until_ready(arrays)
 
     # ------------------------------------------------------------ transfers
     def asarray(self, values):
@@ -279,6 +498,7 @@ class JaxOperators(OperatorSet):
         if max_out is not None and total > max_out:
             raise RuntimeError(f"intermediate blow-up: expansion would "
                                f"produce {total} rows > cap {max_out}")
+        self.kernel_stats.record("dispatch", "expand", 1 + (total > 0))
         if total == 0:
             return z, z, z
         return self._jaxops.csr_expand_flat(
@@ -304,11 +524,13 @@ class JaxOperators(OperatorSet):
                 founds.append(jnp.zeros(e - s, bool))
                 fposs.append(jnp.zeros(e - s, jnp.int32))
             elif d_hi <= MAX_ELL_DEGREE:
+                self.kernel_stats.record("dispatch", "intersect", 2)
                 f, p = self._intersect_ell(indptr_d, indices_d, rows[s:e],
                                            tgt[s:e], d_hi)
                 founds.append(f)
                 fposs.append(p)
             else:
+                self.kernel_stats.record("dispatch", "intersect", 1)
                 f, p = self._intersect_bsearch(indptr_d, indices_d,
                                                rows[s:e], tgt[s:e])
                 founds.append(f)
@@ -360,6 +582,7 @@ class JaxOperators(OperatorSet):
         z = jnp.zeros(0, jnp.int32)
         if L == 0 or R == 0:
             return z, z
+        self.kernel_stats.record("dispatch", "join")
         lorder, rorder, lo, cnt, total0, approx0 = \
             self._jaxops.sortmerge_bounds(lk, rk)
         total = int(total0)                         # control-plane sync
@@ -372,6 +595,7 @@ class JaxOperators(OperatorSet):
                                f"{total} rows > cap {max_out}")
         if total == 0:
             return z, z
+        self.kernel_stats.record("dispatch", "join")
         return self._jaxops.sortmerge_pairs(lorder, rorder, lo, cnt,
                                             total=total)
 
@@ -379,6 +603,7 @@ class JaxOperators(OperatorSet):
         cols = [self._jnp.asarray(c) for c in cols]
         if len(cols) == 1:
             return cols[0]
+        self.kernel_stats.record("dispatch", "lex_ranks")
         return self._jaxops.lex_ranks(cols)
 
     def group_reduce(self, keys, values):
@@ -397,6 +622,7 @@ class JaxOperators(OperatorSet):
                if fn not in ("COUNT", "SUM", "AVG", "MIN", "MAX")]
         if bad:
             raise ValueError(f"unknown aggregate {bad[0]}")
+        self.kernel_stats.record("dispatch", "group", 2)
         order, _flags, flag_order, ng0 = self._jaxops.group_boundaries(keys)
         ng = int(ng0)                                # control-plane sync
         starts = flag_order[:ng]                     # ascending run starts
@@ -408,20 +634,31 @@ class JaxOperators(OperatorSet):
         return first, dict(zip(names, outs))
 
 
+def _hop_predicates(pattern, h: ExpandNode) -> list:
+    preds = list(pattern.vertices[h.new_alias].predicates or [])
+    for e in h.edges:
+        preds.extend(e.predicates or [])
+    return preds
+
+
 def fuse_expand_chain(node: PlanNode, ctx) -> PlanNode:
     """Post-CBO physical rewrite (the ``PhysicalSpec.physical_rules`` hook):
-    fuse runs of >= 2 consecutive single-edge expansions into one
-    ``ExpandChainNode``.
+    fuse runs of >= 2 consecutive expansions into one ``ExpandChainNode``.
 
     With device-resident tables (OperatorSet v2) every hop already stays on
-    device; chaining still pays because the thin frontier carries only the
-    hop columns through the per-hop gathers — the full binding table is
-    gathered once at the end.  Only predicate-free hops fuse (a filter must
-    run at its own hop to bound intermediates), and each hop's source alias
-    must be bound by the chain itself (or be the first hop's source), so
-    the thin frontier always carries it.  Fusion is packaging, not
-    planning: ``ExpandChainNode.unfused()`` recovers the exact pre-fusion
-    plan, and results are row-identical."""
+    device; chaining pays twice: the thin frontier carries only the hop
+    columns through the per-hop gathers, and the backend compiles the whole
+    chain into ONE jit program — a single device dispatch instead of one
+    per hop (DESIGN.md §8).  A hop fuses when its source alias is carried
+    by the chain (or anchors it) and its predicates are chain-fusable
+    (``core.physical.chain_fusable_predicates``: comparisons/IN-sets over
+    carried aliases against literals or parameters — the folded filter
+    still runs *at its own hop* inside the program, so intermediates stay
+    bounded); other predicates close the chain, keeping their hop on the
+    per-hop path.  A trailing expand-and-intersect whose probe edges read
+    carried aliases folds in as the chain's final WCOJ step.  Fusion is
+    packaging, not planning: ``ExpandChainNode.unfused()`` recovers the
+    exact pre-fusion plan, and results are row-identical."""
     pattern = ctx.pattern()
     fused = False
 
@@ -445,7 +682,8 @@ def fuse_expand_chain(node: PlanNode, ctx) -> PlanNode:
             if len(pending) >= 2:
                 fused = True
                 steps = [ChainStep(h.edges[0], frm, h.new_alias,
-                                   h.est_frequency, h.est_cost)
+                                   h.est_frequency, h.est_cost,
+                                   intersect_edges=tuple(h.edges[1:]))
                          for h, frm in pending]
                 out = ExpandChainNode(out, steps,
                                       est_frequency=steps[-1].est_frequency,
@@ -457,19 +695,41 @@ def fuse_expand_chain(node: PlanNode, ctx) -> PlanNode:
                                      est_cost=h.est_cost)
             pending.clear()
 
+        def preds_fusable(h, frm):
+            va = ({pending[0][1]} if pending else {frm})
+            va |= {x.new_alias for x, _ in pending} | {h.new_alias}
+            ea = {x.edges[0].alias for x, _ in pending} | \
+                 {e.alias for e in h.edges}
+            return chain_fusable_predicates(_hop_predicates(pattern, h),
+                                            va, ea)
+
         for h in run:
-            v = pattern.vertices[h.new_alias]
-            fusable = (len(h.edges) == 1 and not v.predicates
-                       and not h.edges[0].predicates)
             frm = h.edges[0].other(h.new_alias) if h.edges else None
-            if fusable and pending:
+            if len(h.edges) == 1:
+                fusable = preds_fusable(h, frm)
+                tail = False
+            else:
+                # expand-and-intersect: fold as the chain's final WCOJ step
+                # when every probe edge reads a carried alias and each is a
+                # pure filter (one orientation: directional, single triple)
+                carried = ({pending[0][1]} | {x.new_alias
+                                              for x, _ in pending}
+                           if pending else set())
+                tail = fusable = bool(pending) and frm in carried and all(
+                    e.other(h.new_alias) in carried
+                    and e.direction != BOTH and len(e.triples) == 1
+                    for e in h.edges[1:]) and preds_fusable(h, frm)
+            if fusable and not tail and pending:
                 carried = {pending[0][1]} | {x.new_alias for x, _ in pending}
                 if frm not in carried:
                     # source bound below the current run (e.g. by a join
                     # child): close this chain and anchor a new one here
                     flush()
+                    fusable = preds_fusable(h, frm)
             if fusable:
                 pending.append((h, frm))
+                if tail:                # the wcoj step ends its chain
+                    flush()
             else:
                 flush()
                 out = ExpandNode(out, h.new_alias, h.edges,

@@ -146,19 +146,62 @@ def group_boundaries(keys: jax.Array):
     return order, flags, flag_order, flags.sum()
 
 
+# ------------------------------------------------------------ double-single
+# Widened SUM/AVG accumulation (x64 is disabled): values are carried as
+# exact (hi, lo) float32 pairs — "double-single" arithmetic — and the
+# running prefix is built with a compensated TwoSum combiner under
+# ``lax.associative_scan`` (log-depth, vectorized; no scatter).  Group sums
+# are then boundary differences of the compensated prefix, so the error is
+# ~2^-48 *relative to the running total* instead of float32's 2^-24 (and
+# int32 SUM no longer wraps just because the running total across all
+# preceding groups passed 2^31 — only a group's own total exceeding the
+# int32 output envelope is unrepresentable).
+
+def _ds_from_col(col):
+    """Exact double-single representation of an int32/float32 column.
+    Integers split as ``v = (v >> 12 << 12) + (v & 0xFFF)``: a multiple of
+    4096 with <= 19 significant bits plus a 12-bit remainder — both sides
+    exact in float32 across the whole int32 range."""
+    if col.dtype.kind == "f":
+        return col.astype(jnp.float32), jnp.zeros_like(col, jnp.float32)
+    hi = ((col >> 12) << 12).astype(jnp.float32)
+    lo = (col & 0xFFF).astype(jnp.float32)
+    return hi, lo
+
+
+def _ds_add(a, b):
+    """Compensated (TwoSum + renormalize) double-single addition."""
+    ah, al = a
+    bh, bl = b
+    s = ah + bh
+    bv = s - ah
+    err = (ah - (s - bv)) + (bh - bv)
+    t = al + bl + err
+    hi = s + t
+    return hi, t - (hi - s)
+
+
+# largest float32 below 2^31: clamping the hi word here keeps the int32
+# reconstruction exact (the clamp shift folds into the low word)
+_F32_I32_EDGE = 2147483520.0
+
+
+def _ds_to_int32(hi, lo):
+    c = jnp.clip(hi, -_F32_I32_EDGE, _F32_I32_EDGE)
+    return c.astype(jnp.int32) + (lo + (hi - c)).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("fns",))
 def group_aggregate(order: jax.Array, starts: jax.Array, keys: jax.Array,
                     cols: tuple, fns: tuple):
     """Stage 2 of sorted-run grouping, one dispatch for every aggregate:
-    counts/sums via cumsum + boundary gathers, MIN/MAX via a secondary
+    counts via boundary differences, SUM/AVG via a compensated
+    double-single prefix scan (see ``_ds_add`` — exact while running totals
+    stay within ~2^48, vs the naive float32 cumsum that drifted once the
+    running total across *all* groups grew large), MIN/MAX via a secondary
     value sort within key runs.  ``fns`` is the static aggregate spec
-    aligned with ``cols``.
-
-    Staging envelope: SUM/AVG accumulate through an int32/float32 cumsum
-    (x64 is disabled), so running totals past 2^31 wrap where the numpy
-    backend's int64 path stays exact — a known limit, tracked in the
-    ROADMAP (widen to pairwise or i64-emulated accumulation before
-    hub-scale stores)."""
+    aligned with ``cols``.  SUM results are exact whenever the group's own
+    total fits the int32 output envelope."""
     n = order.shape[0]
     bounds = jnp.concatenate([starts, jnp.asarray([n], starts.dtype)])
     ends = bounds[1:] - 1
@@ -170,11 +213,15 @@ def group_aggregate(order: jax.Array, starts: jax.Array, keys: jax.Array,
             outs.append(counts)
             continue
         if fn in ("SUM", "AVG"):
-            cs = jnp.cumsum(jnp.take(col, order, axis=0, mode="clip"))
-            ce = jnp.take(cs, ends, axis=0, mode="clip")
-            sums = ce - jnp.concatenate([jnp.zeros(1, cs.dtype), ce[:-1]])
-            outs.append(sums.astype(jnp.float32) / jnp.maximum(counts, 1)
-                        if fn == "AVG" else sums.astype(jnp.int32))
+            sorted_col = jnp.take(col, order, axis=0, mode="clip")
+            ch, cl = jax.lax.associative_scan(_ds_add, _ds_from_col(sorted_col))
+            eh = jnp.take(ch, ends, axis=0, mode="clip")
+            el = jnp.take(cl, ends, axis=0, mode="clip")
+            ph = jnp.concatenate([jnp.zeros(1, jnp.float32), eh[:-1]])
+            pl = jnp.concatenate([jnp.zeros(1, jnp.float32), el[:-1]])
+            sh, sl = _ds_add((eh, el), (-ph, -pl))
+            outs.append((sh + sl) / jnp.maximum(counts, 1)
+                        if fn == "AVG" else _ds_to_int32(sh, sl))
             continue
         # MIN/MAX: secondary sort by value within each key run — minima at
         # run starts, maxima at run ends
@@ -206,6 +253,175 @@ def sortmerge_pairs(lorder: jax.Array, rorder: jax.Array, lo: jax.Array,
     lrep, rpos = range_flatten(lo, cnt, total)
     return (jnp.take(lorder, lrep, axis=0, mode="clip").astype(jnp.int32),
             jnp.take(rorder, rpos, axis=0, mode="clip").astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Fused chain programs (DESIGN.md §8)
+# --------------------------------------------------------------------------
+# One ExpandChainNode = ONE compiled program: every hop's degree lookup,
+# row-major flattening, neighbor/edge gathers, trailing WCOJ membership
+# probes, and folded predicate masks trace into a single jit dispatch.
+# Data-dependent sizes stay on device: each hop writes into a *static
+# capacity* (``caps[k]``, pow2-bucketed by the backend), rows beyond a
+# hop's true total are dead slots carried by a validity mask, and filtered
+# rows simply contribute zero degree to the next hop — so emission order is
+# exactly the per-hop loop's orientation-major, row-major order without any
+# mid-program compaction.  The program returns the padded columns (valid
+# rows compacted to the front by one stable argsort), the true row count,
+# and the per-hop totals the caller syncs once — for the blow-up guard and
+# to grow the capacity schedule when a hop overflowed.
+
+_CHAIN_CMP = {"=": lambda a, b: a == b, "<>": lambda a, b: a != b,
+              "<": lambda a, b: a < b, ">": lambda a, b: a > b,
+              "<=": lambda a, b: a <= b, ">=": lambda a, b: a >= b}
+
+_CHAIN_I32_MIN = -2147483648
+
+
+def build_fused_chain(desc: tuple, caps: tuple, in_bucket: int,
+                      interpret: bool, empty_values: tuple = ()):
+    """Build the traced whole-chain function for one static chain shape.
+
+    ``desc`` = ``(source_col, hops)``; each hop is ``(from_col, alias,
+    edge_alias, orients, probes, pred)`` with orients ``(lo, tidx,
+    has_pos)``, probes ``(from_col, edge_alias, lo, tidx, has_pos, mode,
+    d_max, block_rows)`` and ``pred`` a resolved predicate signature whose
+    column refs are ``("col", name) | ("vprop", name, idx) | ("eprop",
+    edge_alias, idx)`` and whose leaves read runtime slots.  The caller
+    jits the result; the jit cache is keyed by (desc, caps, in_bucket)
+    through the builder's own memoization, so recurring bucketed shapes
+    never re-trace."""
+    from repro.kernels.wcoj_intersect.ops import gather_rows, wcoj_intersect
+    source_col, hops = desc
+    i32 = jnp.int32
+
+    def eval_ref(ref, cols, vprops, eprops):
+        if ref[0] == "col":
+            return cols[ref[1]]
+        if ref[0] == "vprop":
+            _, name, pidx = ref
+            return jnp.take(vprops[pidx], cols[name], axis=0, mode="clip")
+        _, ealias, pidx = ref
+        offsets, flat = eprops[pidx]
+        if flat.shape[0] == 0:
+            return jnp.full(cols[f"{ealias}#p"].shape, _CHAIN_I32_MIN, i32)
+        base = jnp.take(offsets, cols[f"{ealias}#t"], axis=0, mode="clip")
+        return jnp.take(flat, base + cols[f"{ealias}#p"], axis=0,
+                        mode="clip")
+
+    def eval_pred(sig, cols, scalars, values, vprops, eprops):
+        kind = sig[0]
+        if kind == "cmp":
+            _, op, ref, slot = sig
+            return _CHAIN_CMP[op](eval_ref(ref, cols, vprops, eprops),
+                                  scalars[slot])
+        if kind == "in":
+            _, ref, vidx = sig
+            lhs = eval_ref(ref, cols, vprops, eprops)
+            if vidx in empty_values:     # static: empty IN-set matches nothing
+                return jnp.zeros(lhs.shape, bool)
+            return jnp.isin(lhs, values[vidx])
+        if kind == "not":
+            return ~eval_pred(sig[1][0], cols, scalars, values, vprops,
+                              eprops)
+        acc = eval_pred(sig[1][0], cols, scalars, values, vprops, eprops)
+        for s in sig[1][1:]:
+            m = eval_pred(s, cols, scalars, values, vprops, eprops)
+            acc = (acc & m) if kind == "and" else (acc | m)
+        return acc
+
+    def run(src, n0, csrs, vprops, eprops, scalars, values):
+        cols = {"__rows": jnp.arange(in_bucket, dtype=i32), source_col: src}
+        valid = jnp.arange(in_bucket, dtype=i32) < n0
+        needed, needed_f = [], []
+        for k, (from_col, alias, ealias, orients, probes, pred) in \
+                enumerate(hops):
+            cap = caps[k]
+            frm = cols[from_col]
+            degs, row_starts = [], []
+            for j, (lo, hi, tidx, has_pos) in enumerate(orients):
+                indptr = csrs[k][0][j][0]
+                local = jnp.clip(frm - lo, 0, indptr.shape[0] - 2)
+                s0 = jnp.take(indptr, local, axis=0, mode="clip")
+                d = jnp.take(indptr, local + 1, axis=0, mode="clip") - s0
+                # the keyed-type range membership mask: rows of a
+                # mixed-type frontier outside [lo, hi) expand to nothing,
+                # exactly like the per-hop loop's nonzero() subset
+                in_range = valid & (frm >= lo) & (frm < hi)
+                degs.append(jnp.where(in_range, d, 0))
+                row_starts.append(s0)
+            totals, offs = [], []
+            running = jnp.asarray(0, i32)
+            for d in degs:
+                offs.append(running)
+                totals.append(d.sum().astype(i32))
+                running = running + totals[-1]
+            needed.append(running)
+            needed_f.append(sum(d.astype(jnp.float32).sum() for d in degs))
+            pos_out = jnp.arange(cap, dtype=i32)
+            acc_r = jnp.zeros(cap, i32)
+            acc_nbr = jnp.zeros(cap, i32)
+            acc_tv = jnp.zeros(cap, i32)
+            acc_p = jnp.zeros(cap, i32)
+            for j, (lo, hi, tidx, has_pos) in enumerate(orients):
+                _, indices, pos = csrs[k][0][j]
+                in_j = (pos_out >= offs[j]) & (pos_out < offs[j] + totals[j])
+                lp = pos_out - offs[j]
+                cum = jnp.cumsum(degs[j])
+                r = jnp.searchsorted(cum, lp, side="right").astype(i32)
+                o = lp - jnp.take(cum - degs[j], r, axis=0, mode="clip")
+                flat = jnp.take(row_starts[j], r, axis=0, mode="clip") + o
+                nb = jnp.take(indices, flat, axis=0, mode="clip")
+                ep = (jnp.take(pos, flat, axis=0, mode="clip") if has_pos
+                      else flat)
+                acc_r = jnp.where(in_j, r, acc_r)
+                acc_nbr = jnp.where(in_j, nb, acc_nbr)
+                acc_tv = jnp.where(in_j, tidx, acc_tv)
+                acc_p = jnp.where(in_j, ep, acc_p)
+            cols = {nm: jnp.take(c, acc_r, axis=0, mode="clip")
+                    for nm, c in cols.items()}
+            cols[alias] = acc_nbr
+            cols[f"{ealias}#t"] = acc_tv
+            cols[f"{ealias}#p"] = acc_p
+            valid = pos_out < jnp.minimum(running, cap)
+            for pj, (p_from, p_ealias, lo, hi, vlo, vhi, tidx, has_pos,
+                     mode, d_max, block_rows) in enumerate(probes):
+                indptr, indices, pos = csrs[k][1][pj]
+                pfrm = cols[p_from]
+                local = jnp.clip(pfrm - lo, 0, indptr.shape[0] - 2)
+                # rows outside the keyed/value type ranges fail the probe
+                # (the per-hop loop's membership masks); -2 never matches
+                # a real id (>= 0) or an ELL pad (-1)
+                ok = (valid & (pfrm >= lo) & (pfrm < hi)
+                      & (cols[alias] >= vlo) & (cols[alias] < vhi))
+                tgt = jnp.where(ok, cols[alias], -2)
+                if mode == "ell":
+                    adj = gather_rows(indices, indptr, local, d_max)
+                    found, prow = wcoj_intersect(adj, tgt,
+                                                 block_rows=block_rows,
+                                                 interpret=interpret)
+                    fpos = (jnp.take(indptr, local, axis=0, mode="clip")
+                            + prow.astype(i32))
+                else:
+                    lo_b = jnp.take(indptr, local, axis=0, mode="clip")
+                    hi_b = jnp.take(indptr, local + 1, axis=0, mode="clip")
+                    found, fpos = bounded_binary_search(indices, lo_b, hi_b,
+                                                        tgt)
+                ep = (jnp.take(pos, fpos.astype(i32), axis=0, mode="clip")
+                      if has_pos else fpos.astype(i32))
+                cols[f"{p_ealias}#t"] = jnp.full(cap, tidx, i32)
+                cols[f"{p_ealias}#p"] = jnp.where(found, ep, 0)
+                valid = valid & found
+            if pred is not None:
+                valid = valid & eval_pred(pred, cols, scalars, values,
+                                          vprops, eprops)
+        order = jnp.argsort(~valid).astype(i32)   # stable: valid rows first
+        out = {nm: jnp.take(c, order, axis=0, mode="clip")
+               for nm, c in cols.items()}
+        return (out, valid.sum().astype(i32), jnp.stack(needed),
+                jnp.stack(needed_f))
+
+    return run
 
 
 @jax.jit

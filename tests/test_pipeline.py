@@ -468,11 +468,32 @@ def test_jax_fuses_expand_chain_and_stays_row_identical(gopt_small):
                    for name, _ in s_ab.op_rows)
 
 
-def test_chain_fusion_respects_predicates(gopt_small):
-    """A predicate pushed into an intermediate hop vertex must block the
-    fusion of that hop (the filter has to run at its own hop)."""
+def test_chain_fusion_folds_compilable_predicates(gopt_small):
+    """A chain-fusable predicate (comparison against a literal/parameter)
+    folds into the chain — the filter still runs at its own hop, inside
+    the fused program — and stays row-identical to the numpy path."""
     q = ("Match (f:FORUM)-[:CONTAINEROF]->(p:POST)"
-         "-[:HASCREATOR]->(per:PERSON) Where p.length >= 0 "
+         "-[:HASCREATOR]->(per:PERSON) Where p.length >= 40 "
+         "Return count(f) AS c")
+    opt = gopt_small.optimize(q, backend="jax", cbo=False)
+    assert any(isinstance(n, ExpandChainNode)
+               for n in plan_operators(opt.physical))
+    ref = gopt_small.optimize(q, backend="numpy", cbo=False)
+    t1, _ = gopt_small.execute(ref, backend="numpy")
+    t2, _ = gopt_small.execute(opt, backend="jax")
+    t3, s3 = gopt_small.execute(opt, backend="jax")   # fused dispatch run
+    _table_eq(t1, t2, sort=True)
+    _table_eq(t1, t3, sort=True)
+    assert (s3.kernels or {}).get("dispatch:fused_chain", 0) == 1
+
+
+def test_chain_fusion_respects_uncompilable_predicates(gopt_small):
+    """A predicate outside the fusable subset (column-to-column compare)
+    must still block the fusion of its hop — the filter has to run at its
+    own hop on the per-hop path."""
+    q = ("Match (f:FORUM)-[:CONTAINEROF]->(p:POST)"
+         "-[:HASCREATOR]->(per:PERSON) "
+         "Where p.creationDate >= p.length "
          "Return count(f) AS c")
     opt = gopt_small.optimize(q, backend="jax", cbo=False)
     assert not any(isinstance(n, ExpandChainNode)
