@@ -37,6 +37,13 @@ python scripts/residency_smoke.py
 echo "== fusion smoke =="
 python scripts/fusion_smoke.py
 
+# serving gate (DESIGN.md §9): a seeded 200-request stream through the
+# continuous-batching QueryServer must be row-identical to sequential
+# execution, keep p99 finite/bounded, and hold a warmed server's per-wave
+# fused-chain compile count at zero
+echo "== serve smoke =="
+python scripts/serve_smoke.py
+
 echo "== tier-1 tests =="
 # test_pipeline.py already ran (and failed fast) in the parity gate above
 python -m pytest -x -q --ignore=tests/test_pipeline.py

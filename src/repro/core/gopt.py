@@ -155,6 +155,10 @@ class PreparedQuery:
                 # back to the loop; other engine/XLA failures surface
                 if "intermediate blow-up" not in str(exc):
                     raise
+                out = [self.execute(b, **exec_kw) for b in bindings]
+                for _, st in out:
+                    st.fallback("batch_blowup")
+                return out
         return [self.execute(b, **exec_kw) for b in bindings]
 
     def explain(self, params: dict | None = None, analyze: bool = False,
@@ -327,6 +331,16 @@ class GOpt:
                 "max": self.plan_cache_size,
                 "epoch": self._stats_epoch}
 
+    def touch_plan(self, key: tuple) -> bool:
+        """Mark a cached plan recently-used (LRU touch) without resolving
+        it — the QueryServer's hotness loop keeps hot plans' cache entries
+        alive even while their requests ride stored ``PreparedQuery``
+        handles that never call ``prepare``."""
+        if key in self._plan_cache:
+            self._plan_cache.move_to_end(key)
+            return True
+        return False
+
     def bump_stats_epoch(self) -> int:
         """Invalidate every cached prepared plan (call after the store or
         its statistics change).  Outstanding ``PreparedQuery`` handles keep
@@ -440,6 +454,16 @@ class GOpt:
         declared = pq.declared_params()
         bound = {k: v for k, v in (params or {}).items() if k in declared}
         return pq.execute(bound, **exec_kw)
+
+    # ----------------------------------------------------------------- serve
+    def serve(self, **kw) -> "object":
+        """Continuous-batching query service over this GOpt (DESIGN.md §9):
+        a ``repro.graphdb.serve.QueryServer`` that coalesces submitted
+        ``(query, params)`` requests into ``execute_many`` waves per cached
+        plan.  Keyword arguments forward to the ``QueryServer``
+        constructor (``max_pending``, ``max_wave``, ``hot_plans``, ...)."""
+        from repro.graphdb.serve import QueryServer
+        return QueryServer(self, **kw)
 
     # ------------------------------------------------------------- baselines
     def estimator(self, use_glogue: bool = True,

@@ -182,11 +182,24 @@ class OperatorSet:
     # True on backends that implement chain_program (fused whole-chain
     # execution, DESIGN.md §8); the engine checks this before building specs
     supports_chains = False
+    # True on backends that trace/compile programs keyed by input shapes —
+    # consumers that can stabilize shapes (e.g. the QueryServer padding a
+    # wave's binding list to its pow2 bucket) should do so only here
+    compiled = False
 
     def __init__(self, store):
         self.store = store
         self.transfer_stats = TransferStats()
         self.kernel_stats = KernelStats()
+
+    def reset_ledgers(self):
+        """Clear both instrumentation ledgers.  Operator sets are shared
+        per (store, backend), so the event lists grow without bound under
+        sustained traffic and a consumer that forgets its ``mark()`` reads
+        a neighbor's events; the QueryServer scopes both ledgers to one
+        wave by resetting here between waves (DESIGN.md §9)."""
+        self.transfer_stats.reset()
+        self.kernel_stats.reset()
 
     # ------------------------------------------------- array primitives (v2)
     def asarray(self, values):
@@ -302,6 +315,14 @@ class OperatorSet:
         row-identical to the per-hop loop.  The base returns ``None``: no
         fused-chain capability."""
         return None
+
+    def pin_chain(self, spec, pinned: bool = True) -> bool:
+        """Protect (or release) the compiled program handle of one chain
+        shape from backend-side cache eviction — the QueryServer pins the
+        chains of its hottest plans so a burst of cold plans cannot evict
+        a hot plan's warmed programs.  Returns True when a handle was
+        (un)pinned; the base has no program cache and returns False."""
+        return False
 
     def block_ready(self, arrays):
         """Synchronization barrier for the sync-per-op PROFILE mode: block

@@ -478,6 +478,10 @@ class ExplainReport:
     # PROFILE SYNC mode: the engine blocked on the device after every
     # operator, so actual_time_s are true device times, not dispatch times
     sync: bool = False
+    # serving-ledger section (QueryServer.explain attaches the plan's
+    # ServeStats summary dict here): wave sizes/occupancy, queue delay vs
+    # execution time, fallback counts — rendered as "-- serve --"
+    serve: dict | None = None
 
     def render(self, diffs: bool = False) -> str:
         head = ("PROFILE SYNC" if self.analyze and self.sync
@@ -506,6 +510,9 @@ class ExplainReport:
                 lines.extend(f"  {name} rows={rows} "
                              f"time={secs * 1e3:.2f}ms"
                              for name, rows, secs in self.tail)
+        if self.serve:
+            lines.append("-- serve --")
+            lines.extend(f"  {k}: {v}" for k, v in self.serve.items())
         if self.result_rows is not None:
             wall = (f" in {self.exec_wall_s * 1e3:.2f}ms"
                     if self.exec_wall_s is not None else "")

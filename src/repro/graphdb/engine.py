@@ -131,11 +131,19 @@ class ExecStats:
     # compiled-program launch/compile summary ({"kind:label": n}) from the
     # backend's KernelStats ledger — e.g. {"dispatch:fused_chain": 1}
     kernels: dict | None = None
+    # degraded-path counters ({reason: n}): which fast path this execution
+    # fell off and why — e.g. {"stacked_tail_error": 1} when the segmented
+    # batch tail fell back to the per-binding loop, {"chain_param": 1} when
+    # a fused chain declined a slot value.  Empty on a fully fast-path run.
+    fallbacks: dict = dataclasses.field(default_factory=dict)
 
     def log(self, opname: str, rows: int, secs: float = 0.0):
         self.rows_produced += rows
         self.op_rows.append((opname, rows))
         self.op_times.append((opname, secs))
+
+    def fallback(self, reason: str, n: int = 1):
+        self.fallbacks[reason] = self.fallbacks.get(reason, 0) + n
 
 
 class Engine:
@@ -471,7 +479,10 @@ class Engine:
             try:
                 res = prog.run(tbl.cols[first], tbl.nrows,
                                *self._chain_slot_values(spec), self.max_rows)
+                if res is None:
+                    stats.fallback("chain_capacity")
             except ChainFallback:
+                stats.fallback("chain_param")
                 res = None
             except RuntimeError as exc:
                 self._annotate_blowup(exc, label)
@@ -730,12 +741,17 @@ class Engine:
         deferred, self._deferred = self._deferred, []
         env = (ops, tbl, bound, deferred, shared, pattern_s,
                pattern_transfers, pattern_kernels)
-        if len(bound) > 1 and self._tail_stackable(ops[1:]):
-            try:
-                return self._run_tails_stacked(*env)
-            except RuntimeError:
-                pass                       # fall back to the binding loop
-        return self._run_tails_loop(*env)
+        reason = None
+        if len(bound) > 1:
+            if self._tail_stackable(ops[1:]):
+                try:
+                    return self._run_tails_stacked(*env)
+                except RuntimeError:
+                    # fall back to the binding loop
+                    reason = "stacked_tail_error"
+            else:
+                reason = "tail_unstackable"
+        return self._run_tails_loop(*env, reason=reason)
 
     @staticmethod
     def _tail_stackable(rel_ops) -> bool:
@@ -782,9 +798,10 @@ class Engine:
         return tbl.mask(m)
 
     def _run_tails_loop(self, ops, tbl, bound, deferred, shared, pattern_s,
-                        pattern_transfers, pattern_kernels):
+                        pattern_transfers, pattern_kernels, reason=None):
         """The per-binding tail loop — the stacked path's fallback and
-        parity oracle."""
+        parity oracle.  ``reason`` (when the stacked pass was skipped or
+        failed) is recorded in each binding's ``ExecStats.fallbacks``."""
         ts = self.ops.transfer_stats
         ks = self.ops.kernel_stats
         results = []
@@ -794,7 +811,10 @@ class Engine:
             tb0 = time.perf_counter()
             st = ExecStats(rows_produced=shared.rows_produced,
                            op_rows=list(shared.op_rows),
-                           op_times=list(shared.op_times))
+                           op_times=list(shared.op_times),
+                           fallbacks=dict(shared.fallbacks))
+            if reason is not None:
+                st.fallback(reason)
             ts.set_phase("tail")
             try:
                 t = self._refilter(tbl, deferred, b)
@@ -834,7 +854,8 @@ class Engine:
         tb0 = time.perf_counter()
         st = ExecStats(rows_produced=shared.rows_produced,
                        op_rows=list(shared.op_rows),
-                       op_times=list(shared.op_times))
+                       op_times=list(shared.op_times),
+                       fallbacks=dict(shared.fallbacks))
         ts.set_phase("tail")
         try:
             parts, counts = [], []
@@ -868,7 +889,8 @@ class Engine:
                 t = Table.empty()
                 bst = ExecStats(rows_produced=shared.rows_produced,
                                 op_rows=list(shared.op_rows),
-                                op_times=list(shared.op_times))
+                                op_times=list(shared.op_times),
+                                fallbacks=dict(shared.fallbacks))
                 bst.log("BATCH_BIND", 0, 0.0)
                 for op in ops[1:]:
                     t = self._run_relational(t, op, bst)
@@ -880,7 +902,8 @@ class Engine:
                           int(m.sum()))
                 bst = ExecStats(rows_produced=st.rows_produced,
                                 op_rows=list(st.op_rows),
-                                op_times=list(st.op_times))
+                                op_times=list(st.op_times),
+                                fallbacks=dict(st.fallbacks))
             bst.wall_s = pattern_s + tail_s
             bst.transfers = {k: dict(v) for k, v in
                              pattern_transfers.items()}

@@ -26,10 +26,14 @@ the residency tests assert zero ``d2h`` events outside the delivery phase.
   dispatch contract (DESIGN.md §8).
 
 Shapes must be static under jit.  The intersect path pads row blocks to
-powers of two (compile count logarithmic in table size), and fused chains
-bucket their input and per-hop capacities the same way; the remaining
-compound tail kernels (join/group/combine) still jit on exact
-data-dependent shapes, which recurring serving/benchmark shapes amortize.
+powers of two (compile count logarithmic in table size), fused chains
+bucket their input and per-hop capacities the same way, and the compound
+tail kernels (join / group_reduce / combine_keys) pad their inputs to
+pow2 capacity buckets too (``jaxops.*_padded``; pad rows are ordered by
+an explicit pad flag, never a sentinel value) — so jittered serving-wave
+sizes re-hit one compiled program per bucket, counter-proved by the
+``compile:join`` / ``compile:group`` / ``compile:lex_ranks``
+``KernelStats`` events recorded on first sighting of each bucket key.
 Vertex ids, CSR offsets and property columns
 stage through int32 (guarded at construction); ``to_host`` widens back to
 int64 and canonicalizes the missing-property sentinel.  Control-plane
@@ -82,6 +86,11 @@ _CHAIN_SHAPES = 64                # chain handles kept per operator set
 # accelerator one large launch still wins, so the cutoff is interpret-only.
 _CHAIN_VOLUME_CUTOFF = 1 << 17
 
+# capacity-bucket floor for the compound relational-tail kernels (the tail
+# twin of _CHAIN_MIN_BUCKET): join/group/combine inputs pad up to pow2 so
+# the per-kernel compile count is logarithmic in the size range seen
+_TAIL_MIN_BUCKET = 16
+
 
 def _pow2(n: int, floor: int = 1) -> int:
     return max(floor, 1 << max(int(n) - 1, 0).bit_length())
@@ -110,6 +119,9 @@ class FusedChain:
         self.spec = spec
         self.caps: tuple | None = None
         self._progs: dict = {}    # (caps, in_bucket, value_buckets) -> entry
+        # pinned handles survive the operator set's chain-LRU eviction
+        # (QueryServer hotness protection, DESIGN.md §9)
+        self.pinned = False
 
     def ready(self) -> bool:
         if self.caps is None:
@@ -265,6 +277,7 @@ class JaxOperators(OperatorSet):
 
     name = "jax"
     supports_chains = True
+    compiled = True
 
     def __init__(self, store):
         super().__init__(store)
@@ -286,21 +299,51 @@ class JaxOperators(OperatorSet):
         self._props = {}  # ("v"|"e", prop) -> device property column(s)
         self._chains = {}     # (chain signature, csr ids) -> FusedChain
         self._max_deg = {}    # id(csr) -> int global max degree
+        # tail-kernel bucket keys already traced: mirrors the module-level
+        # jit caches so KernelStats can record one compile per bucket
+        self._tail_shapes: set = set()
 
     # ---------------------------------------------------------- fused chains
+    @staticmethod
+    def _chain_key(spec):
+        return (spec.signature(),
+                tuple(id(o.csr) for h in spec.hops
+                      for o in list(h.orients) + [p.orient
+                                                  for p in h.probes]))
+
     def chain_program(self, spec) -> FusedChain:
-        key = (spec.signature(),
-               tuple(id(o.csr) for h in spec.hops
-                     for o in list(h.orients) + [p.orient
-                                                 for p in h.probes]))
+        key = self._chain_key(spec)
         prog = self._chains.get(key)
         if prog is not None:
             self._chains[key] = self._chains.pop(key)   # LRU touch
         else:
             if len(self._chains) >= _CHAIN_SHAPES:
-                self._chains.pop(next(iter(self._chains)))
+                victim = next((k for k, v in self._chains.items()
+                               if not v.pinned), None)
+                # all pinned: evict the coldest anyway (capacity wins)
+                self._chains.pop(victim if victim is not None
+                                 else next(iter(self._chains)))
             prog = self._chains[key] = FusedChain(self, spec)
         return prog
+
+    def pin_chain(self, spec, pinned: bool = True) -> bool:
+        """Protect (or release) an existing chain handle — with its bucketed
+        compiled programs — from chain-LRU eviction.  Only handles that
+        already exist are pinned: a plan with no executed chain has nothing
+        worth protecting."""
+        prog = self._chains.get(self._chain_key(spec))
+        if prog is None:
+            return False
+        prog.pinned = bool(pinned)
+        return True
+
+    def _tail_compile(self, kind: str, key: tuple):
+        """Record ``compile:<kind>`` on the first sighting of a bucketed
+        tail-kernel shape key (mirroring the jit cache, which is keyed by
+        exactly these padded shapes)."""
+        if (kind, key) not in self._tail_shapes:
+            self._tail_shapes.add((kind, key))
+            self.kernel_stats.record("compile", kind)
 
     def _csr_max_degree(self, csr) -> int:
         d = self._max_deg.get(id(csr))
@@ -574,6 +617,12 @@ class JaxOperators(OperatorSet):
         return found_d[:R], pos_d[:R].astype(jnp.int32)
 
     # --------------------------------------------------------- relational tail
+    # The compound tail kernels pad their inputs to pow2 capacity buckets
+    # (pad rows ordered last by an explicit pad flag, exact results sliced
+    # to the true counts) so recurring jittered sizes — serving waves —
+    # re-hit one compiled program per bucket; _tail_compile counter-proves
+    # the plateau.
+
     def join(self, lkeys, rkeys, max_out=None):
         jnp = self._jnp
         lk = jnp.asarray(lkeys)
@@ -582,9 +631,17 @@ class JaxOperators(OperatorSet):
         z = jnp.zeros(0, jnp.int32)
         if L == 0 or R == 0:
             return z, z
+        Lp = _pow2(L, _TAIL_MIN_BUCKET)
+        Rp = _pow2(R, _TAIL_MIN_BUCKET)
+        self._tail_compile("join", (Lp, Rp))
         self.kernel_stats.record("dispatch", "join")
+        # INT32_MAX padding keeps the right sorted column non-decreasing
+        # for searchsorted; ordering itself rides the pad flag, so real
+        # keys equal to the pad value still join correctly
         lorder, rorder, lo, cnt, total0, approx0 = \
-            self._jaxops.sortmerge_bounds(lk, rk)
+            self._jaxops.sortmerge_bounds_padded(
+                self._pad(lk, Lp, _I32_MAX), self._pad(rk, Rp, _I32_MAX),
+                L, R)
         total = int(total0)                         # control-plane sync
         if float(approx0) > _I32_MAX - 256:         # int32 sum wrapped
             raise RuntimeError(f"intermediate blow-up: join would produce "
@@ -595,16 +652,27 @@ class JaxOperators(OperatorSet):
                                f"{total} rows > cap {max_out}")
         if total == 0:
             return z, z
+        Tp = _pow2(total, _TAIL_MIN_BUCKET)
+        self._tail_compile("join_pairs", (Lp, Tp))
         self.kernel_stats.record("dispatch", "join")
-        return self._jaxops.sortmerge_pairs(lorder, rorder, lo, cnt,
-                                            total=total)
+        lidx, ridx = self._jaxops.sortmerge_pairs(lorder, rorder, lo, cnt,
+                                                  total=Tp)
+        return lidx[:total], ridx[:total]
 
     def combine_keys(self, cols: list):
-        cols = [self._jnp.asarray(c) for c in cols]
+        jnp = self._jnp
+        cols = [jnp.asarray(c) for c in cols]
         if len(cols) == 1:
             return cols[0]
+        n = cols[0].shape[0]
+        if n == 0:
+            return jnp.zeros(0, jnp.int32)
+        np2 = _pow2(n, _TAIL_MIN_BUCKET)
+        self._tail_compile("lex_ranks", (np2, len(cols)))
         self.kernel_stats.record("dispatch", "lex_ranks")
-        return self._jaxops.lex_ranks(cols)
+        ranks = self._jaxops.lex_ranks_padded(
+            [self._pad(c, np2) for c in cols], n)
+        return ranks[:n]
 
     def group_reduce(self, keys, values):
         """Sorted-run grouping: one stable sort by key, then every
@@ -622,16 +690,27 @@ class JaxOperators(OperatorSet):
                if fn not in ("COUNT", "SUM", "AVG", "MIN", "MAX")]
         if bad:
             raise ValueError(f"unknown aggregate {bad[0]}")
+        np2 = _pow2(n, _TAIL_MIN_BUCKET)
+        self._tail_compile("group", (np2,))
         self.kernel_stats.record("dispatch", "group", 2)
-        order, _flags, flag_order, ng0 = self._jaxops.group_boundaries(keys)
+        keys_p = self._pad(keys, np2)
+        order, _vstart, flag_order, ng0 = \
+            self._jaxops.group_boundaries_padded(keys_p, n)
         ng = int(ng0)                                # control-plane sync
         starts = flag_order[:ng]                     # ascending run starts
+        gp = _pow2(ng, _TAIL_MIN_BUCKET)
         names = list(values)
-        first, outs = self._jaxops.group_aggregate(
-            order, starts, keys,
-            tuple(jnp.asarray(values[nm][1]) for nm in names),
-            tuple(values[nm][0] for nm in names))
-        return first, dict(zip(names, outs))
+        cols_p = tuple(self._pad(jnp.asarray(values[nm][1]), np2)
+                       for nm in names)
+        fns = tuple(values[nm][0] for nm in names)
+        self._tail_compile("group_agg",
+                           (np2, gp, fns,
+                            tuple(str(c.dtype) for c in cols_p)))
+        # starts pad with the terminal bound n: dummy trailing groups get
+        # count 0 and are sliced off below
+        first, outs = self._jaxops.group_aggregate_padded(
+            order, self._pad(starts, gp, n), keys_p, n, cols_p, fns)
+        return first[:ng], {nm: o[:ng] for nm, o in zip(names, outs)}
 
 
 def _hop_predicates(pattern, h: ExpandNode) -> list:

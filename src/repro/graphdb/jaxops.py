@@ -132,6 +132,39 @@ def lex_ranks(cols: list[jax.Array]) -> jax.Array:
     return jnp.take(gid_sorted, inv_order, axis=0, mode="clip")
 
 
+# ------------------------------------------------------- bucketed tail twins
+# The compound tail kernels below jit on *padded* pow2 shapes: the caller
+# pads its inputs up to a capacity bucket and passes the true row count
+# ``n_valid`` as a traced scalar, so jittered serving-wave sizes re-hit one
+# compiled program per bucket instead of re-tracing per exact shape.  Pad
+# rows are ordered strictly last by an explicit pad-flag used as the
+# *primary* lexsort key (never by a sentinel value, which real data could
+# collide with); every output is exact on ``[:n_valid]`` / ``[:n_groups]``
+# and the caller slices the pads away.
+
+
+def _pad_flag(n: int, n_valid) -> jax.Array:
+    return jnp.arange(n, dtype=jnp.int32) >= n_valid
+
+
+@jax.jit
+def lex_ranks_padded(cols: list[jax.Array], n_valid) -> jax.Array:
+    """``lex_ranks`` over pow2-padded columns: pad rows sort after every
+    valid tuple (pad-flag primary) and land on ranks >= the valid rank
+    count, so ``[:n_valid]`` of the result equals the unpadded ranks."""
+    n = cols[0].shape[0]
+    pf = _pad_flag(n, n_valid)
+    order = jnp.lexsort(tuple(reversed(cols)) + (pf,))
+    ne = jnp.zeros(n - 1, bool)
+    for c in list(cols) + [pf]:
+        s = jnp.take(c, order, axis=0, mode="clip")
+        ne = ne | (s[1:] != s[:-1])
+    gid_sorted = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(ne.astype(jnp.int32))])
+    inv_order = jnp.argsort(order)
+    return jnp.take(gid_sorted, inv_order, axis=0, mode="clip")
+
+
 @jax.jit
 def group_boundaries(keys: jax.Array):
     """Stage 1 of sorted-run grouping: stable sort by key and flag run
@@ -144,6 +177,24 @@ def group_boundaries(keys: jax.Array):
     flags = jnp.concatenate([jnp.ones(1, bool), sk[1:] != sk[:-1]])
     flag_order = jnp.argsort(~flags)
     return order, flags, flag_order, flags.sum()
+
+
+@jax.jit
+def group_boundaries_padded(keys: jax.Array, n_valid):
+    """``group_boundaries`` over a pow2-padded key column.  Pad rows sort
+    last (pad-flag primary, stable within each side) and never start a
+    counted run; ``n_groups`` counts valid runs only, and
+    ``flag_order[:n_groups]`` are their ascending sorted-domain starts."""
+    n = keys.shape[0]
+    pf = _pad_flag(n, n_valid)
+    order = jnp.lexsort((keys, pf))
+    sk = jnp.take(keys, order, axis=0, mode="clip")
+    spf = jnp.take(pf, order, axis=0, mode="clip")
+    flags = jnp.concatenate(
+        [jnp.ones(1, bool), (sk[1:] != sk[:-1]) | (spf[1:] != spf[:-1])])
+    vstart = flags & ~spf
+    flag_order = jnp.argsort(~vstart)
+    return order, vstart, flag_order, vstart.sum()
 
 
 # ------------------------------------------------------------ double-single
@@ -231,6 +282,47 @@ def group_aggregate(order: jax.Array, starts: jax.Array, keys: jax.Array,
     return first, tuple(outs)
 
 
+@functools.partial(jax.jit, static_argnames=("fns",))
+def group_aggregate_padded(order: jax.Array, starts: jax.Array,
+                           keys: jax.Array, n_valid, cols: tuple, fns: tuple):
+    """``group_aggregate`` over pow2-padded inputs: ``order``/``keys``/
+    ``cols`` are padded to one row bucket (pads sorted last in ``order``),
+    ``starts`` is padded to a pow2 group bucket with the terminal bound
+    ``n_valid`` — so dummy trailing groups have count 0 and every real
+    group's boundary math is untouched.  Outputs are exact on
+    ``[:n_groups]``; the caller slices the dummy groups away.  Keyed by
+    (row bucket, group bucket, fns)."""
+    n = order.shape[0]
+    pf = _pad_flag(n, n_valid)
+    nv = jnp.asarray(n_valid, starts.dtype)
+    bounds = jnp.concatenate([starts, nv[None]])
+    ends = bounds[1:] - 1
+    counts = (bounds[1:] - bounds[:-1]).astype(jnp.int32)
+    first = jnp.take(order, starts, axis=0, mode="clip")
+    outs = []
+    for fn, col in zip(fns, cols):
+        if fn == "COUNT":
+            outs.append(counts)
+            continue
+        if fn in ("SUM", "AVG"):
+            sorted_col = jnp.take(col, order, axis=0, mode="clip")
+            ch, cl = jax.lax.associative_scan(_ds_add, _ds_from_col(sorted_col))
+            eh = jnp.take(ch, ends, axis=0, mode="clip")
+            el = jnp.take(cl, ends, axis=0, mode="clip")
+            ph = jnp.concatenate([jnp.zeros(1, jnp.float32), eh[:-1]])
+            pl = jnp.concatenate([jnp.zeros(1, jnp.float32), el[:-1]])
+            sh, sl = _ds_add((eh, el), (-ph, -pl))
+            outs.append((sh + sl) / jnp.maximum(counts, 1)
+                        if fn == "AVG" else _ds_to_int32(sh, sl))
+            continue
+        # MIN/MAX secondary value sort: the pad flag stays primary so pad
+        # rows cannot land inside a valid key run regardless of value
+        sv = jnp.take(col, jnp.lexsort((col, keys, pf)), axis=0, mode="clip")
+        outs.append(jnp.take(sv, starts if fn == "MIN" else ends,
+                             axis=0, mode="clip"))
+    return first, tuple(outs)
+
+
 @jax.jit
 def sortmerge_bounds(lkeys: jax.Array, rkeys: jax.Array):
     """Stage 1 of the sort-merge join (one dispatch): stable sorts + the
@@ -246,10 +338,36 @@ def sortmerge_bounds(lkeys: jax.Array, rkeys: jax.Array):
     return lorder, rorder, lo, cnt, cnt.sum(), cnt.astype(jnp.float32).sum()
 
 
+@jax.jit
+def sortmerge_bounds_padded(lkeys: jax.Array, rkeys: jax.Array,
+                            n_left, n_right):
+    """``sortmerge_bounds`` over pow2-padded key columns.  The caller pads
+    both sides with INT32_MAX so the right sorted column stays globally
+    non-decreasing for ``searchsorted``; the pad flag (primary sort key)
+    pins pads to the tail even when real keys equal the pad value, the
+    match range is clamped to the valid right prefix, and pad left rows
+    contribute zero matches."""
+    L = lkeys.shape[0]
+    lpf = _pad_flag(L, n_left)
+    rpf = _pad_flag(rkeys.shape[0], n_right)
+    lorder = jnp.lexsort((lkeys, lpf))
+    rorder = jnp.lexsort((rkeys, rpf))
+    ls = jnp.take(lkeys, lorder, axis=0, mode="clip")
+    rs = jnp.take(rkeys, rorder, axis=0, mode="clip")
+    lo = jnp.minimum(jnp.searchsorted(rs, ls, side="left"), n_right)
+    hi = jnp.minimum(jnp.searchsorted(rs, ls, side="right"), n_right)
+    cnt = jnp.where(jnp.arange(L, dtype=jnp.int32) < n_left, hi - lo, 0)
+    # int32 total (exact below 2^31) + float32 estimate (wrap detector)
+    return lorder, rorder, lo, cnt, cnt.sum(), cnt.astype(jnp.float32).sum()
+
+
 @functools.partial(jax.jit, static_argnames=("total",))
 def sortmerge_pairs(lorder: jax.Array, rorder: jax.Array, lo: jax.Array,
                     cnt: jax.Array, total: int):
-    """Fused pair expansion of the sort-merge join (one dispatch)."""
+    """Fused pair expansion of the sort-merge join (one dispatch).
+
+    ``total`` may be a pow2 bucket >= the true pair count: positions past
+    ``sum(cnt)`` produce clipped garbage pairs the caller slices away."""
     lrep, rpos = range_flatten(lo, cnt, total)
     return (jnp.take(lorder, lrep, axis=0, mode="clip").astype(jnp.int32),
             jnp.take(rorder, rpos, axis=0, mode="clip").astype(jnp.int32))

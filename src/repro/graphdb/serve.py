@@ -1,0 +1,510 @@
+"""QueryServer — continuous batching for prepared graph queries (DESIGN.md §9).
+
+The graph twin of the LM slot scheduler in ``repro.serve.engine``: where the
+LM engine coalesces decode steps of whatever requests currently occupy its
+slot pool, the QueryServer coalesces *queries that share a cached plan* into
+``Engine.run_batch`` waves.  Requests are admitted into per-plan queues
+keyed by the canonical plan-cache key (``PreparedQuery.cache_key``); wave
+formation takes the queue with the oldest waiting request (FIFO fairness
+across plans) and coalesces up to ``max_wave`` requests, rounding the wave
+size down to a power of two while the queue still has a remainder — so a
+warmed server's recurring wave sizes land on the same pow2 capacity buckets
+the backend's compiled programs (fused chains, bucketed tail kernels) are
+keyed by, re-hitting the compile cache instead of thrashing it.
+
+Scheduling/latency mechanics:
+
+- **admission control** — the total pending queue is bounded
+  (``max_pending``); ``submit`` raises ``ServeOverload`` when full
+  (backpressure, counted in ``ServeStats.rejected``).  Parameter bindings
+  are validated at admission (host-side), so a malformed request is
+  rejected before it ever occupies a wave slot.
+- **deadline drop** — a request carrying ``deadline_s`` that expires before
+  its wave forms is dropped at formation time (``ServeStats.dropped``),
+  never dispatched.
+- **overlap** — with ``overlap=True`` waves execute on a single worker
+  thread: while wave *k* runs its device program, the main thread admits,
+  validates, and forms wave *k+1* (every backend/array call stays on the
+  one worker thread; host-side bookkeeping stays on the caller's thread).
+- **duplicate suppression** — identical bindings within a wave execute
+  once and fan the result out (hot-key traffic makes these common), so a
+  wave's device cost scales with its *distinct* bindings.
+- **hotness LRU** — per-plan hit counts keep the ``hot_plans`` hottest
+  plans pinned: their plan-cache entries are LRU-touched and their fused
+  chains' compiled programs are protected from backend cache eviction
+  (``OperatorSet.pin_chain``), so a burst of cold plans cannot evict a hot
+  plan's warmed programs.
+- **ledger scoping** — both backend instrumentation ledgers
+  (``TransferStats`` / ``KernelStats``) are reset at each wave start
+  (``OperatorSet.reset_ledgers``): one request's PROFILE window can never
+  report a neighboring wave's dispatches or transfers, and the ledgers
+  stay bounded under sustained traffic.
+
+``ServeStats`` is the serving ledger — wave sizes, batch occupancy, queue
+delay vs execution time, fallback-to-loop counts, per-wave compile counts —
+and surfaces through the existing EXPLAIN/PROFILE reporting:
+``QueryServer.explain(query)`` attaches the plan's serving summary to the
+``ExplainReport`` (rendered as a ``-- serve --`` section).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.core.errors import ParamError
+from repro.core.gopt import _freeze
+
+
+def _pow2(n: int, floor: int = 1) -> int:
+    return max(floor, 1 << max(int(n) - 1, 0).bit_length())
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (max(int(n), 1).bit_length() - 1)
+
+
+def _percentile(values, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) without numpy."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+    return float(s[idx])
+
+
+class ServeOverload(RuntimeError):
+    """Admission rejected: the bounded pending queue is full."""
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One admitted query request and its lifecycle record."""
+    rid: int
+    prepared: object                 # PreparedQuery
+    params: dict | None
+    arrival_s: float                 # perf_counter-domain arrival time
+    deadline_s: float | None = None  # absolute; expired requests are dropped
+    status: str = "pending"          # pending | done | dropped
+    table: object | None = None
+    stats: object | None = None      # ExecStats of this request's execution
+    start_s: float = 0.0             # wave execution start
+    finish_s: float = 0.0
+
+    @property
+    def queue_delay_s(self) -> float:
+        return max(0.0, self.start_s - self.arrival_s)
+
+    @property
+    def latency_s(self) -> float:
+        return max(0.0, self.finish_s - self.arrival_s)
+
+
+class ServeStats:
+    """The serving ledger: wave shapes, latency decomposition, drops."""
+
+    def __init__(self):
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0          # backpressure (ServeOverload)
+        self.dropped = 0           # deadline drops at wave formation
+        self.deduped = 0           # duplicate bindings suppressed in waves
+        self.waves = 0
+        self.wave_sizes: list[int] = []
+        # wave size / its pow2 capacity bucket — 1.0 means the wave exactly
+        # fills the bucket its compiled programs are keyed by
+        self.occupancy: list[float] = []
+        self.queue_delay_s: list[float] = []   # per completed request
+        self.exec_s: list[float] = []          # per wave
+        self.latency_s: list[float] = []       # per completed request
+        self.fallbacks: dict[str, int] = {}    # engine fallback counters
+        # per-wave compile-event counts from the (wave-scoped) KernelStats
+        # window — a warmed server holds these flat at zero
+        self.wave_compiles: list[int] = []
+        self.wave_chain_compiles: list[int] = []
+        self.per_plan: dict = {}               # cache_key -> summary dict
+
+    # ------------------------------------------------------------ recording
+    def record_wave(self, key, reqs, bucket: int, exec_s: float,
+                    kernels: dict | None):
+        self.waves += 1
+        self.wave_sizes.append(len(reqs))
+        self.occupancy.append(len(reqs) / max(bucket, 1))
+        self.exec_s.append(exec_s)
+        kernels = kernels or {}
+        compiles = sum(v for k, v in kernels.items()
+                       if k.startswith("compile:"))
+        self.wave_compiles.append(compiles)
+        self.wave_chain_compiles.append(kernels.get("compile:fused_chain", 0))
+        plan = self.per_plan.setdefault(key, {
+            "waves": 0, "requests": 0, "queue_delay_s": [], "exec_s": [],
+            "fallbacks": {}, "compiles": 0})
+        plan["waves"] += 1
+        plan["exec_s"].append(exec_s)
+        plan["compiles"] += compiles
+        for r in reqs:
+            self.completed += 1
+            self.queue_delay_s.append(r.queue_delay_s)
+            self.latency_s.append(r.latency_s)
+            plan["requests"] += 1
+            plan["queue_delay_s"].append(r.queue_delay_s)
+            for reason, n in (getattr(r.stats, "fallbacks", None) or {}).items():
+                self.fallbacks[reason] = self.fallbacks.get(reason, 0) + n
+                pf = plan["fallbacks"]
+                pf[reason] = pf.get(reason, 0) + n
+
+    # ------------------------------------------------------------- summaries
+    def summary(self) -> dict:
+        n_w = max(self.waves, 1)
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "dropped": self.dropped,
+            "deduped": self.deduped,
+            "waves": self.waves,
+            "mean_wave_size": sum(self.wave_sizes) / n_w,
+            "mean_occupancy": sum(self.occupancy) / n_w,
+            "queue_delay_p50_ms": _percentile(self.queue_delay_s, 50) * 1e3,
+            "queue_delay_p99_ms": _percentile(self.queue_delay_s, 99) * 1e3,
+            "exec_p50_ms": _percentile(self.exec_s, 50) * 1e3,
+            "latency_p50_ms": _percentile(self.latency_s, 50) * 1e3,
+            "latency_p99_ms": _percentile(self.latency_s, 99) * 1e3,
+            "fallbacks": dict(self.fallbacks),
+            "compiles_per_wave": list(self.wave_compiles),
+        }
+
+    def plan_summary(self, key) -> dict:
+        """Per-plan serving section for ``ExplainReport.serve``."""
+        plan = self.per_plan.get(key)
+        if plan is None:
+            return {"waves": 0, "requests": 0}
+        n_w = max(plan["waves"], 1)
+        return {
+            "waves": plan["waves"],
+            "requests": plan["requests"],
+            "mean_wave_size": round(plan["requests"] / n_w, 2),
+            "queue_delay_p50_ms":
+                round(_percentile(plan["queue_delay_s"], 50) * 1e3, 3),
+            "queue_delay_p99_ms":
+                round(_percentile(plan["queue_delay_s"], 99) * 1e3, 3),
+            "exec_p50_ms": round(_percentile(plan["exec_s"], 50) * 1e3, 3),
+            "fallbacks": dict(plan["fallbacks"]),
+            "compiles": plan["compiles"],
+        }
+
+    def render(self) -> str:
+        s = self.summary()
+        lines = [
+            f"ServeStats: {s['completed']}/{s['submitted']} completed over "
+            f"{s['waves']} waves "
+            f"(rejected={s['rejected']}, dropped={s['dropped']}, "
+            f"deduped={s['deduped']})",
+            f"  wave size mean={s['mean_wave_size']:.1f} "
+            f"occupancy={s['mean_occupancy']:.2f}",
+            f"  queue delay p50={s['queue_delay_p50_ms']:.2f}ms "
+            f"p99={s['queue_delay_p99_ms']:.2f}ms | "
+            f"exec p50={s['exec_p50_ms']:.2f}ms",
+            f"  latency p50={s['latency_p50_ms']:.2f}ms "
+            f"p99={s['latency_p99_ms']:.2f}ms",
+            f"  fallbacks={s['fallbacks'] or '{}'} "
+            f"compiles/wave={s['compiles_per_wave']}",
+        ]
+        return "\n".join(lines)
+
+    def __str__(self) -> str:
+        return self.render()
+
+
+class QueryServer:
+    """Continuous-batching service over a ``GOpt`` (DESIGN.md §9).
+
+    >>> srv = gopt.serve(max_wave=32)
+    >>> reqs = [srv.submit(Q, {"pid": p}) for p in people]
+    >>> srv.drain()
+    >>> reqs[0].table, reqs[0].stats
+    """
+
+    def __init__(self, gopt, backend=None, max_pending: int = 1024,
+                 max_wave: int = 64, hot_plans: int = 4,
+                 overlap: bool = True, bucket_waves: bool = True,
+                 pad_waves: bool | None = None, **exec_kw):
+        self.gopt = gopt
+        self.backend = backend
+        self.max_pending = max_pending
+        self.max_wave = max_wave
+        self.hot_plans = hot_plans
+        self.bucket_waves = bucket_waves
+        # None = auto: pad executed batches to pow2 on compiling backends
+        self.pad_waves = pad_waves
+        self.exec_kw = exec_kw
+        self.stats = ServeStats()
+        self._queues: "OrderedDict[tuple, deque[ServeRequest]]" = OrderedDict()
+        self._plans: dict = {}            # cache_key -> PreparedQuery
+        self._hot: dict = {}              # cache_key -> hit count
+        self._pinned: set = set()         # cache_keys currently pinned
+        self._pending = 0
+        self._rid = 0
+        self._inflight = None             # (future, key, reqs) under overlap
+        self._lock = threading.Lock()     # guards the gopt plan-cache LRU
+        self._pool = (ThreadPoolExecutor(max_workers=1,
+                                         thread_name_prefix="serve-wave")
+                      if overlap else None)
+
+    # ------------------------------------------------------------- admission
+    def submit(self, query, params: dict | None = None,
+               deadline_s: float | None = None,
+               arrival_s: float | None = None) -> ServeRequest:
+        """Admit one request: resolve the plan through the prepared-plan
+        cache, validate its bindings host-side, and enqueue it on its
+        plan's queue.  ``deadline_s`` is an absolute ``perf_counter``-domain
+        deadline; ``arrival_s`` backdates the arrival (open-loop benchmark
+        drivers use the scheduled arrival time so queueing delay is
+        measured against the arrival process, not the submit call).
+        Raises ``ServeOverload`` when the bounded queue is full and
+        ``ParamError`` on a malformed binding."""
+        if self._pending >= self.max_pending:
+            self.stats.rejected += 1
+            raise ServeOverload(
+                f"pending queue full ({self._pending}/{self.max_pending})")
+        if hasattr(query, "cache_key") and hasattr(query, "execute_many"):
+            pq = query
+        else:
+            with self._lock:
+                pq = self.gopt.prepare(query, backend=self.backend)
+        self._validate(pq, params)
+        now = time.perf_counter() if arrival_s is None else arrival_s
+        self._rid += 1
+        req = ServeRequest(self._rid, pq, params, now, deadline_s)
+        key = pq.cache_key
+        self._plans[key] = pq
+        self._queues.setdefault(key, deque()).append(req)
+        self._pending += 1
+        self.stats.submitted += 1
+        return req
+
+    @staticmethod
+    def _validate(pq, params: dict | None):
+        """Host-side admission validation (mirrors ``Engine.bind_params``'s
+        strict checks) so malformed requests never occupy a wave slot."""
+        referenced = pq.logical.referenced_params()
+        declared = referenced | set(pq.logical.params)
+        provided = set(params or {})
+        extra = provided - declared
+        if extra:
+            raise ParamError("binding names no declared parameter",
+                             extra=extra, declared=declared)
+        missing = referenced - set(pq.logical.params) - provided
+        if missing:
+            raise ParamError("unbound parameter(s)", missing=missing,
+                             declared=declared)
+
+    @property
+    def pending(self) -> int:
+        return self._pending
+
+    # -------------------------------------------------------- wave formation
+    def _form_wave(self, now: float):
+        """Pick the queue with the oldest waiting head (FIFO fairness
+        across plans), drop expired requests, and coalesce a wave.  The
+        wave size rounds down to a power of two while the queue holds a
+        remainder, so recurring wave sizes re-hit the backend's pow2-
+        bucketed compile caches; a draining wave takes everything left."""
+        while True:
+            key = None
+            oldest = None
+            for k, q in self._queues.items():
+                if q and (oldest is None or q[0].arrival_s < oldest):
+                    oldest = q[0].arrival_s
+                    key = k
+            if key is None:
+                return None
+            q = self._queues[key]
+            reqs: list[ServeRequest] = []
+            size = min(len(q), self.max_wave)
+            if self.bucket_waves and size < len(q):
+                size = _pow2_floor(size)
+            while q and len(reqs) < size:
+                r = q.popleft()
+                self._pending -= 1
+                if r.deadline_s is not None and now > r.deadline_s:
+                    r.status = "dropped"
+                    r.finish_s = now
+                    self.stats.dropped += 1
+                    continue
+                reqs.append(r)
+            if not q:
+                del self._queues[key]
+            if reqs:
+                return key, reqs
+            # the whole wave expired: re-form from the remaining queues
+
+    # -------------------------------------------------------------- execution
+    def _run_wave(self, key, reqs: list[ServeRequest]):
+        """Execute one wave (single worker thread under overlap: every
+        backend call for every wave runs here, serialized)."""
+        pq = reqs[0].prepared
+        ops = pq.spec.operators(self.gopt.store)
+        # wave-scoped ledgers: no bleed across waves, bounded growth
+        ops.reset_ledgers()
+        start = time.perf_counter()
+        for r in reqs:
+            r.start_s = start
+        # duplicate suppression: identical bindings in one wave execute
+        # once and fan the result out (hot-key traffic makes these common);
+        # duplicate requests share the execution's Table and ExecStats
+        uniq: dict = {}
+        bindings: list = []
+        slot = []
+        for r in reqs:
+            k = _freeze(r.params or {})
+            if k not in uniq:
+                uniq[k] = len(bindings)
+                bindings.append(r.params)
+            slot.append(uniq[k])
+        self.stats.deduped += len(reqs) - len(bindings)
+        if len(bindings) == 1:
+            results = [pq.execute(bindings[0], **self.exec_kw)]
+        else:
+            # on compiling backends, pad the executed binding list up to
+            # its pow2 bucket with a duplicate binding: the union pattern
+            # pass is unchanged (duplicate predicate values collapse), and
+            # every wave presents the stacked tail with one of a handful
+            # of stable batch shapes instead of a fresh trace per size
+            pad = (self.pad_waves if self.pad_waves is not None
+                   else ops.compiled)
+            if pad and self.bucket_waves:
+                bindings = bindings + \
+                    [bindings[0]] * (_pow2(len(bindings)) - len(bindings))
+            results = pq.execute_many(bindings, batch=True, **self.exec_kw)
+        finish = time.perf_counter()
+        for r, j in zip(reqs, slot):
+            r.table, r.stats = results[j]
+            r.status = "done"
+            r.finish_s = finish
+        self.stats.record_wave(key, reqs, _pow2(len(reqs)), finish - start,
+                               ops.kernel_stats.summary())
+        self._update_hotness(key, len(reqs))
+
+    # --------------------------------------------------------------- hotness
+    def _update_hotness(self, key, hits: int):
+        """Decayed per-plan hit counts drive two protections for the
+        hottest ``hot_plans`` plans: their plan-cache entries stay at the
+        LRU head, and their fused chains' compiled programs are pinned
+        against backend cache eviction."""
+        self._hot[key] = self._hot.get(key, 0) + hits
+        with self._lock:
+            self.gopt.touch_plan(key)
+        hot = set(sorted(self._hot, key=self._hot.get,
+                         reverse=True)[:self.hot_plans])
+        for k in list(self._pinned - hot):
+            if self._set_pinned(k, False):
+                self._pinned.discard(k)
+        for k in hot - self._pinned:
+            if self._set_pinned(k, True):
+                self._pinned.add(k)
+
+    def _set_pinned(self, key, pinned: bool) -> bool:
+        pq = self._plans.get(key)
+        if pq is None:
+            return False
+        ops = self.gopt.store.__dict__.get(
+            "_physical_ops_cache", {}).get(pq.spec.name)
+        if ops is None:
+            return False
+        any_pin = False
+        for spec in self._chain_specs(pq, ops):
+            any_pin = ops.pin_chain(spec, pinned) or any_pin
+        # claim the slot even when the plan has no (executed) chains, so
+        # the hot set is stable across waves
+        return True
+
+    def _chain_specs(self, pq, ops):
+        """Chain specs the engine memoized on this plan's chain nodes for
+        the current (store, backend) — the handles worth pinning."""
+        from repro.core.physical import ExpandChainNode, plan_children
+        want = (id(self.gopt.store), ops.name)
+        specs = []
+
+        def walk(n):
+            if n is None:
+                return
+            if isinstance(n, ExpandChainNode):
+                cached = n.__dict__.get("_chain_spec")
+                if cached is not None and cached[0] == want \
+                        and cached[1] is not None:
+                    specs.append(cached[1])
+            for c in plan_children(n):
+                walk(c)
+
+        walk(pq.physical)
+        return specs
+
+    # ------------------------------------------------------------ scheduling
+    def step(self) -> list[ServeRequest]:
+        """Form and dispatch ONE wave.  Under overlap the new wave starts
+        on the worker while this thread returns the *previous* wave's
+        completed requests (admission of the next wave overlaps device
+        execution of the current one); without overlap the wave runs
+        inline.  Returns ``[]`` when nothing completed this step."""
+        wave = self._form_wave(time.perf_counter())
+        if wave is None:
+            return self.flush()
+        key, reqs = wave
+        if self._pool is None:
+            self._run_wave(key, reqs)
+            return reqs
+        prev = self._inflight
+        self._inflight = (self._pool.submit(self._run_wave, key, reqs),
+                          key, reqs)
+        if prev is None:
+            return []
+        prev[0].result()
+        return prev[2]
+
+    def flush(self) -> list[ServeRequest]:
+        """Join the in-flight wave (if any) and return its requests."""
+        if self._inflight is None:
+            return []
+        fut, _key, reqs = self._inflight
+        self._inflight = None
+        fut.result()
+        return reqs
+
+    def drain(self, max_waves: int | None = None) -> list[ServeRequest]:
+        """Serve until every queued request completed (or ``max_waves``
+        waves dispatched); returns the completed requests in completion
+        order."""
+        done: list[ServeRequest] = []
+        waves = 0
+        while self._queues and (max_waves is None or waves < max_waves):
+            done.extend(self.step())
+            waves += 1
+        done.extend(self.flush())
+        return done
+
+    # --------------------------------------------------------------- explain
+    def explain(self, query, params: dict | None = None,
+                analyze: bool = False, **kw):
+        """EXPLAIN/PROFILE through the server: the standard
+        ``ExplainReport`` with this plan's serving ledger attached
+        (``report.serve``, rendered as a ``-- serve --`` section)."""
+        with self._lock:
+            pq = self.gopt.prepare(query, backend=self.backend)
+        report = pq.explain(params=params, analyze=analyze, **kw)
+        report.serve = self.stats.plan_summary(pq.cache_key)
+        return report
+
+    # ------------------------------------------------------------- lifecycle
+    def close(self):
+        self.flush()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "QueryServer":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
