@@ -693,6 +693,132 @@ def run_serve(args) -> dict:
     return out
 
 
+def run_sharded(args) -> dict:
+    """Sharded-backend scaling sweep (DESIGN.md §10): run the query set on
+    the mesh-partitioned backend at each ``--shards`` count on a
+    host-count-faked device mesh, checking row parity against numpy,
+    proving the exchange contract (collectives recorded, zero mid-plan
+    device->host transfers) and recording shard-count scaling curves to
+    ``BENCH_sharded.json``.  The store comes from the *streamed* generator
+    so ``--sf`` can exceed single-device generation sizes."""
+    # the faked mesh must exist before the first jax import
+    import os
+    if "jax" not in sys.modules:
+        os.environ.setdefault("XLA_FLAGS",
+                              "--xla_force_host_platform_device_count=8")
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import numpy as np
+
+    from benchmarks import queries as Q
+    from repro.core.gopt import GOpt
+    from repro.core.physical_spec import TransferStats
+    from repro.graphdb.ldbc import generate_ldbc_streamed
+
+    sets = {"ic": (Q.QIC, Q.QIC_PARAMS),
+            "cbo": (Q.QC, {}),
+            "rbo": (Q.QR, Q.QR_PARAMS),
+            "typeinf": (Q.QT, {})}
+    shard_counts = [int(s) for s in args.shards.split(",")]
+    t0 = time.time()
+    print(f"# building streamed LDBC-like store sf={args.sf} ...",
+          flush=True)
+    store = generate_ldbc_streamed(sf=args.sf, seed=args.seed)
+    gn = GOpt(store)                     # numpy parity reference
+    import jax
+    avail = len(jax.devices())
+    print(f"# store: V={store.n_vertices} E={store.n_edges} "
+          f"({time.time() - t0:.1f}s); mesh devices: {avail}; "
+          f"shard sweep: {shard_counts}", flush=True)
+    gs = {S: GOpt(store, backend="sharded", devices=S)
+          for S in shard_counts}
+
+    results = []
+    mismatches, leaks, silent = [], [], []
+    for setname in args.queries.split(","):
+        queries, params = sets[setname]
+        for name, text in queries.items():
+            p = params.get(name)
+            ref, _ = gn.run(text, params=p)
+            rec: dict = {"set": setname, "query": name, "rows": ref.nrows,
+                         "match": True, "shards": {}}
+            for S in shard_counts:
+                try:
+                    tbl, st = gs[S].run(text, params=p)   # warmup/compile
+                    best = float("inf")
+                    for _ in range(args.repeats):
+                        t1 = time.perf_counter()
+                        tbl, st = gs[S].run(text, params=p)
+                        best = min(best, time.perf_counter() - t1)
+                except (RuntimeError, MemoryError) as exc:
+                    rec["shards"][str(S)] = {"error": str(exc)[:120]}
+                    silent.append(f"{name}@{S}")
+                    continue
+                ex = st.exchanges or {}
+                srec = {
+                    "wall_s": best,
+                    "exchange_calls": sum(v["calls"] for v in ex.values()),
+                    "exchange_elems": sum(v["elems"] for v in ex.values()),
+                    "mid_plan_d2h": TransferStats.mid_plan_d2h(st.transfers),
+                }
+                rec["shards"][str(S)] = srec
+                if not _tables_equal(ref, tbl):
+                    rec["match"] = False
+                if srec["mid_plan_d2h"]:
+                    leaks.append(f"{name}@{S}")
+                # the exchange proof: a multi-shard mesh must move frontier
+                # data with recorded collectives, not silently on the host
+                if S > 1 and ref.nrows and srec["exchange_calls"] == 0:
+                    silent.append(f"{name}@{S}")
+            if not rec["match"]:
+                mismatches.append(name)
+            results.append(rec)
+            times = " ".join(
+                f"S{S}={rec['shards'][str(S)]['wall_s']:.4f}s"
+                if "wall_s" in rec["shards"].get(str(S), {}) else f"S{S}=ERR"
+                for S in shard_counts)
+            print(f"{setname}/{name}: {times} rows={rec['rows']} "
+                  f"match={rec['match']}", flush=True)
+
+    # shard-count scaling curve: geomean wall per shard count, relative to
+    # the 1-shard mesh (collective overhead on a faked CPU mesh shows up
+    # honestly as >1 walls; on a real interconnect this is the scaling
+    # curve the cost model's alpha_exchange would be calibrated from)
+    curve = {}
+    base = str(shard_counts[0])
+    for S in shard_counts:
+        ratios = [r["shards"][base]["wall_s"] / r["shards"][str(S)]["wall_s"]
+                  for r in results
+                  if "wall_s" in r["shards"].get(base, {})
+                  and "wall_s" in r["shards"].get(str(S), {})]
+        curve[str(S)] = (float(np.exp(np.mean(np.log(ratios))))
+                         if ratios else None)
+    out = {"sf": args.sf, "shard_counts": shard_counts,
+           "mesh_devices": avail, "repeats": args.repeats,
+           "results": results, "mismatches": mismatches,
+           "mid_plan_d2h_leaks": leaks, "silent_exchanges": silent,
+           "speedup_vs_first_geomean": curve}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"# wrote {args.out}; mismatches={mismatches or 'none'} "
+          f"leaks={leaks or 'none'} silent={silent or 'none'} "
+          f"curve={curve} ({time.time() - t0:.1f}s total)")
+    return out
+
+
+# ------------------------------------------------------------- CI registry
+
+# the smoke-scale CI invocations: scripts/ci.sh drives these through
+# --list-benches (name <TAB> argv) instead of hard-coding bench names
+CI_BENCHES = [
+    ("backends", "--backends --sf 0.05 --repeats 1 --queries ic "
+                 "--out BENCH_backends_smoke.json"),
+    ("prepared", "--prepared --sf 0.05 --repeats 1 "
+                 "--out BENCH_prepared_smoke.json"),
+    ("sharded", "--sharded --sf 0.05 --repeats 1 --queries ic "
+                "--shards 1,4 --out BENCH_sharded_smoke.json"),
+]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--backends", action="store_true",
@@ -707,6 +833,14 @@ def main():
     ap.add_argument("--serve", action="store_true",
                     help="compare continuous-batching QueryServer serving "
                          "vs sequential execution on an open-loop stream")
+    ap.add_argument("--sharded", action="store_true",
+                    help="sharded-backend shard-count scaling sweep on a "
+                         "host-count-faked device mesh")
+    ap.add_argument("--shards", default="1,2,4,8",
+                    help="--sharded: comma list of shard counts to sweep")
+    ap.add_argument("--list-benches", action="store_true",
+                    help="print the CI smoke-bench registry "
+                         "(name<TAB>argv per line) and exit")
     ap.add_argument("--requests", type=int, default=200,
                     help="--serve: number of open-loop requests")
     ap.add_argument("--rate", type=float, default=2000.0,
@@ -728,6 +862,15 @@ def main():
     ap.add_argument("files", nargs="*",
                     help="legacy mode: base/optimized dryrun result files")
     args = ap.parse_args()
+    if args.list_benches:
+        for name, argv in CI_BENCHES:
+            print(f"{name}\t{argv}")
+        sys.exit(0)
+    if args.sharded:
+        args.out = args.out or "BENCH_sharded.json"
+        out = run_sharded(args)
+        sys.exit(1 if out["mismatches"] or out["mid_plan_d2h_leaks"]
+                 or out["silent_exchanges"] else 0)
     if args.backends:
         args.out = args.out or "BENCH_backends.json"
         out = run_backends(args)

@@ -44,23 +44,28 @@ python scripts/fusion_smoke.py
 echo "== serve smoke =="
 python scripts/serve_smoke.py
 
+# sharded gate (DESIGN.md §10): a 2-hop Appendix-A query on a faked
+# 8-device mesh must pass operator conformance, match numpy row-for-row,
+# exchange frontiers with recorded on-device collectives (zero mid-plan
+# device->host transfers) and gather to the host exactly once at delivery
+echo "== sharded smoke =="
+python scripts/sharded_smoke.py
+
 echo "== tier-1 tests =="
 # test_pipeline.py already ran (and failed fast) in the parity gate above
 python -m pytest -x -q --ignore=tests/test_pipeline.py
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
-  # ~30s backend-parity smoke: tiny store, 1 repeat, LDBC IC set on both
-  # backends; exits nonzero on any numpy/jax result mismatch or on a
-  # query whose parity could not be verified (one backend errored).
-  echo "== backend-parity smoke bench =="
-  python -m benchmarks.perf_compare --backends --sf 0.05 --repeats 1 \
-      --queries ic --out BENCH_backends_smoke.json
-
-  # prepared-query smoke: prepare once, execute with 3 bindings on both
-  # backends, row-compare against the unprepared path; exits nonzero on
-  # any mismatch or on a recompile in the prepared path.
-  echo "== prepared-query smoke bench =="
-  python -m benchmarks.perf_compare --prepared --sf 0.05 --repeats 1 \
-      --out BENCH_prepared_smoke.json
+  # smoke-scale benches come from perf_compare's own CI registry
+  # (--list-benches: name<TAB>argv per line) so this script never
+  # hard-codes bench names or flags; each bench exits nonzero on its own
+  # parity/contract gates (backend row mismatches, prepared-path
+  # recompiles, sharded exchange leaks, ...)
+  python -m benchmarks.perf_compare --list-benches |
+  while IFS=$'\t' read -r name argv; do
+    echo "== $name smoke bench =="
+    # shellcheck disable=SC2086
+    python -m benchmarks.perf_compare $argv
+  done
 fi
 echo "== CI OK =="

@@ -41,6 +41,7 @@ class GraphOptimizer:
                  alpha_join: float | None = None,
                  alpha_intersect: float | None = None,
                  alpha_scan: float | None = None,
+                 alpha_exchange: float | None = None,
                  spec: str | PhysicalSpec | None = None):
         """Cost weights default to the active backend's ``CostParams``
         (``spec``, a PhysicalSpec or backend name); explicit ``alpha_*``
@@ -55,6 +56,8 @@ class GraphOptimizer:
         self.alpha_intersect = (cost.alpha_intersect if alpha_intersect is None
                                 else alpha_intersect)
         self.alpha_join = cost.alpha_join if alpha_join is None else alpha_join
+        self.alpha_exchange = (cost.alpha_exchange if alpha_exchange is None
+                               else alpha_exchange)
         self.stats = {"explored": 0, "pruned": 0}
 
     # ------------------------------------------------------------- interface
@@ -110,7 +113,8 @@ class GraphOptimizer:
                 node = JoinNode(
                     node, scan, (), est_frequency=fx,
                     est_cost=(node.est_cost + scan.est_cost + fx +
-                              self.alpha_join * (node.est_frequency + fs)))
+                              (self.alpha_join + self.alpha_exchange)
+                              * (node.est_frequency + fs)))
                 bound.add(nxt)
                 continue
             node = ExpandNode(node, best_alias, best_edges,
@@ -134,7 +138,10 @@ class GraphOptimizer:
             weighted += (self.alpha_expand if first
                          else self.alpha_intersect) * sigma
             first = False
-        op_cost = f_src * max(weighted, 1e-12)
+        # Eq.3 + the distributed backends' per-hop communication term:
+        # every frontier row is exchanged once per hop (degree resolution /
+        # probe routing), so communication scales with F(p_s), not sigma
+        op_cost = f_src * max(weighted, 1e-12) + self.alpha_exchange * f_src
         f_new = self.est.pattern_freq(pattern, bound | {new_alias})
         return op_cost, f_new
 
@@ -188,7 +195,9 @@ class GraphOptimizer:
                 c2 = self._search(pattern, s2)
                 if c1.plan is None or c2.plan is None:
                     continue
-                op_cost = self.alpha_join * (f1 + f2)
+                # both join sides' key columns are gather-exchanged on a
+                # distributed backend before the merge
+                op_cost = (self.alpha_join + self.alpha_exchange) * (f1 + f2)
                 cost = c1.cost + c2.cost + f_t + op_cost
                 if cost < best.cost:
                     best.plan = JoinNode(c1.plan, c2.plan,
@@ -255,7 +264,8 @@ def annotate_estimates(node: PlanNode, pattern: Pattern, est: CardEstimator,
             weighted += (cost.alpha_expand if first
                          else cost.alpha_intersect) * sigma
             first = False
-        return src_freq * max(weighted, 1e-12)
+        return (src_freq * max(weighted, 1e-12)
+                + cost.alpha_exchange * src_freq)
 
     def rec(n: PlanNode) -> float:
         if isinstance(n, ScanNode):
@@ -280,8 +290,10 @@ def annotate_estimates(node: PlanNode, pattern: Pattern, est: CardEstimator,
                 s2 = n.right.bound_aliases()
                 f = est.join_freq(pattern, s1, s2)
                 n.est_frequency = f
-                n.est_cost = lc + rc + f + cost.alpha_join * (
-                    n.left.est_frequency + n.right.est_frequency)
+                n.est_cost = (lc + rc + f
+                              + (cost.alpha_join + cost.alpha_exchange)
+                              * (n.left.est_frequency
+                                 + n.right.est_frequency))
             return n.est_cost
         if isinstance(n, ExpandChainNode):
             child_cost = rec(n.child)

@@ -185,12 +185,23 @@ class GOpt:
                  build_glogue: bool = True,
                  backend: str | PhysicalSpec = "numpy",
                  plan_cache_size: int = 256,
-                 pipeline: OptimizerPipeline | None = None):
+                 pipeline: OptimizerPipeline | None = None,
+                 devices: int | None = None):
         self.store = store
         self.schema = store.schema
         self.stats = Statistics(store)
         self.glogue = GLogue(store, k=glogue_k) if build_glogue else None
-        self.spec = get_spec(backend)
+        if devices is not None:
+            # shard-count pin: only meaningful on the sharded backend,
+            # where each count is its own registered spec ("sharded[8]")
+            # so plan caches and per-store operator caches never mix
+            # shard layouts
+            if backend != "sharded":
+                raise ValueError("devices= requires backend='sharded'")
+            from repro.graphdb.sharded_backend import sharded_spec
+            self.spec = sharded_spec(devices)
+        else:
+            self.spec = get_spec(backend)
         # the registered pass sequence driving optimize(); per-instance, so
         # registering a custom pass/rule never leaks across GOpt instances
         self.pipeline = pipeline or default_pipeline()

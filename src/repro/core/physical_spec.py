@@ -19,12 +19,16 @@ them so binding tables stay resident.  ``TransferStats`` is the
 instrumentation hook proving residency: backends record every host<->device
 data movement, tagged with the engine's current execution phase.
 
-Two backends ship in-tree (lazily imported on first ``get_spec``):
+Three backends ship in-tree (lazily imported on first ``get_spec``):
 
-- ``numpy`` — the host path over ``repro.graphdb.vecops``;
-- ``jax``   — device-resident columns, jit'd padded-block primitives, the
+- ``numpy``   — the host path over ``repro.graphdb.vecops``;
+- ``jax``     — device-resident columns, jit'd padded-block primitives, the
   ``wcoj_intersect`` Pallas kernel for membership probes, and a
-  segment-reduce / sort-merge relational tail.
+  segment-reduce / sort-merge relational tail;
+- ``sharded`` — the jax operators re-based on a device mesh: vertex-cut
+  partitioned CSR shards, collective (``shard_map``) expansion/probing,
+  and an ``ExchangeStats`` ledger recording every cross-device collective
+  (DESIGN.md §10).
 
 Adding a third backend: subclass ``OperatorSet``, build a ``PhysicalSpec``
 with a ``make_operators`` factory and a ``CostParams``, call
@@ -59,11 +63,18 @@ class CostParams:
     ``alpha_scan`` scales the Scan leaf cost F(v); ``alpha_expand`` the
     first-edge expansion term F(p_s)*sigma; ``alpha_intersect`` the extra
     WCOJ membership probes of an expand-and-intersect; ``alpha_join`` the
-    binary pattern-join term F(p_s1)+F(p_s2)."""
+    binary pattern-join term F(p_s1)+F(p_s2).  ``alpha_exchange`` is the
+    distributed backends' per-hop communication term: every expansion /
+    probe moves its frontier across the device mesh before any local work,
+    so its cost gains ``alpha_exchange * F(p_s)`` (and a join pays it on
+    both input sides) — a CBO on a sharded backend thereby trades
+    communication volume against intersection work.  Single-device
+    backends leave it 0.0."""
     alpha_scan: float = 1.0
     alpha_expand: float = 1.0
     alpha_intersect: float = 1.0
     alpha_join: float = 1.0
+    alpha_exchange: float = 0.0
 
 
 class TransferStats:
@@ -159,6 +170,57 @@ class KernelStats:
         return out
 
 
+class ExchangeStats:
+    """Cross-device collective ledger — the third sibling of
+    ``TransferStats`` / ``KernelStats``, owned by distributed backends.
+
+    A sharded backend records one event per collective it dispatches
+    (``kind`` in ``all_gather`` / ``psum`` / ``psum_scatter`` /
+    ``ppermute`` / ``all_to_all``) with the operator label and the number
+    of elements moved per device.  Collectives are *device-to-device* —
+    they never appear in ``TransferStats`` — so the pair of ledgers proves
+    the distributed residency contract: frontiers are exchanged across the
+    mesh on device (``ExchangeStats`` non-empty) while host transfers stay
+    confined to the delivery gather (``TransferStats.mid_plan_d2h == 0``).
+    The engine snapshots the ledger into ``ExecStats.exchanges`` per run;
+    single-device backends simply never record and the summary stays
+    empty."""
+
+    def __init__(self):
+        self.events: list[tuple[str, str, int]] = []   # (kind, label, elems)
+
+    def record(self, kind: str, label: str, elems: int):
+        self.events.append((kind, label, int(elems)))
+
+    def reset(self):
+        self.events.clear()
+
+    def mark(self) -> int:
+        return len(self.events)
+
+    def count(self, kind: str | None = None, label: str | None = None,
+              since: int = 0) -> int:
+        return sum(1 for k, lb, _ in self.events[since:]
+                   if (kind is None or k == kind)
+                   and (label is None or lb == label))
+
+    def elems(self, kind: str | None = None, label: str | None = None,
+              since: int = 0) -> int:
+        return sum(n for k, lb, n in self.events[since:]
+                   if (kind is None or k == kind)
+                   and (label is None or lb == label))
+
+    def summary(self, since: int = 0) -> dict[str, dict[str, int]]:
+        """``{"kind:label": {"calls": n, "elems": m}}`` over events recorded
+        after the ``mark()`` value ``since``."""
+        out: dict[str, dict[str, int]] = {}
+        for k, lb, n in self.events[since:]:
+            ent = out.setdefault(f"{k}:{lb}", {"calls": 0, "elems": 0})
+            ent["calls"] += 1
+            ent["elems"] += n
+        return out
+
+
 class OperatorSet:
     """Physical operator implementations bound to one ``GraphStore``.
 
@@ -191,15 +253,17 @@ class OperatorSet:
         self.store = store
         self.transfer_stats = TransferStats()
         self.kernel_stats = KernelStats()
+        self.exchange_stats = ExchangeStats()
 
     def reset_ledgers(self):
-        """Clear both instrumentation ledgers.  Operator sets are shared
+        """Clear the instrumentation ledgers.  Operator sets are shared
         per (store, backend), so the event lists grow without bound under
         sustained traffic and a consumer that forgets its ``mark()`` reads
-        a neighbor's events; the QueryServer scopes both ledgers to one
+        a neighbor's events; the QueryServer scopes the ledgers to one
         wave by resetting here between waves (DESIGN.md §9)."""
         self.transfer_stats.reset()
         self.kernel_stats.reset()
+        self.exchange_stats.reset()
 
     # ------------------------------------------------- array primitives (v2)
     def asarray(self, values):
@@ -368,6 +432,7 @@ _REGISTRY: dict[str, PhysicalSpec] = {}
 _LAZY_BACKENDS = {
     "numpy": "repro.graphdb.numpy_backend",
     "jax": "repro.graphdb.jax_backend",
+    "sharded": "repro.graphdb.sharded_backend",
 }
 
 

@@ -38,7 +38,8 @@ from repro.core.cbo import GraphOptimizer, annotate_estimates
 from repro.core.errors import PipelineError
 from repro.core.glogue import GLogue
 from repro.core.pattern import expand_path_edges
-from repro.core.physical import (ExpandChainNode, PlanNode,
+from repro.core.physical import (ExpandChainNode, ExpandNode, JoinNode,
+                                 PlanNode, ScanNode,
                                  default_left_deep_plan, describe_node,
                                  plan_children, plan_operators,
                                  plan_signature)
@@ -416,6 +417,106 @@ class PhysicalRulesPass(Pass):
         return changed
 
 
+class IntersectToJoinPass(Pass):
+    """Registrable post-CBO decomposition of expand-and-intersect into a
+    binary join (DESIGN.md §6.2): a multi-edge ``ExpandNode`` — expand
+    along its first edge, WCOJ-probe the rest — rewrites to
+    ``Join(Expand(child, e1), Expand(Scan(other(e_i)), e_i))`` on the
+    extra edges, joining on the shared ``(other_endpoint, new_alias)``
+    keys.  Until now this alternative existed only inside Algorithm 2's
+    search (steered by ``alpha_intersect`` vs ``alpha_join``); registering
+    this pass applies it to *any* physical plan, including the left-deep
+    fallback and ablation plans the CBO never searched.
+
+    ``force=True`` decomposes every multi-edge expand; the default
+    consults the backend's ``CostParams`` (including the distributed
+    backends' ``alpha_exchange`` term) and rewrites only where the join
+    side estimates cheaper.  Register it *before* ``physical_rules`` on
+    fusing backends — chain fusion may otherwise swallow the multi-edge
+    expand into a fused WCOJ tail first."""
+
+    name = "intersect_to_join"
+    phase = "post_physical"
+
+    def __init__(self, force: bool = False):
+        self.force = force
+
+    def skip(self, ctx):
+        if ctx.physical is None:
+            return "no physical plan"
+        return None
+
+    def run(self, ctx: PassContext) -> bool:
+        pattern = ctx.pattern()
+        est, cost = ctx.estimator, ctx.spec.cost
+        changed = False
+
+        def decompose(n):
+            nonlocal changed
+            e1, rest = n.edges[0], n.edges[1:]
+            f_left = (est.pattern_freq(
+                pattern, n.child.bound_aliases() | {n.new_alias})
+                if est is not None else n.est_frequency)
+            node = ExpandNode(n.child, n.new_alias, [e1],
+                              est_frequency=f_left,
+                              est_cost=n.child.est_cost + f_left)
+            for e in rest:
+                b = e.other(n.new_alias)
+                fb = est.vertex_freq(pattern, b) if est is not None else 0.0
+                scan = ScanNode(b, est_frequency=fb,
+                                est_cost=cost.alpha_scan * fb)
+                fr = (fb * est.expand_sigma(pattern, e, n.new_alias)
+                      if est is not None else 0.0)
+                right = ExpandNode(scan, n.new_alias, [e],
+                                   est_frequency=fr,
+                                   est_cost=scan.est_cost + fr)
+                keys = tuple(sorted({b, n.new_alias}))
+                node = JoinNode(node, right, keys,
+                                est_frequency=n.est_frequency,
+                                est_cost=(node.est_cost + right.est_cost
+                                          + n.est_frequency
+                                          + (cost.alpha_join
+                                             + cost.alpha_exchange)
+                                          * (node.est_frequency + fr)))
+            changed = True
+            return node
+
+        def join_cheaper(n) -> bool:
+            if self.force:
+                return True
+            if est is None:
+                return False
+            f_src = n.child.est_frequency
+            probe = f_src * sum(
+                cost.alpha_intersect * est.expand_sigma(pattern, e, None)
+                for e in n.edges[1:])
+            join_c = 0.0
+            for e in n.edges[1:]:
+                b = e.other(n.new_alias)
+                fb = est.vertex_freq(pattern, b)
+                fr = fb * est.expand_sigma(pattern, e, n.new_alias)
+                join_c += (cost.alpha_scan * fb + fr
+                           + (cost.alpha_join + cost.alpha_exchange)
+                           * (f_src + fr))
+            return join_c < probe
+
+        def rec(n):
+            if isinstance(n, ExpandNode):
+                n.child = rec(n.child)
+                if len(n.edges) > 1 and join_cheaper(n):
+                    return decompose(n)
+            elif isinstance(n, JoinNode):
+                n.left, n.right = rec(n.left), rec(n.right)
+            elif isinstance(n, ExpandChainNode):
+                # fused chains are a backend rewrite downstream of this
+                # one; their WCOJ tails stay fused
+                n.child = rec(n.child)
+            return n
+
+        ctx.physical = rec(ctx.physical)
+        return changed
+
+
 def default_pipeline() -> OptimizerPipeline:
     """The standard pass sequence: path unfolding, type inference, the
     heuristic-rule fixpoint group (paper rules + the extended registrable
@@ -482,6 +583,10 @@ class ExplainReport:
     # ServeStats summary dict here): wave sizes/occupancy, queue delay vs
     # execution time, fallback counts — rendered as "-- serve --"
     serve: dict | None = None
+    # device-to-device collective summary from ExecStats.exchanges
+    # ({"kind:label": {"calls": n, "elems": m}}), PROFILE on the sharded
+    # backend only — rendered as "-- exchanges --"
+    exchanges: dict | None = None
 
     def render(self, diffs: bool = False) -> str:
         head = ("PROFILE SYNC" if self.analyze and self.sync
@@ -510,6 +615,10 @@ class ExplainReport:
                 lines.extend(f"  {name} rows={rows} "
                              f"time={secs * 1e3:.2f}ms"
                              for name, rows, secs in self.tail)
+        if self.exchanges:
+            lines.append("-- exchanges --")
+            lines.extend(f"  {k}: calls={v['calls']} elems={v['elems']}"
+                         for k, v in self.exchanges.items())
         if self.serve:
             lines.append("-- serve --")
             lines.extend(f"  {k}: {v}" for k, v in self.serve.items())
@@ -606,4 +715,6 @@ def build_explain_report(opt, spec: PhysicalSpec, source: str | None = None,
         operators=operators, tail=tail,
         result_rows=table.nrows if table is not None else None,
         exec_wall_s=stats.wall_s if stats is not None else None,
-        sync=sync)
+        sync=sync,
+        exchanges=getattr(stats, "exchanges", None)
+        if stats is not None else None)

@@ -131,6 +131,10 @@ class ExecStats:
     # compiled-program launch/compile summary ({"kind:label": n}) from the
     # backend's KernelStats ledger — e.g. {"dispatch:fused_chain": 1}
     kernels: dict | None = None
+    # device-to-device collective summary ({"kind:label": {...}}) from the
+    # backend's ExchangeStats ledger — e.g. {"psum:expand_frontier": ...};
+    # None on single-device backends, which never exchange
+    exchanges: dict | None = None
     # degraded-path counters ({reason: n}): which fast path this execution
     # fell off and why — e.g. {"stacked_tail_error": 1} when the segmented
     # batch tail fell back to the per-binding loop, {"chain_param": 1} when
@@ -684,8 +688,10 @@ class Engine:
         ops, pattern, node = self._plan_head(plan, pattern_plan)
         ts = self.ops.transfer_stats
         ks = self.ops.kernel_stats
+        es = self.ops.exchange_stats
         mark = ts.mark()
         kmark = ks.mark()
+        emark = es.mark()
         ts.set_phase("pattern")
         try:
             tbl = self.exec_pattern(pattern, node, stats)
@@ -699,6 +705,7 @@ class Engine:
         stats.wall_s = time.perf_counter() - t0
         stats.transfers = ts.summary(mark)
         stats.kernels = ks.summary(kmark)
+        stats.exchanges = es.summary(emark) or None
         return tbl, stats
 
     def run_batch(self, plan: ir.LogicalPlan,
@@ -721,6 +728,7 @@ class Engine:
         ts = self.ops.transfer_stats
         mark = ts.mark()
         kmark = self.ops.kernel_stats.mark()
+        emark = self.ops.exchange_stats.mark()
         shared = ExecStats()
         t0 = time.perf_counter()
         self._batch = bound
@@ -738,9 +746,10 @@ class Engine:
         # i-1's tail/deliver events
         pattern_transfers = ts.summary(mark)
         pattern_kernels = self.ops.kernel_stats.summary(kmark)
+        pattern_exchanges = self.ops.exchange_stats.summary(emark)
         deferred, self._deferred = self._deferred, []
         env = (ops, tbl, bound, deferred, shared, pattern_s,
-               pattern_transfers, pattern_kernels)
+               pattern_transfers, pattern_kernels, pattern_exchanges)
         reason = None
         if len(bound) > 1:
             if self._tail_stackable(ops[1:]):
@@ -798,16 +807,19 @@ class Engine:
         return tbl.mask(m)
 
     def _run_tails_loop(self, ops, tbl, bound, deferred, shared, pattern_s,
-                        pattern_transfers, pattern_kernels, reason=None):
+                        pattern_transfers, pattern_kernels,
+                        pattern_exchanges, reason=None):
         """The per-binding tail loop — the stacked path's fallback and
         parity oracle.  ``reason`` (when the stacked pass was skipped or
         failed) is recorded in each binding's ``ExecStats.fallbacks``."""
         ts = self.ops.transfer_stats
         ks = self.ops.kernel_stats
+        es = self.ops.exchange_stats
         results = []
         for b in bound:
             bind_mark = ts.mark()
             kbind = ks.mark()
+            ebind = es.mark()
             tb0 = time.perf_counter()
             st = ExecStats(rows_produced=shared.rows_produced,
                            op_rows=list(shared.op_rows),
@@ -834,11 +846,18 @@ class Engine:
             st.kernels = dict(pattern_kernels)
             for k, v in ks.summary(kbind).items():
                 st.kernels[k] = st.kernels.get(k, 0) + v
+            exch = {k: dict(v) for k, v in pattern_exchanges.items()}
+            for k, v in es.summary(ebind).items():
+                ent = exch.setdefault(k, {"calls": 0, "elems": 0})
+                ent["calls"] += v["calls"]
+                ent["elems"] += v["elems"]
+            st.exchanges = exch or None
             results.append((t, st))
         return results
 
     def _run_tails_stacked(self, ops, tbl, bound, deferred, shared,
-                           pattern_s, pattern_transfers, pattern_kernels):
+                           pattern_s, pattern_transfers, pattern_kernels,
+                           pattern_exchanges):
         """One segmented tail for the whole binding batch: per-binding rows
         are stacked with a ``__seg`` binding-id column, every relational
         operator runs once over the stack (grouping keys on (seg, key);
@@ -849,8 +868,10 @@ class Engine:
         ``ExecStats`` — they describe the batch, not one binding's slice."""
         ts = self.ops.transfer_stats
         ks = self.ops.kernel_stats
+        es = self.ops.exchange_stats
         bind_mark = ts.mark()
         kbind = ks.mark()
+        ebind = es.mark()
         tb0 = time.perf_counter()
         st = ExecStats(rows_produced=shared.rows_produced,
                        op_rows=list(shared.op_rows),
@@ -881,6 +902,7 @@ class Engine:
         seg = np.asarray(host.cols.pop("__seg"))
         window = ts.summary(bind_mark)
         kwindow = ks.summary(kbind)
+        ewindow = es.summary(ebind)
         results = []
         for i, c in enumerate(counts):
             if c == 0:
@@ -914,6 +936,12 @@ class Engine:
             bst.kernels = dict(pattern_kernels)
             for k, v in kwindow.items():
                 bst.kernels[k] = bst.kernels.get(k, 0) + v
+            exch = {k: dict(v) for k, v in pattern_exchanges.items()}
+            for k, v in ewindow.items():
+                ent = exch.setdefault(k, {"calls": 0, "elems": 0})
+                ent["calls"] += v["calls"]
+                ent["elems"] += v["elems"]
+            bst.exchanges = exch or None
             results.append((t, bst))
         return results
 

@@ -407,13 +407,20 @@ class JaxOperators(OperatorSet):
     def nonzero(self, m):
         # argsort-shaped flatnonzero: jnp.nonzero's eager path rides heavy
         # python machinery per call.  A stable sort puts True positions
-        # first in original order; the count sync sizes the slice.
+        # first in original order; the count sync sizes the slice.  The
+        # mask pads to a pow2 capacity bucket (pads False, so they sort
+        # last among the dropped rows) — mask/compaction sites key compiles
+        # on the bucket, not the exact table length.
         jnp = self._jnp
         m = jnp.asarray(m)
+        n = m.shape[0]
         cnt = int(m.sum())                           # control-plane sync
         if cnt == 0:
             return jnp.zeros(0, jnp.int32)
-        order = jnp.argsort(~m)                      # stable
+        np2 = _pow2(n, _TAIL_MIN_BUCKET)
+        self._tail_compile("nonzero", (np2,))
+        self.kernel_stats.record("dispatch", "nonzero")
+        order = jnp.argsort(~self._pad(m, np2, False))   # stable
         return order[:cnt].astype(jnp.int32)
 
     def full(self, n: int, value):
@@ -436,14 +443,24 @@ class JaxOperators(OperatorSet):
         return self._jnp.lexsort(tuple(self._jnp.asarray(c) for c in cols))
 
     def distinct_indices(self, key):
+        # pow2-bucketed like the compound tail kernels: pad rows sort last
+        # by an explicit pad flag (any key value stays distinct-correct)
+        # and never start a counted run
         jnp = self._jnp
         key = jnp.asarray(key)
         n = key.shape[0]
         if n == 0:
             return jnp.zeros(0, jnp.int32)
-        order = jnp.argsort(key)                   # stable -> minimal index
-        sk = self.take(key, order)
-        flag = jnp.concatenate([jnp.ones(1, bool), sk[1:] != sk[:-1]])
+        np2 = _pow2(n, _TAIL_MIN_BUCKET)
+        self._tail_compile("distinct", (np2,))
+        self.kernel_stats.record("dispatch", "distinct")
+        pf = jnp.arange(np2) >= n
+        kp = self._pad(key, np2)
+        order = jnp.lexsort((kp, pf))              # stable -> minimal index
+        sk = self.take(kp, order)
+        spf = self.take(pf, order)
+        flag = jnp.concatenate([jnp.ones(1, bool),
+                                sk[1:] != sk[:-1]]) & ~spf
         return jnp.sort(self.take(order, self.nonzero(flag)))
 
     # ------------------------------------------------------ property gathers

@@ -312,3 +312,39 @@ def test_tail_kernel_compiles_plateau(serve_gopt):
     ops.group_reduce(keys, {"s": ("SUM", keys)})
     ops.join(keys, keys)
     assert sum(1 for k, _, _ in ks.events[m2:] if k == "compile") == 0
+
+
+# ------------------------------------------------------- mixed-backend serving
+
+def test_mixed_backend_servers_isolated_ledgers(serve_gopt):
+    """Two servers over DIFFERENT physical backends in one process: traffic
+    interleaves arbitrarily, yet each stays row-identical to sequential
+    execution and each plan's ledger window holds only its own backend's
+    events — a numpy wave never bleeds kernel events into the jax ledger."""
+    ref = {p: serve_gopt.prepare(SIMPLE, backend="numpy").execute(
+        {"pid": p})[0] for p in range(8)}
+
+    srv_np = serve_gopt.serve(backend="numpy", max_wave=4, overlap=False)
+    srv_jx = serve_gopt.serve(backend="jax", max_wave=4, overlap=False)
+    jax_ops = get_spec("jax").operators(serve_gopt.store)
+    np_results, jx_results = [], []
+    for p in range(8):                        # interleaved across servers
+        np_results.append(srv_np.submit(SIMPLE, {"pid": p}))
+        jx_results.append(srv_jx.submit(SIMPLE, {"pid": p}))
+    while srv_jx.pending:                     # jax server runs its waves
+        srv_jx.step()
+    m = jax_ops.kernel_stats.mark()
+    while srv_np.pending:                     # numpy waves: no jax events
+        srv_np.step()
+    assert jax_ops.kernel_stats.mark() == m
+    srv_np.close()
+    srv_jx.close()
+
+    for r in np_results + jx_results:
+        assert r.status == "done"
+        _table_eq(r.table, ref[r.params["pid"]], f"pid={r.params['pid']}")
+    # per-plan accounting stays per-server: each saw exactly its own waves
+    assert sum(p["waves"] for p in srv_np.stats.per_plan.values()) \
+        == srv_np.stats.waves > 0
+    assert sum(p["waves"] for p in srv_jx.stats.per_plan.values()) \
+        == srv_jx.stats.waves > 0
