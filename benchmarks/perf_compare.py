@@ -805,6 +805,118 @@ def run_sharded(args) -> dict:
     return out
 
 
+def run_mutations(args) -> dict:
+    """Mutation-under-serving sweep (DESIGN.md §11): read latency as a
+    function of delta-overlay occupancy, per backend, plus the cost of
+    compaction and the post-compaction recovery point.  Every rung gates
+    on row parity against a frozen deep-copy oracle of the mutable store
+    (MVCC snapshot semantics), and device backends gate on zero mid-plan
+    device->host transfers with a non-empty overlay — the delta views
+    must stay device-resident like the base CSR."""
+    import copy
+
+    import numpy as np
+
+    from repro.core.gopt import GOpt
+    from repro.core.physical_spec import TransferStats
+    from repro.graphdb.delta import MutableGraphStore
+    from repro.graphdb.ldbc import generate_ldbc
+
+    t0 = time.time()
+    print(f"# building LDBC-like store sf={args.sf} ...", flush=True)
+    base = generate_ldbc(sf=args.sf, seed=7)
+    print(f"# store: V={base.n_vertices} E={base.n_edges} "
+          f"({time.time() - t0:.1f}s)", flush=True)
+    queries = {
+        "knows1": ("MATCH (a:PERSON)-[:KNOWS]->(b:PERSON) "
+                   "RETURN a.id AS aid, b.id AS bid ORDER BY aid, bid"),
+        "knows2": ("MATCH (a:PERSON)-[:KNOWS]->(b:PERSON)-[:KNOWS]->"
+                   "(c:PERSON) RETURN a.id AS aid, count(c) AS n "
+                   "ORDER BY aid"),
+    }
+    ladder = [0, 16, 64, 256, 1024]
+    backends = args.backend_list.split(",")
+    kt = next(t for t in base.out_csr if t.label == "KNOWS")
+    off = base.v_offset["PERSON"]
+    n_person = base.v_count["PERSON"]
+
+    def rows(tbl):
+        ks = sorted(tbl.cols)
+        if tbl.nrows == 0:
+            return []
+        return sorted(zip(*[np.asarray(tbl.cols[k]).tolist() for k in ks]))
+
+    results, mismatches, leaks = [], [], []
+    for backend in backends:
+        ms = MutableGraphStore(base)
+        gopt = GOpt(ms, backend=backend)
+        rng = np.random.default_rng(args.seed)
+        rec = {"backend": backend, "rungs": [], "compaction": None}
+        pre_rows = None
+        for occ in ladder:
+            while ms.overlay_edge_slots < occ:
+                src = off + int(rng.integers(0, n_person))
+                gid = ms.insert_vertex(
+                    "PERSON", {"id": 700_000 + ms.overlay_edge_slots})
+                ms.insert_edge(kt, src, gid)
+            oracle = GOpt(copy.deepcopy(ms), backend="numpy")
+            rung = {"overlay_edges": int(ms.overlay_edge_slots),
+                    "queries": {}}
+            for name, text in queries.items():
+                gopt.run(text)                       # warm (compiles)
+                walls = []
+                for _ in range(max(args.repeats, 1)):
+                    w0 = time.perf_counter()
+                    tbl, stats = gopt.run(text)
+                    walls.append(time.perf_counter() - w0)
+                ref, _ = oracle.run(text)
+                ok = rows(tbl) == rows(ref)
+                if not ok:
+                    mismatches.append(f"{backend}/{name}@{occ}")
+                if backend != "numpy" and stats.transfers is not None:
+                    d2h = TransferStats.mid_plan_d2h(stats.transfers)
+                    if d2h:
+                        leaks.append(f"{backend}/{name}@{occ}:{d2h}")
+                rung["queries"][name] = {"wall_s": float(min(walls)),
+                                         "rows": int(tbl.nrows),
+                                         "match": ok}
+            rec["rungs"].append(rung)
+            print(f"#   {backend} occ={occ}: " +
+                  " ".join(f"{n}={q['wall_s'] * 1e3:.1f}ms"
+                           for n, q in rung["queries"].items()), flush=True)
+        pre_rows = {n: rows(gopt.run(t)[0]) for n, t in queries.items()}
+        w0 = time.perf_counter()
+        ev = gopt.compact()
+        compact_wall = time.perf_counter() - w0
+        post = {}
+        for name, text in queries.items():
+            gopt.run(text)                           # recompile vs new base
+            w0 = time.perf_counter()
+            tbl, _ = gopt.run(text)
+            post[name] = {"wall_s": float(time.perf_counter() - w0),
+                          "match": rows(tbl) == pre_rows[name]}
+            if not post[name]["match"]:
+                mismatches.append(f"{backend}/{name}@post-compaction")
+        rec["compaction"] = {"wall_s": float(compact_wall),
+                             "merged_edges": ev["merged_edges"],
+                             "ext_vertices": ev["ext_vertices"],
+                             "post": post}
+        print(f"#   {backend} compaction {compact_wall * 1e3:.0f}ms "
+              f"(merged {ev['merged_edges']} edges); recovery " +
+              " ".join(f"{n}={q['wall_s'] * 1e3:.1f}ms"
+                       for n, q in post.items()), flush=True)
+        results.append(rec)
+
+    out = {"sf": args.sf, "ladder": ladder, "backends": backends,
+           "repeats": args.repeats, "results": results,
+           "mismatches": mismatches, "mid_plan_d2h_leaks": leaks}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"# wrote {args.out}; mismatches={mismatches or 'none'} "
+          f"leaks={leaks or 'none'} ({time.time() - t0:.1f}s total)")
+    return out
+
+
 # ------------------------------------------------------------- CI registry
 
 # the smoke-scale CI invocations: scripts/ci.sh drives these through
@@ -816,6 +928,8 @@ CI_BENCHES = [
                  "--out BENCH_prepared_smoke.json"),
     ("sharded", "--sharded --sf 0.05 --repeats 1 --queries ic "
                 "--shards 1,4 --out BENCH_sharded_smoke.json"),
+    ("mutations", "--mutations --sf 0.05 --repeats 1 "
+                  "--out BENCH_mutations_smoke.json"),
 ]
 
 
@@ -836,6 +950,9 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="sharded-backend shard-count scaling sweep on a "
                          "host-count-faked device mesh")
+    ap.add_argument("--mutations", action="store_true",
+                    help="read-latency vs delta-overlay occupancy sweep "
+                         "with compaction cost and recovery")
     ap.add_argument("--shards", default="1,2,4,8",
                     help="--sharded: comma list of shard counts to sweep")
     ap.add_argument("--list-benches", action="store_true",
@@ -871,6 +988,10 @@ def main():
         out = run_sharded(args)
         sys.exit(1 if out["mismatches"] or out["mid_plan_d2h_leaks"]
                  or out["silent_exchanges"] else 0)
+    if args.mutations:
+        args.out = args.out or "BENCH_mutations.json"
+        out = run_mutations(args)
+        sys.exit(1 if out["mismatches"] or out["mid_plan_d2h_leaks"] else 0)
     if args.backends:
         args.out = args.out or "BENCH_backends.json"
         out = run_backends(args)

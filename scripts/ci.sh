@@ -51,6 +51,14 @@ python scripts/serve_smoke.py
 echo "== sharded smoke =="
 python scripts/sharded_smoke.py
 
+# mutation gate (DESIGN.md §11): an interleaved read/write stream through
+# the QueryServer must hold MVCC-lite snapshot isolation (every read
+# answers as-of its admission snapshot, frozen-copy oracle), keep the
+# delta overlay device-resident (zero mid-plan d2h), and compaction must
+# preserve row parity, bump the stats epoch and re-pin warmed plans
+echo "== mutation smoke =="
+python scripts/mutation_smoke.py
+
 echo "== tier-1 tests =="
 # test_pipeline.py already ran (and failed fast) in the parity gate above
 python -m pytest -x -q --ignore=tests/test_pipeline.py

@@ -29,7 +29,14 @@ class Statistics:
         return float(self.store.v_count[vtype])
 
     def triple_freq(self, triple) -> float:
-        return float(self.store.out_csr[triple].nnz)
+        f = float(self.store.out_csr[triple].nnz)
+        # delta-overlay occupancy (MutableGraphStore): net inserted-minus-
+        # tombstoned edges count toward the live frequency, so cached plans
+        # re-cost against real occupancy after a stats-epoch bump
+        counts = getattr(self.store, "delta_edge_counts", None)
+        if counts is not None:
+            f += float(counts().get(triple, 0))
+        return max(f, 0.0)
 
     def ndv(self, vtype: str, prop: str) -> float:
         key = (vtype, prop)

@@ -73,6 +73,25 @@ def _explain_prefix(query: str):
     return head, query[m.end():]
 
 
+def _collect_value_peeks(plan: ir.LogicalPlan,
+                         params: dict | None) -> tuple:
+    """Record what a freshly-compiled plan *assumed* about each
+    ``prop IN $param`` vertex predicate: the peeked set size when the param
+    was bound at prepare time, else None (the estimator's agnostic 0.5)."""
+    pattern = plan.pattern()
+    if pattern is None:
+        return ()
+    out = []
+    for v in pattern.vertices.values():
+        for p in v.predicates:
+            if (isinstance(p, ir.InSet) and isinstance(p.values, ir.Param)
+                    and isinstance(p.item, ir.Prop)):
+                bound = (params or {}).get(p.values.name)
+                out.append((p.values.name, p.item.name, frozenset(v.types),
+                            None if bound is None else len(bound)))
+    return tuple(out)
+
+
 def _freeze(v):
     """Hashable mirror of a binding value (lists/dicts/sets -> tuples)."""
     if isinstance(v, dict):
@@ -107,6 +126,11 @@ class PreparedQuery:
     cache_key: tuple
     source: str | None = None           # query text, when prepared from text
     executions: int = 0
+    # build-time value-peek assumptions, one per ``prop IN $param`` vertex
+    # predicate: (param name, prop, vertex types, peeked |S| or None) —
+    # checked at bind time by GOpt._maybe_replan (re-optimize on skew)
+    peeks: tuple = ()
+    opts: dict = dataclasses.field(default_factory=dict)
 
     @property
     def logical(self) -> ir.LogicalPlan:
@@ -125,6 +149,12 @@ class PreparedQuery:
 
     def execute(self, params: dict | None = None,
                 **exec_kw) -> tuple[Table, ExecStats]:
+        # binding-skew guard: a binding whose IN-set cardinality diverges
+        # >10x from the build-time peek invalidates this cache entry and
+        # re-plans once against the actual binding
+        pq = self.gopt._maybe_replan(self, params)
+        if pq is not self:
+            return pq.execute(params, **exec_kw)
         self.executions += 1
         return self.gopt.execute(self.opt, params=params,
                                  backend=exec_kw.pop("backend", self.spec),
@@ -175,9 +205,12 @@ class PreparedQuery:
             declared = self.declared_params()
             bound = {k: v for k, v in (params or {}).items() if k in declared}
             tbl, stats = self.execute(bound, sync_per_op=sync, **exec_kw)
+        delta_fn = getattr(self.gopt.store, "delta_info", None)
         return build_explain_report(self.opt, spec=self.spec,
                                     source=self.source, analyze=analyze,
-                                    table=tbl, stats=stats, sync=sync)
+                                    table=tbl, stats=stats, sync=sync,
+                                    delta=delta_fn() if callable(delta_fn)
+                                    else None)
 
 
 class GOpt:
@@ -211,6 +244,8 @@ class GOpt:
         self._plan_cache: collections.OrderedDict = collections.OrderedDict()
         self._text_cache: collections.OrderedDict = collections.OrderedDict()
         self._stats_epoch = 0
+        self._replans = 0            # binding-skew re-optimizations
+        self.replan_ratio = 10.0     # skew threshold (>10x selectivity drift)
 
     # ----------------------------------------------------------------- parse
     def parse(self, query: str, params: dict | None = None) -> ir.LogicalPlan:
@@ -306,7 +341,8 @@ class GOpt:
         pq = self._plan_cache.get(key)
         if pq is None:
             pq = PreparedQuery(self, self.optimize(plan, backend=spec, **opts),
-                               spec, key, source=text)
+                               spec, key, source=text, opts=dict(opts))
+            pq.peeks = _collect_value_peeks(pq.logical, params)
             # prepared queries are strict: drop value-param bindings so they
             # cannot silently act as execution defaults for a later caller —
             # every referenced param must be bound at execute().  Structural
@@ -340,7 +376,47 @@ class GOpt:
         return {"plans": len(self._plan_cache),
                 "texts": len(self._text_cache),
                 "max": self.plan_cache_size,
-                "epoch": self._stats_epoch}
+                "epoch": self._stats_epoch,
+                "replans": self._replans}
+
+    def _maybe_replan(self, pq: PreparedQuery,
+                      params: dict | None) -> PreparedQuery:
+        """Re-optimize-on-binding-skew: if a binding's IN-set selectivity
+        diverges more than ``replan_ratio`` from the cached plan's build-time
+        value-peek assumption, invalidate the entry and re-plan once against
+        the actual binding.  Returns the (possibly fresh) prepared query."""
+        if not pq.peeks or not params or pq.opt.invalid:
+            return pq
+        skewed = False
+        for name, prop, types, assumed in pq.peeks:
+            vals = params.get(name)
+            if vals is None:
+                continue
+            try:
+                actual = float(len(vals))
+            except TypeError:
+                continue
+            ndv = max(max((self.stats.ndv(t, prop) for t in types),
+                          default=1.0), 1.0)
+            act_sel = min(max(actual, 1.0) / ndv, 1.0)
+            asm_sel = (0.5 if assumed is None
+                       else min(max(float(assumed), 1.0) / ndv, 1.0))
+            if max(act_sel / asm_sel, asm_sel / act_sel) > self.replan_ratio:
+                skewed = True
+                break
+        if not skewed:
+            return pq
+        self._plan_cache.pop(pq.cache_key, None)
+        for tk in list(self._text_cache):
+            kept = [e for e in self._text_cache[tk] if e[1] is not pq]
+            if kept:
+                self._text_cache[tk][:] = kept
+            else:
+                del self._text_cache[tk]
+        self._replans += 1
+        source = pq.source if pq.source is not None else pq.logical
+        return self.prepare(source, params=dict(params), backend=pq.spec,
+                            **pq.opts)
 
     def touch_plan(self, key: tuple) -> bool:
         """Mark a cached plan recently-used (LRU touch) without resolving
@@ -402,7 +478,8 @@ class GOpt:
                 backend: str | PhysicalSpec | None = None,
                 params: dict | None = None,
                 chain_dispatch: bool = True,
-                sync_per_op: bool = False
+                sync_per_op: bool = False,
+                snapshot=None
                 ) -> tuple[Table, ExecStats]:
         if opt.invalid:
             return Table.empty(), ExecStats()
@@ -411,7 +488,8 @@ class GOpt:
         spec = self.spec if backend is None else get_spec(backend)
         eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
                      max_rows=max_rows, backend=spec,
-                     chain_dispatch=chain_dispatch, sync_per_op=sync_per_op)
+                     chain_dispatch=chain_dispatch, sync_per_op=sync_per_op,
+                     snapshot=snapshot)
         return eng.run(opt.logical, opt.physical, params=params)
 
     def execute_batch(self, opt: OptimizedQuery, bindings: list[dict | None],
@@ -419,7 +497,8 @@ class GOpt:
                       trim_fields: bool = True,
                       max_rows: int = 100_000_000,
                       backend: str | PhysicalSpec | None = None,
-                      chain_dispatch: bool = True
+                      chain_dispatch: bool = True,
+                      snapshot=None
                       ) -> list[tuple[Table, ExecStats]]:
         """Vectorized sibling of ``execute``: one engine pattern pass for a
         whole binding batch (``Engine.run_batch``), with the relational
@@ -431,7 +510,7 @@ class GOpt:
         spec = self.spec if backend is None else get_spec(backend)
         eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
                      max_rows=max_rows, backend=spec,
-                     chain_dispatch=chain_dispatch)
+                     chain_dispatch=chain_dispatch, snapshot=snapshot)
         return eng.run_batch(opt.logical, opt.physical, bindings)
 
     def run(self, query: str | ir.LogicalPlan, params: dict | None = None,
@@ -465,6 +544,44 @@ class GOpt:
         declared = pq.declared_params()
         bound = {k: v for k, v in (params or {}).items() if k in declared}
         return pq.execute(bound, **exec_kw)
+
+    # -------------------------------------------------------------- mutations
+    def _mutable(self):
+        if not callable(getattr(self.store, "insert_edge", None)):
+            raise TypeError(
+                "store is frozen; wrap it in repro.graphdb.delta."
+                "MutableGraphStore to accept mutations")
+        return self.store
+
+    def insert_vertex(self, vtype: str, props: dict | None = None) -> int:
+        return self._mutable().insert_vertex(vtype, props)
+
+    def delete_vertex(self, gid: int) -> bool:
+        return self._mutable().delete_vertex(gid)
+
+    def insert_edge(self, triple, src: int, dst: int,
+                    props: dict | None = None) -> bool:
+        return self._mutable().insert_edge(triple, src, dst, props)
+
+    def delete_edge(self, triple, src: int, dst: int) -> bool:
+        return self._mutable().delete_edge(triple, src, dst)
+
+    def snapshot(self):
+        """Pin the store's current MVCC snapshot (None on a frozen store)."""
+        snap_fn = getattr(self.store, "snapshot", None)
+        return snap_fn() if callable(snap_fn) else None
+
+    def delta_info(self) -> dict | None:
+        fn = getattr(self.store, "delta_info", None)
+        return fn() if callable(fn) else None
+
+    def compact(self, rebuild_glogue: bool = True) -> dict:
+        """Merge the delta overlay into a rebuilt base CSR, re-derive
+        statistics and bump the stats epoch (cached plans re-cost on next
+        prepare).  Returns the compaction event dict."""
+        event = self._mutable().compact()
+        self.refresh_stats(rebuild_glogue=rebuild_glogue)
+        return event
 
     # ----------------------------------------------------------------- serve
     def serve(self, **kw) -> "object":

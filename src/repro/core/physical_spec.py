@@ -54,7 +54,7 @@ REQUIRED_OPERATORS = ("scan", "expand", "intersect", "join",
 # binding-table columns never leave the device between plan steps
 ARRAY_PRIMITIVES = ("asarray", "to_host", "take", "mask", "concat", "nonzero",
                     "full", "arange", "isin", "searchsorted", "lexsort",
-                    "distinct_indices")
+                    "distinct_indices", "where")
 
 @dataclasses.dataclass(frozen=True)
 class CostParams:
@@ -320,6 +320,11 @@ class OperatorSet:
         ``take``-ing them preserves the original order of first sightings."""
         _, first = np.unique(key, return_index=True)
         return np.sort(first)
+
+    def where(self, cond, a, b):
+        """Elementwise select: ``a`` where ``cond`` else ``b`` (the delta
+        overlay's epos merge between base and overlay probe results)."""
+        return np.where(cond, a, b)
 
     # ------------------------------------------------------ property gathers
     def vertex_prop(self, ids, prop: str):
@@ -605,6 +610,11 @@ def run_operator_conformance(ops: OperatorSet) -> list[str]:
         check("distinct_indices",
               ops.distinct_indices(A(np.array([3, 1, 3, 7, 1], np.int64))),
               [0, 1, 3])
+        check("where",
+              ops.where(A(np.array([True, False, True])),
+                        A(np.array([1, 2, 3], np.int64)),
+                        A(np.array([7, 8, 9], np.int64))),
+              [1, 8, 3])
 
         check("scan", ops.scan(3, 7), [3, 4, 5, 6])
 
@@ -620,6 +630,11 @@ def run_operator_conformance(ops: OperatorSet) -> list[str]:
         found, ipos = ops.intersect(csr, A(np.array([0, 1, 1, 3], np.int64)),
                                     A(np.array([12, 8, 9, 12], np.int64)))
         check("intersect.found", found, [True, False, True, True])
+        # dtype is part of the contract: callers compose the found mask with
+        # ~/& and bitwise-not on an int 0/1 column corrupts silently
+        if np.asarray(H(found)).dtype != np.bool_:
+            fails.append("intersect.found: mask dtype "
+                         f"{np.asarray(H(found)).dtype}, want bool")
         fh = np.asarray(H(found)).astype(bool)
         check("intersect.edge_pos", np.asarray(H(ipos))[fh], [1, 4, 5])
 

@@ -587,6 +587,10 @@ class ExplainReport:
     # ({"kind:label": {"calls": n, "elems": m}}), PROFILE on the sharded
     # backend only — rendered as "-- exchanges --"
     exchanges: dict | None = None
+    # delta-overlay ledger (``MutableGraphStore.delta_info()``): overlay
+    # occupancy, snapshot spread, compaction events — rendered as
+    # "-- delta --" when the store is mutable
+    delta: dict | None = None
 
     def render(self, diffs: bool = False) -> str:
         head = ("PROFILE SYNC" if self.analyze and self.sync
@@ -622,6 +626,9 @@ class ExplainReport:
         if self.serve:
             lines.append("-- serve --")
             lines.extend(f"  {k}: {v}" for k, v in self.serve.items())
+        if self.delta:
+            lines.append("-- delta --")
+            lines.extend(f"  {k}: {v}" for k, v in self.delta.items())
         if self.result_rows is not None:
             wall = (f" in {self.exec_wall_s * 1e3:.2f}ms"
                     if self.exec_wall_s is not None else "")
@@ -654,7 +661,8 @@ def _tree_order(node: PlanNode) -> list[tuple[PlanNode, int]]:
 
 def build_explain_report(opt, spec: PhysicalSpec, source: str | None = None,
                          analyze: bool = False, table=None,
-                         stats=None, sync: bool = False) -> ExplainReport:
+                         stats=None, sync: bool = False,
+                         delta: dict | None = None) -> ExplainReport:
     """Assemble an ``ExplainReport`` from an ``OptimizedQuery`` (and, under
     ``analyze=True``, the execution's result table + ``ExecStats``).
 
@@ -668,7 +676,7 @@ def build_explain_report(opt, spec: PhysicalSpec, source: str | None = None,
             operators=[], tail=[],
             result_rows=0 if analyze else None,
             exec_wall_s=stats.wall_s if stats is not None else None,
-            sync=sync)
+            sync=sync, delta=delta)
 
     post = plan_operators(opt.physical)          # execution (post-)order
     actual_by_node: dict[int, int] = {}
@@ -717,4 +725,5 @@ def build_explain_report(opt, spec: PhysicalSpec, source: str | None = None,
         exec_wall_s=stats.wall_s if stats is not None else None,
         sync=sync,
         exchanges=getattr(stats, "exchanges", None)
-        if stats is not None else None)
+        if stats is not None else None,
+        delta=delta)

@@ -53,6 +53,7 @@ from repro.core.physical import (ExpandChainNode, ExpandNode, JoinNode,
 from repro.core.physical_spec import OperatorSet, PhysicalSpec, get_spec
 from repro.graphdb.chain import (ChainFallback, build_chain_spec,
                                  orientations)
+from repro.graphdb.delta import StaleSnapshotError
 from repro.graphdb.storage import GraphStore
 
 INT_MIN = np.iinfo(np.int64).min
@@ -154,7 +155,8 @@ class Engine:
     def __init__(self, store: GraphStore, fuse_expand: bool = True,
                  trim_fields: bool = True, max_rows: int = 100_000_000,
                  backend: str | PhysicalSpec | OperatorSet = "numpy",
-                 chain_dispatch: bool = True, sync_per_op: bool = False):
+                 chain_dispatch: bool = True, sync_per_op: bool = False,
+                 snapshot=None):
         self.store = store
         self.fuse_expand = fuse_expand
         self.trim_fields = trim_fields
@@ -169,6 +171,20 @@ class Engine:
         self._batch: list[dict] | None = None    # run_batch binding set
         self._deferred: list = []        # union-relaxed predicates to re-apply
         self._tindex = store.triple_index()
+        # MVCC-lite: pin a snapshot on mutable stores (delta.py) so this
+        # execution sees base ∪ inserts − tombstones as of construction,
+        # regardless of concurrent writers
+        if snapshot is None:
+            snap_fn = getattr(store, "snapshot", None)
+            if callable(snap_fn):
+                snapshot = snap_fn()
+        self.snapshot = snapshot
+        self._delta = snapshot is not None and not snapshot.is_empty
+        if self._delta and not fuse_expand:
+            raise ValueError(
+                "fuse_expand=False (the GET_VERTEX ablation) re-resolves "
+                "vertex types from base id ranges and is not supported with "
+                "a non-empty delta overlay")
         if isinstance(backend, OperatorSet):
             self.ops = backend
         else:
@@ -200,7 +216,20 @@ class Engine:
         parts = []
         for t in sorted(v.types):
             lo, hi = self.store.type_range(t)
-            parts.append(self.ops.scan(lo, hi))
+            ids = self.ops.scan(lo, hi)
+            if self._delta:
+                # snapshot view: drop tombstoned ids, append extension ids
+                # (new vertices live above the base id space, per type)
+                dead = self.snapshot.dead_for(t)
+                if dead is not None:
+                    keep = ~self.ops.isin(ids, list(dead))
+                    ids = self.ops.take(ids, self.ops.nonzero(keep))
+                ext = self.snapshot.ext.get(t)
+                if ext is not None:
+                    parts.append(ids)
+                    parts.append(self.ops.asarray(ext))
+                    continue
+            parts.append(ids)
         ids = self.ops.concat(parts)
         tbl = self._table({alias: ids}, int(ids.shape[0]))
         tbl = self._apply_fused_predicates(tbl, v.predicates, stats)
@@ -230,6 +259,7 @@ class Engine:
         # no device mask work unless the alias is genuinely mixed-type
         src_types = pattern.vertices[from_alias].types
         new_types = pattern.vertices[new_alias].types
+        snap = self.snapshot if self._delta else None
         outs = []
         for kind, t in self._orientations(e, from_alias):
             keyed_type = t.src if kind == "out" else t.dst
@@ -237,29 +267,93 @@ class Engine:
             if value_type not in new_types or keyed_type not in src_types:
                 continue
             lo, hi = st.type_range(keyed_type)
-            if len(src_types) == 1:
-                rows = None                    # fast path: whole table in range
-                local = src_ids - lo
+            ins_v = dels_v = dead = None
+            if snap is not None:
+                ins_v = snap.ins.get((t, kind))
+                dels_v = snap.dels.get((t, kind))
+                dead = snap.dead_for(value_type)
+            # extension ids sit above every base type range, so the
+            # single-type fast path (whole column assumed in range) is only
+            # safe when the snapshot has no extension vertices of this type
+            force_mask = snap is not None and keyed_type in snap.ext
+            base_ok = True
+            local = rows = None
+            if len(src_types) == 1 and not force_mask:
+                local = src_ids - lo           # fast path: table in range
             else:
                 m = (src_ids >= lo) & (src_ids < hi)
                 rows = self.ops.nonzero(m)
                 if int(rows.shape[0]) == 0:
-                    continue
-                local = self.ops.take(src_ids, rows) - lo
-            csr = (st.out_csr if kind == "out" else st.in_csr)[t]
-            try:
-                ridx, nbr, epos = self.ops.expand(csr, local,
-                                                  max_out=self.max_rows)
-            except RuntimeError as exc:
-                self._annotate_blowup(exc, label)
-            n_out = int(ridx.shape[0])
-            gather = ridx if rows is None else self.ops.take(rows, ridx)
-            part = tbl.take(gather).with_cols({
-                new_alias: nbr,
-                f"{e.alias}#t": self.ops.full(n_out, self._tindex[t]),
-                f"{e.alias}#p": epos,
-            })
-            outs.append(part)
+                    base_ok = False
+                else:
+                    local = self.ops.take(src_ids, rows) - lo
+            if base_ok:
+                csr = (st.out_csr if kind == "out" else st.in_csr)[t]
+                try:
+                    ridx, nbr, epos = self.ops.expand(csr, local,
+                                                      max_out=self.max_rows)
+                except RuntimeError as exc:
+                    self._annotate_blowup(exc, label)
+                if (dels_v is not None or dead is not None) \
+                        and int(ridx.shape[0]):
+                    keep = None
+                    if dels_v is not None:
+                        # probe the tombstone view: (src, nbr) deleted as of
+                        # the snapshot?  Row-key mapping via searchsorted;
+                        # misses fail the key-equality check
+                        gsrc = self.ops.take(
+                            src_ids if rows is None
+                            else self.ops.take(src_ids, rows), ridx)
+                        kd = self.ops.asarray(dels_v.keys)
+                        r = self.ops.searchsorted(kd, gsrc)
+                        okr = self.ops.take(kd, r) == gsrc
+                        df, _ = self.ops.intersect(dels_v.csr, r, nbr)
+                        keep = ~(df & okr)
+                    if dead is not None:
+                        dm = ~self.ops.isin(nbr, list(dead))
+                        keep = dm if keep is None else keep & dm
+                    sel = self.ops.nonzero(keep)
+                    ridx = self.ops.take(ridx, sel)
+                    nbr = self.ops.take(nbr, sel)
+                    epos = self.ops.take(epos, sel)
+                n_out = int(ridx.shape[0])
+                gather = ridx if rows is None else self.ops.take(rows, ridx)
+                part = tbl.take(gather).with_cols({
+                    new_alias: nbr,
+                    f"{e.alias}#t": self.ops.full(n_out, self._tindex[t]),
+                    f"{e.alias}#p": epos,
+                })
+                outs.append(part)
+            if ins_v is not None:
+                # overlay insert part: map global src ids onto the view's
+                # compact rows (keys hold only this triple's keyed type, so
+                # the full column probes safely — mismatches compact out)
+                ik = self.ops.asarray(ins_v.keys)
+                r = self.ops.searchsorted(ik, src_ids)
+                okm = self.ops.take(ik, r) == src_ids
+                sel = self.ops.nonzero(okm)
+                if int(sel.shape[0]):
+                    crows = self.ops.take(r, sel)
+                    try:
+                        ridx2, nbr2, epos2 = self.ops.expand(
+                            ins_v.csr, crows, max_out=self.max_rows)
+                    except RuntimeError as exc:
+                        self._annotate_blowup(exc, label)
+                    if dead is not None and int(ridx2.shape[0]):
+                        keep2 = self.ops.nonzero(
+                            ~self.ops.isin(nbr2, list(dead)))
+                        ridx2 = self.ops.take(ridx2, keep2)
+                        nbr2 = self.ops.take(nbr2, keep2)
+                        epos2 = self.ops.take(epos2, keep2)
+                    n2 = int(ridx2.shape[0])
+                    part = tbl.take(
+                        self.ops.take(sel, ridx2)).with_cols({
+                            new_alias: nbr2,
+                            f"{e.alias}#t": self.ops.full(
+                                n2, self._tindex[t]),
+                            f"{e.alias}#p": epos2,
+                        })
+                    outs.append(part)
         out = Table.concat(outs)
         self._check(out.nrows, label)
         return out
@@ -277,6 +371,7 @@ class Engine:
         cand = tbl.cols[cand_alias]
         src_types = pattern.vertices[from_alias].types
         cand_types = pattern.vertices[cand_alias].types
+        snap = self.snapshot if self._delta else None
         for kind, t in self._orientations(e, from_alias):
             keyed_type = t.src if kind == "out" else t.dst
             value_type = t.dst if kind == "out" else t.src
@@ -284,6 +379,48 @@ class Engine:
                 continue
             klo, khi = st.type_range(keyed_type)
             vlo, vhi = st.type_range(value_type)
+            ins_v = dels_v = None
+            force_mask = False
+            if snap is not None:
+                ins_v = snap.ins.get((t, kind))
+                dels_v = snap.dels.get((t, kind))
+                force_mask = keyed_type in snap.ext
+            csr = (st.out_csr if kind == "out" else st.in_csr)[t]
+            if ins_v is not None or dels_v is not None or force_mask:
+                # delta path: probe over the full table — base rows out of
+                # range clamp to row 0 and mask out, overlay rows (incl.
+                # extension srcs) probe the insert view by global key
+                inr = ((src_ids >= klo) & (src_ids < khi) &
+                       (cand >= vlo) & (cand < vhi))
+                local = (src_ids - klo) * inr
+                found, epos = self.ops.intersect(csr, local, cand)
+                found = found & inr
+                if dels_v is not None:
+                    kd = self.ops.asarray(dels_v.keys)
+                    r = self.ops.searchsorted(kd, src_ids)
+                    okr = self.ops.take(kd, r) == src_ids
+                    df, _ = self.ops.intersect(dels_v.csr, r, cand)
+                    found = found & ~(df & okr)
+                if ins_v is not None:
+                    ik = self.ops.asarray(ins_v.keys)
+                    r2 = self.ops.searchsorted(ik, src_ids)
+                    ok2 = self.ops.take(ik, r2) == src_ids
+                    f2, p2 = self.ops.intersect(ins_v.csr, r2, cand)
+                    f2 = f2 & ok2
+                    # mutation-time edge uniqueness means base and overlay
+                    # never both match, so the select is exact
+                    found = found | f2
+                    epos = self.ops.where(f2, p2, epos)
+                hit = self.ops.nonzero(found)
+                if int(hit.shape[0]) == 0:
+                    continue
+                part = tbl.take(hit).with_cols({
+                    f"{e.alias}#t": self.ops.full(int(hit.shape[0]),
+                                                  self._tindex[t]),
+                    f"{e.alias}#p": self.ops.take(epos, hit),
+                })
+                outs.append(part)
+                continue
             if len(src_types) == 1 and len(cand_types) == 1:
                 rows = None           # statically in range (see _expand_edge)
                 local = src_ids - klo
@@ -296,7 +433,6 @@ class Engine:
                     continue
                 local = self.ops.take(src_ids, rows) - klo
                 tgt = self.ops.take(cand, rows)
-            csr = (st.out_csr if kind == "out" else st.in_csr)[t]
             found, epos = self.ops.intersect(csr, local, tgt)
             hit = self.ops.nonzero(found)
             if int(hit.shape[0]) == 0:
@@ -421,7 +557,8 @@ class Engine:
         """ChainSpec for the fused dispatch, memoized on the plan node per
         (store, backend) — plans are shared through the prepared-plan cache,
         so one compiled chain serves every engine over the same store."""
-        key = (id(self.store), self.ops.name)
+        key = (id(self.store), getattr(self.store, "compaction_epoch", 0),
+               self.ops.name)
         cached = node.__dict__.get("_chain_spec")
         if cached is None or cached[0] != key:
             spec = build_chain_spec(self.store, self._tindex, pattern, node)
@@ -470,7 +607,15 @@ class Engine:
         hops = "".join(f"+{s.alias}" for s in node.steps)
         label = f"EXPANDCHAIN({hops})"
         prog = None
-        if (self.chain_dispatch and tbl.nrows
+        delta_decline = False
+        if self._delta:
+            triples = [t for s in node.steps for ee in s.all_edges()
+                       for t in ee.triples]
+            delta_decline = self.snapshot.affects_chain(triples)
+        if (self.chain_dispatch and tbl.nrows and delta_decline
+                and getattr(self.ops, "supports_chains", False)):
+            stats.fallback("chain_delta")
+        if (self.chain_dispatch and tbl.nrows and not delta_decline
                 and getattr(self.ops, "supports_chains", False)):
             spec = self._chain_spec(node, pattern)
             # batched runs relax parameter predicates to per-binding unions;
@@ -669,6 +814,11 @@ class Engine:
 
     def _plan_head(self, plan: ir.LogicalPlan, pattern_plan):
         from repro.core.physical import default_left_deep_plan
+        if self.snapshot is not None and getattr(self.snapshot, "retired",
+                                                 False):
+            raise StaleSnapshotError(
+                f"snapshot v{self.snapshot.version} was retired by "
+                "compaction; pin a fresh snapshot")
         ops = list(plan.ops)
         if not isinstance(ops[0], ir.MatchPattern):
             raise ValueError("plan must start with MATCH_PATTERN")

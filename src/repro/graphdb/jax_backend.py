@@ -237,7 +237,10 @@ class FusedChain:
                       tuple(self._csr_args(p.orient) for p in h.probes))
                      for h in self.spec.hops)
         vp = tuple(ops._vprop_dev(p) for p in vprops)
-        ep = tuple(ops._eprop_dev(p) for p in eprops)
+        # base columns only ((offsets, flat) — drop the nnz count): chains
+        # decline whenever the snapshot touches their triples, so overlay
+        # edge positions never reach a fused program
+        ep = tuple(ops._eprop_dev(p)[:2] for p in eprops)
         scal = ops.asarray(np.asarray(list(scalars), dtype=np.int32))
         vals = []
         for v, b in zip(value_lists, vb):
@@ -290,13 +293,15 @@ class JaxOperators(OperatorSet):
         self._jaxops = jaxops
         self._wcoj = wcoj_intersect
         self._interpret = jax.default_backend() != "tpu"
-        if max(store.n_vertices, store.n_edges) >= _I32_MAX:
+        id_space = getattr(store, "id_space", store.n_vertices)
+        if max(id_space, store.n_edges) >= _I32_MAX:
             raise ValueError(
                 "jax backend stages vertex ids and CSR offsets through "
                 f"int32; store has {store.n_vertices} vertices / "
                 f"{store.n_edges} edges")
         self._dev = {}    # id(csr) -> (indptr_dev, indices_dev, pos_dev|None)
-        self._props = {}  # ("v"|"e", prop) -> device property column(s)
+        self._props = {}  # ("v"|"e", prop, epoch) -> device property column(s)
+        self._cols = {}   # id(host col) -> (host col ref, device twin)
         self._chains = {}     # (chain signature, csr ids) -> FusedChain
         self._max_deg = {}    # id(csr) -> int global max degree
         # tail-kernel bucket keys already traced: mirrors the module-level
@@ -413,6 +418,8 @@ class JaxOperators(OperatorSet):
         # on the bucket, not the exact table length.
         jnp = self._jnp
         m = jnp.asarray(m)
+        if m.dtype != bool:
+            m = m != 0          # int 0/1 masks: sum/argsort need real bools
         n = m.shape[0]
         cnt = int(m.sum())                           # control-plane sync
         if cnt == 0:
@@ -439,6 +446,10 @@ class JaxOperators(OperatorSet):
         return self._jnp.searchsorted(self._jnp.asarray(sorted_arr),
                                       self._jnp.asarray(values), side=side)
 
+    def where(self, cond, a, b):
+        return self._jnp.where(self._jnp.asarray(cond),
+                               self._jnp.asarray(a), self._jnp.asarray(b))
+
     def lexsort(self, cols: list):
         return self._jnp.lexsort(tuple(self._jnp.asarray(c) for c in cols))
 
@@ -464,13 +475,29 @@ class JaxOperators(OperatorSet):
         return jnp.sort(self.take(order, self.nonzero(flag)))
 
     # ------------------------------------------------------ property gathers
+    def _col_dev(self, host_col: np.ndarray):
+        """Device twin of a host overlay column, keyed by object identity
+        (the mutable store retains every column it publishes, so an id is
+        stable while the entry is valid; the stored host ref guards against
+        address reuse after a gc).  The host INT64_MIN missing sentinel is
+        narrowed to the in-band int32 one before staging."""
+        key = id(host_col)
+        ent = self._cols.get(key)
+        if ent is None or ent[0] is not host_col:
+            staged = np.where(host_col == _I64_MIN, _I32_MIN, host_col)
+            ent = self._cols[key] = (host_col, self._upload(staged))
+        return ent[1]
+
     def _vprop_dev(self, prop: str):
-        """One device column per vertex property, indexed by *global* id
-        (missing types filled with the int32 sentinel) — a property gather
-        is then a single device take instead of a per-type where-loop."""
-        ent = self._props.get(("v", prop))
+        """One device column per vertex property over the *base* store,
+        indexed by *global* id (missing types filled with the int32
+        sentinel) — a property gather is then a single device take instead
+        of a per-type where-loop.  Keyed by compaction epoch so a rebuilt
+        base CSR re-stages."""
+        key = ("v", prop, getattr(self.store, "compaction_epoch", 0))
+        ent = self._props.get(key)
         if ent is None:
-            st = self.store
+            st = getattr(self.store, "base", self.store)
             # in-band missing sentinel, like the host path's INT64_MIN:
             # only a stored value of exactly INT32_MIN would collide
             col = np.full(st.n_vertices, _I32_MIN, dtype=np.int64)
@@ -480,15 +507,18 @@ class JaxOperators(OperatorSet):
                     continue
                 off = st.v_offset[t]
                 col[off:off + tc.shape[0]] = tc
-            ent = self._props[("v", prop)] = self._upload(col)
+            ent = self._props[key] = self._upload(col)
         return ent
 
     def _eprop_dev(self, prop: str):
-        """Per-triple edge-property columns concatenated on device, plus the
-        per-triple base offsets: ``col[offset[tidx] + pos]``."""
-        ent = self._props.get(("e", prop))
+        """Per-triple edge-property columns of the *base* store concatenated
+        on device, plus the per-triple base offsets:
+        ``col[offset[tidx] + pos]``.  The total base nnz rides along so the
+        overlay merge can split positions."""
+        key = ("e", prop, getattr(self.store, "compaction_epoch", 0))
+        ent = self._props.get(key)
         if ent is None:
-            st = self.store
+            st = getattr(self.store, "base", self.store)
             triples = sorted(st.out_csr, key=repr)
             offsets, parts, off = [], [], 0
             for t in triples:
@@ -502,21 +532,37 @@ class JaxOperators(OperatorSet):
                 off += n
             flat = (np.concatenate(parts) if parts
                     else np.zeros(0, np.int64))
-            ent = self._props[("e", prop)] = (
+            ent = self._props[key] = (
                 self._upload(np.asarray(offsets, dtype=np.int64)),
-                self._upload(flat))
+                self._upload(flat), off)
         return ent
 
     def vertex_prop(self, ids, prop: str):
-        return self.take(self._vprop_dev(prop), self._jnp.asarray(ids))
+        ids = self._jnp.asarray(ids)
+        out = self.take(self._vprop_dev(prop), ids)
+        st = self.store
+        bv = getattr(st, "base_n_vertices", None)
+        if bv is not None and getattr(st, "id_space", bv) > bv:
+            ext = self._col_dev(st.ext_vertex_prop_column(prop))
+            out = self._jnp.where(ids < bv, out, self.take(ext, ids - bv))
+        return out
 
     def edge_prop(self, triple_ids, pos, prop: str):
-        offsets, flat = self._eprop_dev(prop)
+        jnp = self._jnp
+        pos = jnp.asarray(pos)
+        offsets, flat, nbase = self._eprop_dev(prop)
         if flat.shape[0] == 0:
-            return self._jnp.full(self._jnp.asarray(pos).shape, _I32_MIN,
-                                  self._jnp.int32)
-        base = self.take(offsets, self._jnp.asarray(triple_ids))
-        return self.take(flat, base + self._jnp.asarray(pos))
+            out = jnp.full(pos.shape, _I32_MIN, jnp.int32)
+        else:
+            # clip-mode take keeps overlay positions (>= nbase) harmless
+            # here; the where below overwrites those lanes
+            out = self.take(flat, self.take(offsets,
+                                            jnp.asarray(triple_ids)) + pos)
+        st = self.store
+        if getattr(st, "overlay_edge_slots", 0) > 0:
+            ov = self._col_dev(st.overlay_edge_prop_column(prop))
+            out = jnp.where(pos < nbase, out, self.take(ov, pos - nbase))
+        return out
 
     # --------------------------------------------------------------- pattern
     def _csr_dev(self, csr):
@@ -596,6 +642,10 @@ class JaxOperators(OperatorSet):
                 founds.append(f)
                 fposs.append(p)
         found = founds[0] if len(founds) == 1 else jnp.concatenate(founds)
+        # the ELL kernel emits an int 0/1 found column; the operator contract
+        # is a bool mask (callers compose it with ~/& — bitwise on ints
+        # silently corrupts)
+        found = found.astype(bool)
         fpos = fposs[0] if len(fposs) == 1 else jnp.concatenate(fposs)
         mapped = self.take(pos_d, fpos) if pos_d is not None else fpos
         epos = jnp.where(found, mapped, 0)

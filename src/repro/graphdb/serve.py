@@ -79,11 +79,18 @@ class ServeOverload(RuntimeError):
     """Admission rejected: the bounded pending queue is full."""
 
 
+# the update stream's queue key: writes ride the same admission path and
+# FIFO-fair wave formation as reads, on a dedicated queue
+_WRITE_KEY = ("__update__",)
+_WRITE_KINDS = ("insert_vertex", "insert_edge",
+                "delete_vertex", "delete_edge")
+
+
 @dataclasses.dataclass
 class ServeRequest:
     """One admitted query request and its lifecycle record."""
     rid: int
-    prepared: object                 # PreparedQuery
+    prepared: object                 # PreparedQuery (None for updates)
     params: dict | None
     arrival_s: float                 # perf_counter-domain arrival time
     deadline_s: float | None = None  # absolute; expired requests are dropped
@@ -92,6 +99,13 @@ class ServeRequest:
     stats: object | None = None      # ExecStats of this request's execution
     start_s: float = 0.0             # wave execution start
     finish_s: float = 0.0
+    kind: str = "query"              # query | update
+    update: tuple | None = None      # (mutation name, args, kwargs)
+    result: object | None = None     # mutation return value (updates)
+    # MVCC-lite: the store snapshot pinned at admission — this request
+    # answers as-of its admission version no matter when its wave runs
+    snapshot: object | None = None
+    snap_version: int = -1
 
     @property
     def queue_delay_s(self) -> float:
@@ -111,6 +125,7 @@ class ServeStats:
         self.rejected = 0          # backpressure (ServeOverload)
         self.dropped = 0           # deadline drops at wave formation
         self.deduped = 0           # duplicate bindings suppressed in waves
+        self.writes = 0            # applied mutations (update stream)
         self.waves = 0
         self.wave_sizes: list[int] = []
         # wave size / its pow2 capacity bucket — 1.0 means the wave exactly
@@ -164,6 +179,7 @@ class ServeStats:
             "rejected": self.rejected,
             "dropped": self.dropped,
             "deduped": self.deduped,
+            "writes": self.writes,
             "waves": self.waves,
             "mean_wave_size": sum(self.wave_sizes) / n_w,
             "mean_occupancy": sum(self.occupancy) / n_w,
@@ -244,6 +260,7 @@ class QueryServer:
         self._queues: "OrderedDict[tuple, deque[ServeRequest]]" = OrderedDict()
         self._plans: dict = {}            # cache_key -> PreparedQuery
         self._hot: dict = {}              # cache_key -> hit count
+        self._samples: dict = {}          # cache_key -> a recent binding
         self._pinned: set = set()         # cache_keys currently pinned
         self._pending = 0
         self._rid = 0
@@ -278,9 +295,44 @@ class QueryServer:
         now = time.perf_counter() if arrival_s is None else arrival_s
         self._rid += 1
         req = ServeRequest(self._rid, pq, params, now, deadline_s)
+        # MVCC-lite: pin the store snapshot *at admission* — the request
+        # answers as-of this version even when writes land before its wave
+        snap = self.gopt.snapshot()
+        if snap is not None:
+            req.snapshot = snap
+            req.snap_version = snap.version
         key = pq.cache_key
         self._plans[key] = pq
         self._queues.setdefault(key, deque()).append(req)
+        self._pending += 1
+        self.stats.submitted += 1
+        return req
+
+    def submit_update(self, kind: str, *args,
+                      deadline_s: float | None = None,
+                      arrival_s: float | None = None, **kw) -> ServeRequest:
+        """Admit one mutation (``insert_vertex``/``insert_edge``/
+        ``delete_vertex``/``delete_edge``) through the same admission path
+        as queries: bounded queue, FIFO-fair wave formation.  Updates ride
+        a dedicated queue and apply on the worker thread in wave order;
+        the mutation's return value lands in ``req.result``.  Reads pinned
+        their snapshot at admission, so an update wave never disturbs an
+        already-admitted read."""
+        if kind not in _WRITE_KINDS:
+            raise ValueError(f"unknown update kind {kind!r}; "
+                             f"expected one of {_WRITE_KINDS}")
+        if not callable(getattr(self.gopt.store, kind, None)):
+            raise TypeError("store is frozen; serve mutations require a "
+                            "repro.graphdb.delta.MutableGraphStore")
+        if self._pending >= self.max_pending:
+            self.stats.rejected += 1
+            raise ServeOverload(
+                f"pending queue full ({self._pending}/{self.max_pending})")
+        now = time.perf_counter() if arrival_s is None else arrival_s
+        self._rid += 1
+        req = ServeRequest(self._rid, None, None, now, deadline_s,
+                           kind="update", update=(kind, args, kw))
+        self._queues.setdefault(_WRITE_KEY, deque()).append(req)
         self._pending += 1
         self.stats.submitted += 1
         return req
@@ -323,11 +375,23 @@ class QueryServer:
                 return None
             q = self._queues[key]
             reqs: list[ServeRequest] = []
-            size = min(len(q), self.max_wave)
-            if self.bucket_waves and size < len(q):
+            # snapshot-homogeneous waves: one wave executes against ONE
+            # pinned snapshot, so coalescing stops at the first version
+            # boundary in the queue (update waves apply in queue order and
+            # never split)
+            span = len(q)
+            if key != _WRITE_KEY:
+                span = 1
+                while span < len(q) and \
+                        q[span].snap_version == q[0].snap_version:
+                    span += 1
+            size = min(span, self.max_wave)
+            if self.bucket_waves and size < span:
                 size = _pow2_floor(size)
-            while q and len(reqs) < size:
+            popped = 0
+            while q and len(reqs) < size and popped < span:
                 r = q.popleft()
+                popped += 1
                 self._pending -= 1
                 if r.deadline_s is not None and now > r.deadline_s:
                     r.status = "dropped"
@@ -345,6 +409,9 @@ class QueryServer:
     def _run_wave(self, key, reqs: list[ServeRequest]):
         """Execute one wave (single worker thread under overlap: every
         backend call for every wave runs here, serialized)."""
+        if key == _WRITE_KEY:
+            self._run_write_wave(reqs)
+            return
         pq = reqs[0].prepared
         ops = pq.spec.operators(self.gopt.store)
         # wave-scoped ledgers: no bleed across waves, bounded growth
@@ -365,8 +432,14 @@ class QueryServer:
                 bindings.append(r.params)
             slot.append(uniq[k])
         self.stats.deduped += len(reqs) - len(bindings)
+        exec_kw = dict(self.exec_kw)
+        if reqs[0].snapshot is not None:
+            # the wave is snapshot-homogeneous by formation; execute the
+            # whole batch against the wave's pinned snapshot
+            exec_kw["snapshot"] = reqs[0].snapshot
+        self._samples[key] = bindings[0]
         if len(bindings) == 1:
-            results = [pq.execute(bindings[0], **self.exec_kw)]
+            results = [pq.execute(bindings[0], **exec_kw)]
         else:
             # on compiling backends, pad the executed binding list up to
             # its pow2 bucket with a duplicate binding: the union pattern
@@ -378,7 +451,7 @@ class QueryServer:
             if pad and self.bucket_waves:
                 bindings = bindings + \
                     [bindings[0]] * (_pow2(len(bindings)) - len(bindings))
-            results = pq.execute_many(bindings, batch=True, **self.exec_kw)
+            results = pq.execute_many(bindings, batch=True, **exec_kw)
         finish = time.perf_counter()
         for r, j in zip(reqs, slot):
             r.table, r.stats = results[j]
@@ -387,6 +460,24 @@ class QueryServer:
         self.stats.record_wave(key, reqs, _pow2(len(reqs)), finish - start,
                                ops.kernel_stats.summary())
         self._update_hotness(key, len(reqs))
+
+    def _run_write_wave(self, reqs: list[ServeRequest]):
+        """Apply one update wave in queue order on the worker thread (the
+        single writer under overlap; admitted readers hold their own
+        immutable snapshots, so writers never block readers)."""
+        store = self.gopt.store
+        start = time.perf_counter()
+        for r in reqs:
+            r.start_s = start
+            kind, args, kw = r.update
+            r.result = getattr(store, kind)(*args, **kw)
+            r.status = "done"
+        finish = time.perf_counter()
+        for r in reqs:
+            r.finish_s = finish
+        self.stats.writes += len(reqs)
+        self.stats.record_wave(_WRITE_KEY, reqs, len(reqs),
+                               finish - start, None)
 
     # --------------------------------------------------------------- hotness
     def _update_hotness(self, key, hits: int):
@@ -425,7 +516,8 @@ class QueryServer:
         """Chain specs the engine memoized on this plan's chain nodes for
         the current (store, backend) — the handles worth pinning."""
         from repro.core.physical import ExpandChainNode, plan_children
-        want = (id(self.gopt.store), ops.name)
+        store = self.gopt.store
+        want = (id(store), getattr(store, "compaction_epoch", 0), ops.name)
         specs = []
 
         def walk(n):
@@ -484,6 +576,40 @@ class QueryServer:
             waves += 1
         done.extend(self.flush())
         return done
+
+    # ------------------------------------------------------------ compaction
+    def compact(self, warm: bool = True) -> dict:
+        """Quiesce, merge the delta overlay into a rebuilt base CSR, and
+        bump the stats epoch (``GOpt.compact`` — every cached plan re-costs
+        against post-compaction statistics on its next prepare).  With
+        ``warm=True`` the hottest plans are re-prepared, warmed once against
+        the rebuilt CSR (paying their chain compiles here, not in a serving
+        wave), and their fused chains re-pinned — so a warmed server records
+        zero chain compiles in post-compaction waves."""
+        self.drain()
+        event = dict(self.gopt.compact())
+        self._pinned.clear()              # old-epoch chain specs are stale
+        repinned = 0
+        if warm:
+            hot = sorted(self._hot, key=self._hot.get,
+                         reverse=True)[:self.hot_plans]
+            for key in hot:
+                old = self._plans.get(key)
+                if old is None or old.source is None:
+                    continue
+                with self._lock:
+                    pq = self.gopt.prepare(old.source, backend=self.backend,
+                                           **old.opts)
+                self._plans[pq.cache_key] = pq
+                try:
+                    pq.execute(self._samples.get(key), **self.exec_kw)
+                except Exception:
+                    continue              # no warmable binding for this plan
+                if self._set_pinned(pq.cache_key, True):
+                    self._pinned.add(pq.cache_key)
+                    repinned += 1
+        event["repinned_plans"] = repinned
+        return event
 
     # --------------------------------------------------------------- explain
     def explain(self, query, params: dict | None = None,
