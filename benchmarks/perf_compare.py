@@ -247,6 +247,12 @@ def run_prepared(args) -> dict:
                   f"speedup={rec['speedup']:.1f}x match={rec['match']}",
                   flush=True)
 
+    verify_overhead = _measure_verify_overhead(gopt.store, cases)
+    print(f"# verify overhead: off={verify_overhead['off_s']:.4f}s "
+          f"cached={verify_overhead['cached_s']:.4f}s "
+          f"ratio={verify_overhead['overhead']:.2%} "
+          f"(gate <{VERIFY_OVERHEAD_TOL:.0%})", flush=True)
+
     geo = {}
     for backend in backends:
         sp = [r["speedup"] for r in results
@@ -262,14 +268,50 @@ def run_prepared(args) -> dict:
     out = {"sf": args.sf, "backends": backends, "repeats": args.repeats,
            "results": results, "mismatches": mismatches,
            "regressions": regressions, "slow_backends": slow_backends,
-           "summary": geo}
+           "verify_overhead": verify_overhead, "summary": geo}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, default=float)
     print(f"# wrote {args.out}; mismatches={mismatches or 'none'} "
           f"regressions={regressions or 'none'} "
-          f"slow_backends={slow_backends or 'none'} summary={geo} "
-          f"({time.time() - t0:.1f}s total)")
+          f"slow_backends={slow_backends or 'none'} "
+          f"verify_overhead={verify_overhead['overhead']:.2%} "
+          f"summary={geo} ({time.time() - t0:.1f}s total)")
     return out
+
+
+# verify="cached" must stay under 5% of total prepare time (DESIGN.md §12);
+# the absolute slack keeps sub-millisecond totals from tripping the ratio
+VERIFY_OVERHEAD_TOL = 0.05
+VERIFY_OVERHEAD_SLACK_S = 0.025
+
+
+def _measure_verify_overhead(store, cases, rounds: int = 3) -> dict:
+    """Total prepare wall for the bench's case set with verification off vs
+    ``verify="cached"`` — identical optimizer config in both arms.  The plan
+    caches are cleared between rounds so every round pays the full pipeline,
+    while the cached arm's verification memo persists (its steady state:
+    one real verification per canonical plan form, memo hits after)."""
+    from repro.core.gopt import GOpt
+
+    totals = {}
+    for mode in ("off", "cached"):
+        gopt = GOpt(store, build_glogue=False)
+        t = 0.0
+        for _ in range(rounds):
+            gopt._plan_cache.clear()
+            gopt._text_cache.clear()
+            t1 = time.perf_counter()
+            for _name, text, bindings in cases:
+                gopt.prepare(text, bindings[0], verify=mode)
+            t += time.perf_counter() - t1
+        totals[mode] = t
+    overhead = ((totals["cached"] - totals["off"]) / totals["off"]
+                if totals["off"] else 0.0)
+    return {"off_s": totals["off"], "cached_s": totals["cached"],
+            "overhead": overhead,
+            "exceeded": (overhead >= VERIFY_OVERHEAD_TOL
+                         and totals["cached"] - totals["off"]
+                         > VERIFY_OVERHEAD_SLACK_S)}
 
 
 # ---------------------------------------------------------- residency mode
@@ -999,7 +1041,8 @@ def main():
     if args.prepared:
         args.out = args.out or "BENCH_prepared.json"
         out = run_prepared(args)
-        sys.exit(1 if out["mismatches"] or out["slow_backends"] else 0)
+        sys.exit(1 if out["mismatches"] or out["slow_backends"]
+                 or out["verify_overhead"]["exceeded"] else 0)
     if args.residency:
         args.out = args.out or "BENCH_residency.json"
         out = run_residency(args)

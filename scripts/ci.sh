@@ -25,6 +25,18 @@ python -m pytest -x -q tests/test_pipeline.py
 echo "== EXPLAIN smoke =="
 python scripts/explain_smoke.py
 
+# contract lints (DESIGN.md §12.4): AST checks that the device backends'
+# data plane stays host-array-free, jit compiles / transfers hit their
+# ledgers, and serve.py holds its lock discipline — zero violations
+echo "== contract lints =="
+python tools/lint_contracts.py --strict
+
+# verifier gate (DESIGN.md §12): every Appendix-A query compiles clean
+# under verify="always" on numpy+jax, a seeded hostile pass is rejected
+# with PlanInvariantError naming it, and verify="cached" hits its memo
+echo "== verify smoke =="
+python scripts/verify_smoke.py
+
 # residency gate (OperatorSet v2, DESIGN.md §7): a 2-hop Appendix-A query
 # on the jax backend must run with zero device->host transfers between
 # plan steps, row-identical to numpy — the device-resident contract

@@ -1,0 +1,111 @@
+#!/usr/bin/env python
+"""PlanVerifier smoke for CI (scripts/ci.sh; DESIGN.md §12).
+
+Three gates, all structural:
+
+1. ``verify="always"`` compiles every Appendix-A query clean on the numpy
+   and jax backends (status ``ok``/``verified-empty``, zero violations,
+   ``-- verify --`` rendered in EXPLAIN);
+2. a seeded hostile pass (drops a pattern vertex mid-rbo) is rejected with
+   ``PlanInvariantError`` naming that pass — the detection path itself is
+   exercised, not just the clean path;
+3. ``verify="cached"`` serves the re-prepare of an identical query from the
+   verification memo (``cached: true``).
+
+Usage: PYTHONPATH=src python scripts/verify_smoke.py [--sf 0.05]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(1, ".")
+
+from benchmarks import queries as Q                                # noqa: E402
+from repro.core.errors import PlanInvariantError                   # noqa: E402
+from repro.core.gopt import GOpt                                   # noqa: E402
+from repro.core.pipeline import Pass                               # noqa: E402
+from repro.graphdb.ldbc import generate_ldbc                       # noqa: E402
+
+MULE_PARAMS = {"hops": 2, "S1": [1, 2, 3], "S2": [4, 5, 6]}
+
+APPENDIX_A = (
+    [(k, q, None) for k, q in Q.QT.items()]
+    + [(k, q, Q.QR_PARAMS.get(k)) for k, q in Q.QR.items()]
+    + [(k, q, None) for k, q in Q.QC.items()]
+    + [(k, q, Q.QIC_PARAMS[k]) for k, q in Q.QIC.items()]
+    + [("money_mule", Q.MONEY_MULE, MULE_PARAMS)]
+)
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"VERIFY SMOKE FAIL: {msg}")
+        sys.exit(1)
+
+
+class HostilePass(Pass):
+    name = "hostile_drop_vertex"
+    phase = "rbo"
+    done = False
+
+    def run(self, ctx):
+        if self.done:
+            return False
+        self.done = True
+        pat = ctx.plan.pattern()
+        if pat is None or len(pat.vertices) < 2:
+            return False
+        pat = pat.copy()
+        alias = next(a for a in pat.vertices
+                     if any(a in (e.src, e.dst) for e in pat.edges))
+        del pat.vertices[alias]
+        ctx.plan.replace_pattern(pat)
+        return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.05)
+    args = ap.parse_args()
+    store = generate_ldbc(sf=args.sf)
+
+    # gate 1: every Appendix-A query verifies clean, both backends
+    n = 0
+    for backend in ("numpy", "jax"):
+        gopt = GOpt(store, build_glogue=False, backend=backend)
+        for name, text, params in APPENDIX_A:
+            rep = gopt.prepare(text, params, verify="always").explain()
+            label = f"{name}/{backend}"
+            check(rep.verify is not None, f"{label}: no verify report")
+            check(rep.verify["status"] in ("ok", "verified-empty"),
+                  f"{label}: status {rep.verify['status']}")
+            check(not rep.verify["violations"],
+                  f"{label}: {rep.verify['violations']}")
+            check("-- verify --" in rep.render(),
+                  f"{label}: EXPLAIN lacks the verify section")
+            n += 1
+
+    # gate 2: the hostile pass is rejected, by name
+    gopt = GOpt(store, build_glogue=False)
+    gopt.pipeline.register(HostilePass())
+    try:
+        gopt.prepare(Q.QR["Qr3"], verify="always")
+        check(False, "hostile pass was NOT rejected")
+    except PlanInvariantError as e:
+        check(e.pass_name == "hostile_drop_vertex",
+              f"wrong pass blamed: {e.pass_name!r}")
+
+    # gate 3: cached mode hits the verification memo on re-prepare
+    gopt = GOpt(store, build_glogue=False)
+    gopt.prepare(Q.QR["Qr3"], verify="cached")
+    gopt._plan_cache.clear()
+    gopt._text_cache.clear()
+    rep = gopt.prepare(Q.QR["Qr3"], verify="cached").explain()
+    check(rep.verify["cached"], "re-prepare missed the verification memo")
+
+    print(f"VERIFY SMOKE OK: {n} query/backend combinations clean, "
+          f"hostile pass rejected, memo hit on re-prepare")
+
+
+if __name__ == "__main__":
+    main()

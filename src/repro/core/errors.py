@@ -30,6 +30,35 @@ class PipelineError(GOptError, ValueError):
     lives in a different phase)."""
 
 
+class PlanInvariantError(GOptError, AssertionError):
+    """A plan failed the ``PlanVerifier``'s static invariant checks
+    (``core/verify.py``).
+
+    Under ``verify="always"`` the optimizer pipeline verifies after every
+    registered pass, so ``pass_name``/``phase`` identify the rewrite that
+    produced the invalid plan and ``trace`` is its ``PassTrace`` — including
+    the before/after plan diff — at the moment of the violation.
+    ``pass_name`` is ``None`` when the violation was only detected on the
+    pipeline's final output (``verify="cached"``)."""
+
+    def __init__(self, violations, pass_name: str | None = None,
+                 phase: str | None = None, trace=None):
+        self.violations = tuple(violations)
+        self.pass_name = pass_name
+        self.phase = phase
+        self.trace = trace
+        where = (f"after pass {pass_name!r} ({phase})"
+                 if pass_name else "in pipeline output")
+        lines = [f"invalid plan {where}: "
+                 f"{len(self.violations)} invariant violation(s)"]
+        lines.extend(f"  - {v}" for v in self.violations)
+        diff = list(getattr(trace, "diff", []) or [])
+        if diff:
+            lines.append("  plan diff:")
+            lines.extend(f"    {d}" for d in diff)
+        super().__init__("\n".join(lines))
+
+
 class ParamError(GOptError, LookupError):
     """A query-parameter problem, naming the offending parameters and the
     declared set."""

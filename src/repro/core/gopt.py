@@ -47,14 +47,15 @@ from repro.core.parser import parse_cypher
 from repro.core.pattern import Pattern
 from repro.core.physical import PlanNode
 from repro.core.physical_spec import PhysicalSpec, get_spec
-from repro.core.pipeline import (ExplainReport, OptimizerPipeline,
-                                 PassContext, PipelineTrace,
-                                 build_explain_report, default_pipeline)
+from repro.core.pipeline import (VERIFY_MODES, ExplainReport,
+                                 OptimizerPipeline, PassContext,
+                                 PipelineTrace, build_explain_report,
+                                 default_pipeline)
 from repro.graphdb.engine import Engine, ExecStats, Table
 from repro.graphdb.storage import GraphStore
 
 _OPT_KEYS = ("type_inference", "rbo", "cbo", "use_glogue", "use_selectivity",
-             "physical_rules")
+             "physical_rules", "verify")
 
 _EXPLAIN_RE = re.compile(r"^\s*(EXPLAIN\b|PROFILE\b(\s+SYNC\b)?)",
                          re.IGNORECASE)
@@ -219,7 +220,8 @@ class GOpt:
                  backend: str | PhysicalSpec = "numpy",
                  plan_cache_size: int = 256,
                  pipeline: OptimizerPipeline | None = None,
-                 devices: int | None = None):
+                 devices: int | None = None,
+                 verify: str | None = None):
         self.store = store
         self.schema = store.schema
         self.stats = Statistics(store)
@@ -238,6 +240,13 @@ class GOpt:
         # the registered pass sequence driving optimize(); per-instance, so
         # registering a custom pass/rule never leaks across GOpt instances
         self.pipeline = pipeline or default_pipeline()
+        if verify is not None:
+            # instance-wide default verify mode (per-call override: the
+            # verify= option of optimize()/prepare())
+            if verify not in VERIFY_MODES:
+                raise ValueError(f"unknown verify mode {verify!r}; "
+                                 f"modes are {VERIFY_MODES}")
+            self.pipeline.verify = verify
         # pipeline-stage meters: how many times each compile stage ran
         self.compile_counters: collections.Counter = collections.Counter()
         self.plan_cache_size = plan_cache_size
@@ -261,6 +270,7 @@ class GOpt:
                  use_glogue: bool = True,
                  use_selectivity: bool = True,
                  physical_rules: bool = True,
+                 verify: str | None = None,
                  backend: str | PhysicalSpec | None = None,
                  pipeline: OptimizerPipeline | None = None) -> OptimizedQuery:
         """Thin driver over the registered ``OptimizerPipeline``.
@@ -286,7 +296,8 @@ class GOpt:
             flags={"type_inference": type_inference, "rbo": rbo, "cbo": cbo,
                    "use_glogue": use_glogue,
                    "use_selectivity": use_selectivity,
-                   "physical_rules": physical_rules},
+                   "physical_rules": physical_rules,
+                   "verify": verify},
             counters=self.compile_counters)
         trace = (pipeline or self.pipeline).run(ctx)
         return OptimizedQuery(plan, ctx.physical, time.perf_counter() - t0,

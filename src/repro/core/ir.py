@@ -117,6 +117,29 @@ def expr_aliases(e) -> set[str]:
     return set()
 
 
+def expr_var_aliases(e) -> set[str]:
+    """Aliases referenced as bare ``Var`` nodes (which the engine resolves
+    against the binding table's id columns — unlike ``Prop`` references,
+    which also resolve for edge aliases through the ``alias#t``/``alias#p``
+    identity columns).  The ``PlanVerifier`` scopes the two differently."""
+    if isinstance(e, Var):
+        return {e.alias}
+    if isinstance(e, Prop):
+        return set()
+    if isinstance(e, Cmp):
+        return expr_var_aliases(e.lhs) | expr_var_aliases(e.rhs)
+    if isinstance(e, InSet):
+        return expr_var_aliases(e.item)
+    if isinstance(e, BoolOp):
+        out: set[str] = set()
+        for a in e.args:
+            out |= expr_var_aliases(a)
+        return out
+    if isinstance(e, Agg):
+        return expr_var_aliases(e.arg) if e.arg is not None else set()
+    return set()
+
+
 def expr_props(e) -> set[Prop]:
     if isinstance(e, Prop):
         return {e}

@@ -547,6 +547,14 @@ def _conformance_chain(ops, fails: list[str]):
         if k not in cols:
             fails.append(f"chain_program: missing output column {k!r}")
             return
+        # device-side dtype pin: compiled backends stage id/identity columns
+        # as int32; checking after to_host would be blind (it widens to
+        # int64 by design)
+        if getattr(ops, "compiled", False):
+            dt = getattr(cols[k], "dtype", None)
+            if dt != np.int32:
+                fails.append(f"chain_program.{k}: device column dtype "
+                             f"{dt}, want int32 (staging contract)")
         got[k] = np.asarray(H(cols[k]))[:n]
     if n != 8:
         fails.append(f"chain_program: got {n} rows, want 8")
@@ -555,6 +563,61 @@ def _conformance_chain(ops, fails: list[str]):
         if not np.array_equal(got[k].astype(np.int64), np.asarray(want)):
             fails.append(f"chain_program.{k}: got {got[k].tolist()!r}, "
                          f"want {want!r}")
+
+
+def dtype_contract_failures(ops: OperatorSet) -> list[str]:
+    """Dtype contract at operator boundaries (DESIGN.md §12), checked on
+    the *backend-native* output arrays — ``to_host`` deliberately widens
+    int32 to int64 and would mask a staging-dtype mixup.
+
+    Every backend: ``isin`` and ``intersect.found`` emit a real bool mask
+    (callers compose masks with ``~``/``&``; bitwise-not on an int 0/1
+    column corrupts silently — the PR-8 regression), and id/position
+    columns out of ``scan``/``arange``/``expand``/``intersect``/``nonzero``
+    are integer-kind.  Compiled (device) backends additionally pin those
+    columns to the int32 staging envelope."""
+    fails: list[str] = []
+    compiled = bool(getattr(ops, "compiled", False))
+
+    def kind(a):
+        return getattr(getattr(a, "dtype", None), "kind", "?")
+
+    def want_mask(name, a):
+        if getattr(a, "dtype", None) != np.bool_:
+            fails.append(f"{name}: mask dtype {getattr(a, 'dtype', None)}, "
+                         f"want bool")
+
+    def want_int(name, a):
+        if kind(a) not in ("i", "u"):
+            fails.append(f"{name}: dtype {getattr(a, 'dtype', None)}, "
+                         f"want integer kind")
+        elif compiled and a.dtype != np.int32:
+            fails.append(f"{name}: device dtype {a.dtype}, want int32 "
+                         f"(staging contract)")
+
+    try:
+        A = ops.asarray
+        want_mask("isin", ops.isin(A(np.array([5, 1, 3], np.int64)), [1, 5]))
+        want_int("scan", ops.scan(0, 4))
+        want_int("arange", ops.arange(4))
+        want_int("nonzero",
+                 ops.nonzero(A(np.array([False, True, True]))))
+        csr = _conf_csr()
+        # device backends cache uploaded CSR twins by id(csr): keep the
+        # fixture alive on the ops instance so its id is never recycled by
+        # a real CSR that would then alias the stale cache entry
+        ops.__dict__.setdefault("_conf_fixtures", []).append(csr)
+        ridx, nbr, epos = ops.expand(csr, A(np.array([0, 1], np.int64)))
+        want_int("expand.row_idx", ridx)
+        want_int("expand.nbr", nbr)
+        want_int("expand.edge_pos", epos)
+        found, ipos = ops.intersect(csr, A(np.array([0, 1], np.int64)),
+                                    A(np.array([12, 8], np.int64)))
+        want_mask("intersect.found", found)
+        want_int("intersect.edge_pos", ipos)
+    except Exception as exc:                           # noqa: BLE001
+        fails.append(f"dtype contract aborted: {type(exc).__name__}: {exc}")
+    return fails
 
 
 def run_operator_conformance(ops: OperatorSet) -> list[str]:
@@ -671,6 +734,11 @@ def run_operator_conformance(ops: OperatorSet) -> list[str]:
 
         if getattr(ops, "supports_chains", False):
             _conformance_chain(ops, fails)
+
+        # operator-boundary dtype contract, pinned on every backend (not
+        # just the jax intersect exit): bool masks, integer id columns,
+        # int32 device staging on compiled backends
+        fails.extend(dtype_contract_failures(ops))
     except Exception as exc:                           # noqa: BLE001
         fails.append(f"conformance aborted: {type(exc).__name__}: {exc}")
     return fails

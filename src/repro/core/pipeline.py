@@ -27,6 +27,7 @@ and the ``EXPLAIN`` / ``PROFILE`` query prefixes in the Cypher parser.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import difflib
 import time
@@ -35,7 +36,7 @@ from typing import Any
 from repro.core import ir
 from repro.core.cardinality import CardEstimator, Statistics
 from repro.core.cbo import GraphOptimizer, annotate_estimates
-from repro.core.errors import PipelineError
+from repro.core.errors import PipelineError, PlanInvariantError
 from repro.core.glogue import GLogue
 from repro.core.pattern import expand_path_edges
 from repro.core.physical import (ExpandChainNode, ExpandNode, JoinNode,
@@ -47,8 +48,14 @@ from repro.core.physical_spec import PhysicalSpec
 from repro.core.rules import DEFAULT_RULES, EXTENDED_RULES, Rule
 from repro.core.schema import GraphSchema
 from repro.core.type_inference import INVALID, infer_types
+from repro.core.verify import PlanVerifier, VerifyReport
 
 PHASES = ("pre", "type_inference", "rbo", "cbo", "post_physical")
+
+# static-verification modes (DESIGN.md §12): "cached" verifies the pipeline
+# output once per canonical plan form; "always" re-verifies after EVERY
+# registered pass so an invalid rewrite raises PlanInvariantError naming it
+VERIFY_MODES = ("off", "cached", "always")
 
 # message rendered for a query type inference proved unsatisfiable
 UNSAT_MESSAGE = "empty result (type inference proved pattern unsatisfiable)"
@@ -107,6 +114,9 @@ class PipelineTrace:
     passes: list[PassTrace]
     wall_s: float = 0.0
     invalid: bool = False
+    # PlanVerifier report of the pipeline output (verify="cached"/"always";
+    # None when verification was off) — EXPLAIN's "-- verify --" section
+    verify: VerifyReport | None = None
 
     def by_name(self, name: str) -> PassTrace | None:
         for t in self.passes:
@@ -169,15 +179,24 @@ class OptimizerPipeline:
     as a fixpoint group, and returns one ``PassTrace`` per pass."""
 
     MAX_RBO_ITERS = 10
+    # memoized clean VerifyReports, keyed by canonical plan form (+ backend
+    # + physical signature): verify="cached" pays the checker once per
+    # distinct plan shape, like the prepared-plan cache pays the optimizer
+    VERIFY_MEMO_SIZE = 512
 
     def __init__(self, passes: tuple[Pass, ...] = (),
-                 capture_diffs: bool = True):
+                 capture_diffs: bool = True, verify: str = "off"):
         self._passes: list[Pass] = []
         # before/after canonical-form snapshots feed the PassTrace diffs
         # that EXPLAIN renders; measured at a few percent of compile time
         # (CBO dominates), but compile-latency-critical embedders can turn
         # them off — traces then carry timings/hits only
         self.capture_diffs = capture_diffs
+        if verify not in VERIFY_MODES:
+            raise PipelineError(f"unknown verify mode {verify!r}; "
+                                f"modes are {VERIFY_MODES}")
+        self.verify = verify
+        self._verified: collections.OrderedDict = collections.OrderedDict()
         for p in passes:
             self.register(p)
 
@@ -238,24 +257,75 @@ class OptimizerPipeline:
     # ----------------------------------------------------------------- drive
     def run(self, ctx: PassContext) -> PipelineTrace:
         t0 = time.perf_counter()
+        mode = ctx.flags.get("verify") or self.verify
+        if mode not in VERIFY_MODES:
+            raise PipelineError(f"unknown verify mode {mode!r}; "
+                                f"modes are {VERIFY_MODES}")
+        # expect_sat flips once the type_inference pass has *proven* the
+        # pattern satisfiable: from then on, a pass whose output is
+        # unsatisfiable broke a valid plan (violation) rather than
+        # discovered an empty result (clean verified-empty short-circuit)
+        state = {"expect_sat": False}
+        check = self._make_checker(ctx, state) if mode == "always" else None
         traces: list[PassTrace] = []
         for phase in PHASES:
             group = [p for p in self._passes if p.phase == phase]
-            if not group:
-                continue
-            if phase == "rbo":
-                traces.extend(self._run_fixpoint(group, ctx))
-            else:
-                for p in group:
-                    traces.append(self._run_one(p, ctx))
-                    if ctx.invalid:
-                        break
+            if group:
+                if phase == "rbo":
+                    traces.extend(self._run_fixpoint(group, ctx, check))
+                else:
+                    for p in group:
+                        traces.append(self._run_one(p, ctx, check))
+                        if ctx.invalid:
+                            break
+            if (phase == "type_inference" and not ctx.invalid
+                    and any(t.name == "type_inference" and not t.skipped
+                            for t in traces)):
+                state["expect_sat"] = True
             if ctx.invalid:
                 break
+        report = self._verify_final(ctx, state) if mode != "off" else None
         return PipelineTrace(traces, wall_s=time.perf_counter() - t0,
-                             invalid=ctx.invalid)
+                             invalid=ctx.invalid, verify=report)
 
-    def _run_one(self, p: Pass, ctx: PassContext) -> PassTrace:
+    # ---------------------------------------------------------- verification
+    def _verifier(self, ctx: PassContext) -> PlanVerifier:
+        return PlanVerifier(ctx.schema, spec=ctx.spec,
+                            store=getattr(ctx.stats, "store", None))
+
+    def _make_checker(self, ctx: PassContext, state: dict):
+        verifier = self._verifier(ctx)
+
+        def check(p: Pass, tr: PassTrace) -> None:
+            report = verifier.verify(ctx.plan, ctx.physical,
+                                     invalid=ctx.invalid,
+                                     expect_satisfiable=state["expect_sat"])
+            if not report.ok:
+                raise PlanInvariantError(report.violations, pass_name=p.name,
+                                         phase=p.phase, trace=tr)
+        return check
+
+    def _verify_final(self, ctx: PassContext, state: dict) -> VerifyReport:
+        key = (ir.canonical_form(ctx.plan), ctx.spec.name,
+               plan_signature(ctx.physical) if ctx.physical is not None
+               else None, ctx.invalid)
+        hit = self._verified.get(key)
+        if hit is not None:
+            self._verified.move_to_end(key)
+            return dataclasses.replace(hit, cached=True)
+        report = self._verifier(ctx).verify(
+            ctx.plan, ctx.physical, invalid=ctx.invalid,
+            expect_satisfiable=state["expect_sat"])
+        if not report.ok:
+            # no offending pass to name: the defect was only detected on
+            # the final output (use verify="always" to bisect)
+            raise PlanInvariantError(report.violations)
+        self._verified[key] = report
+        if len(self._verified) > self.VERIFY_MEMO_SIZE:
+            self._verified.popitem(last=False)
+        return report
+
+    def _run_one(self, p: Pass, ctx: PassContext, check=None) -> PassTrace:
         reason = p.skip(ctx)
         if reason is not None:
             return PassTrace(p.name, p.phase, skipped=reason)
@@ -265,11 +335,14 @@ class OptimizerPipeline:
         dt = time.perf_counter() - t0
         after = (_snapshot(ctx) if changed and self.capture_diffs
                  else before)
-        return PassTrace(p.name, p.phase, wall_s=dt, changed=changed,
-                         hits=int(changed), diff=_diff(before, after))
+        tr = PassTrace(p.name, p.phase, wall_s=dt, changed=changed,
+                       hits=int(changed), diff=_diff(before, after))
+        if check is not None:
+            check(p, tr)
+        return tr
 
-    def _run_fixpoint(self, group: list[Pass],
-                      ctx: PassContext) -> list[PassTrace]:
+    def _run_fixpoint(self, group: list[Pass], ctx: PassContext,
+                      check=None) -> list[PassTrace]:
         """HepPlanner-style driver: apply every eligible rbo pass repeatedly
         until none reports a change (or MAX_RBO_ITERS)."""
         traces = {p.name: PassTrace(p.name, p.phase) for p in group}
@@ -295,6 +368,8 @@ class OptimizerPipeline:
                     tr.hits += 1
                     if self.capture_diffs:
                         tr.diff.extend(_diff(before, _snapshot(ctx)))
+                if check is not None:
+                    check(p, tr)
                 any_changed |= changed
                 if ctx.invalid:     # short-circuit, like the phase driver
                     return [traces[p.name] for p in group]
@@ -602,6 +677,13 @@ class ExplainReport:
         if self.trace is not None:
             lines.append("-- pipeline --")
             lines.extend("  " + l for l in self.trace.render_lines(diffs))
+        vr = self.verify
+        if vr is not None:
+            lines.append("-- verify --")
+            lines.append(f"  status={vr['status']} checks={vr['checks']} "
+                         f"wall={vr['wall_ms']:.3f}ms"
+                         + (" (cached)" if vr["cached"] else ""))
+            lines.extend(f"  violation: {v}" for v in vr["violations"])
         if self.invalid:
             lines.append(UNSAT_MESSAGE)
         else:
@@ -639,6 +721,13 @@ class ExplainReport:
         return self.render()
 
     # convenience accessors used by tests / tooling
+    @property
+    def verify(self) -> dict | None:
+        """``VerifyReport.summary()`` of the pipeline's static verification
+        (None when ``verify="off"`` or the report predates verification)."""
+        rep = getattr(self.trace, "verify", None) if self.trace else None
+        return rep.summary() if rep is not None else None
+
     def pass_names(self) -> list[str]:
         return [t.name for t in self.trace.passes] if self.trace else []
 
