@@ -655,7 +655,6 @@ def run_serve(args) -> dict:
             reqs.append((name, srv.submit(text, params,
                                           arrival_s=base + at)))
         srv.drain()
-        srv.close()
         assert all(r.status == "done" for _, r in reqs)
         batch_span = max(r.finish_s for _, r in reqs) - base - schedule[0][0]
         batch_lat = [r.latency_s for _, r in reqs]
@@ -663,6 +662,31 @@ def run_serve(args) -> dict:
             k = (name, tuple(sorted((r.params or {}).items())))
             if not _tables_equal(ref[k], r.table):
                 mismatches.append(f"{backend}/{name}{r.params}")
+        s = srv.stats.summary()
+        warm_chain_compiles = sum(srv.stats.wave_chain_compiles)
+
+        # containment overhead (DESIGN.md §13): the same saturated epoch
+        # on the default contained path vs ``containment=False`` (the
+        # legacy direct dispatch) — the happy-path cost of the wave
+        # try/except + breaker bookkeeping, gated under 5% (min-of-2
+        # epochs each to shed scheduler noise)
+        def epoch_span(server):
+            ebase = time.perf_counter()
+            ereqs = [server.submit(text, params, arrival_s=ebase + at)
+                     for at, (_n, text, params) in schedule]
+            server.drain()
+            assert all(r.status == "done" for r in ereqs)
+            return max(r.finish_s for r in ereqs) - ebase - schedule[0][0]
+
+        cont_span = min(epoch_span(srv), epoch_span(srv))
+        srv.close()
+        srv0 = gopt.serve(backend=backend, max_wave=args.max_wave,
+                          max_pending=args.requests + 1, overlap=True,
+                          containment=False)
+        epoch_span(srv0)                                         # warmup
+        plain_span = min(epoch_span(srv0), epoch_span(srv0))
+        srv0.close()
+        containment_overhead = cont_span / plain_span - 1.0
 
         # sequential baseline: same schedule, one execute per request at
         # its scheduled arrival
@@ -677,8 +701,6 @@ def run_serve(args) -> dict:
             seq_lat.append(last - at)
         seq_span = last - schedule[0][0]
 
-        s = srv.stats.summary()
-        warm_chain_compiles = sum(srv.stats.wave_chain_compiles)
         rec = {
             "backend": backend,
             "requests": len(schedule),
@@ -700,17 +722,23 @@ def run_serve(args) -> dict:
             "fallbacks": s["fallbacks"],
             "warm_chain_compiles": warm_chain_compiles,
             "compiles_per_wave": s["compiles_per_wave"],
+            "containment_overhead": containment_overhead,
         }
         results.append(rec)
         if warm_chain_compiles:
             regressions.append(f"{backend}: warmed server compiled "
                                f"{warm_chain_compiles} chain program(s)")
+        if containment_overhead > 0.05:
+            regressions.append(
+                f"{backend}: containment overhead "
+                f"{containment_overhead * 100:.1f}% > 5% on the happy path")
         print(f"{backend}: batched {rec['batched_throughput_rps']:.1f} rps "
               f"(p99 {rec['batched_p99_ms']:.0f}ms) vs sequential "
               f"{rec['sequential_throughput_rps']:.1f} rps "
               f"(p99 {rec['sequential_p99_ms']:.0f}ms) -> "
               f"{rec['throughput_speedup']:.2f}x, "
-              f"{s['waves']} waves mean={s['mean_wave_size']:.1f}",
+              f"{s['waves']} waves mean={s['mean_wave_size']:.1f}, "
+              f"containment overhead {containment_overhead * 100:+.1f}%",
               flush=True)
 
     speedups = [r["throughput_speedup"] for r in results]

@@ -1,0 +1,197 @@
+#!/usr/bin/env python
+"""Chaos smoke for CI (scripts/ci.sh): fault-tolerant serving
+(DESIGN.md §13). A seeded ``FaultPlan`` injects a known schedule of
+transient flakes, a permanent per-binding poison, fused-chain faults and
+an artificial latency spike into a mixed read/write stream through the
+QueryServer, and the gate holds the containment layer to account:
+
+- zero limbo — every admitted request ends in exactly one terminal
+  status (done / failed / dropped / cancelled), conservation exact;
+- parity — every successful read is row-identical to a fault-free run;
+- isolation — the poison binding alone fails (co-batched requests
+  succeed via bisection) and is quarantined at admission on repeat;
+- recovery — chain faults trip the breaker to the per-hop rung and
+  half-open probes walk it back to the fused rung once the fault drains;
+- schedule match — the serve counters and the fault ledgers match the
+  injected schedule *exactly* (no spurious retries, no lost failures).
+
+Usage: PYTHONPATH=src python scripts/chaos_smoke.py [--sf 0.05]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(1, ".")
+
+import numpy as np                                                 # noqa: E402
+
+from repro.core.gopt import GOpt                                   # noqa: E402
+from repro.graphdb.delta import MutableGraphStore                  # noqa: E402
+from repro.graphdb.faults import (FaultPlan, FaultRule,            # noqa: E402
+                                  faulty_spec)
+from repro.graphdb.ldbc import generate_ldbc                       # noqa: E402
+from repro.graphdb.serve import ServeQuarantined                   # noqa: E402
+
+SIMPLE = ("MATCH (p:PERSON)-[:KNOWS]->(q:PERSON) "
+          "WHERE p.id = $pid RETURN q.id AS friend")
+CHAIN = ("MATCH (p:PERSON)-[:KNOWS]->(q:PERSON)-[:LIKES]->(m:POST) "
+         "WHERE p.id = $pid RETURN q.id AS friend, m.id AS post")
+
+POISON_PID = 13          # rule A: permanently poisoned binding
+LATENCY_PID = 7          # rule D: latency spike -> deadline abort
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"CHAOS SMOKE FAIL: {msg}")
+        sys.exit(1)
+
+
+def rows(tbl):
+    ks = sorted(tbl.cols)
+    if tbl.nrows == 0:
+        return []
+    return sorted(zip(*[np.asarray(tbl.cols[k]).tolist() for k in ks]))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.05)
+    ap.add_argument("--backend", default="jax")
+    args = ap.parse_args()
+    base = generate_ldbc(sf=args.sf, seed=7)
+    gopt = GOpt(MutableGraphStore(base))
+    clean = GOpt(base, backend="numpy")     # fault-free parity oracle
+
+    # the injected schedule (see the module docstring's accounting):
+    # A: poison one binding everywhere -> bisection + quarantine
+    # B: two transient expand flakes on the very first wave -> retries
+    # C: three permanent fused-chain faults -> breaker trip/probe/recover
+    # D: 60ms latency spike on one binding -> cooperative deadline abort
+    rules = [
+        FaultRule(op="bind", kind="permanent", value=POISON_PID, count=None),
+        FaultRule(op="expand", kind="transient", after=0, count=2),
+        FaultRule(op="chain", kind="permanent", after=0, count=3),
+        FaultRule(op="bind", kind="latency", latency_s=0.06,
+                  value=LATENCY_PID, count=1),
+    ]
+    plan = FaultPlan(rules, seed=3)
+    # the degradation ladder's last rung must ALSO see the poison, or the
+    # "permanent" binding would quietly succeed on clean numpy
+    fb_plan = FaultPlan([rules[0]], seed=3)
+    spec = faulty_spec(args.backend, plan)
+    fb_spec = faulty_spec("numpy", fb_plan)
+    srv = gopt.serve(backend=spec, overlap=False, fallback_spec=fb_spec,
+                     probe_after=2, quarantine_after=2, breaker_threshold=99)
+    tracked = []
+
+    # ---- phase A: transient flakes clear under bounded retry
+    wave_a = [srv.submit(SIMPLE, {"pid": p}) for p in (1, 2, 3, 4)]
+    srv.drain()
+    tracked += wave_a
+    check(all(r.status == "done" for r in wave_a),
+          f"transient wave not clean: {[r.status for r in wave_a]}")
+    check(srv.stats.retries == 2,
+          f"retries={srv.stats.retries}, schedule says exactly 2")
+
+    # ---- phase B: poison isolation by bisection, then quarantine
+    wave_b = [srv.submit(SIMPLE, {"pid": p})
+              for p in (10, POISON_PID, 20, 25)]
+    srv.drain()
+    tracked += wave_b
+    statuses = [r.status for r in wave_b]
+    check(statuses == ["done", "failed", "done", "done"],
+          f"poison not isolated: {statuses}")
+    check(wave_b[1].error is not None and wave_b[1].error.kind == "permanent",
+          f"poison error misclassified: {wave_b[1].error}")
+    retry = srv.submit(SIMPLE, {"pid": POISON_PID})
+    srv.drain()
+    tracked.append(retry)
+    check(retry.status == "failed", "poison resubmit did not fail")
+    try:
+        srv.submit(SIMPLE, {"pid": POISON_PID})
+        check(False, "repeat offender was admitted")
+    except ServeQuarantined:
+        pass
+    check(srv.stats.quarantined == 1, "quarantine not counted")
+    check(srv.stats.bisections == 2,
+          f"bisections={srv.stats.bisections}, schedule says exactly 2")
+
+    # ---- phase C: chain faults trip the breaker; probes recover it
+    wave_c = []
+    for i in range(14):
+        r = srv.submit(CHAIN, {"pid": 30 + i})
+        srv.drain()
+        wave_c.append(r)
+    tracked += wave_c
+    check(all(r.status == "done" for r in wave_c),
+          "chain faults leaked out of the ladder")
+    key_c = next(k for k, b in srv._breakers.items() if b["trips"])
+    b = srv._breakers[key_c]
+    check((b["trips"], b["probes"], b["recoveries"], b["level"])
+          == (1, 3, 1, 0),
+          f"breaker did not trip/probe/recover as scheduled: {b}")
+
+    # ---- phase D: latency spike + deadline -> cooperative abort
+    late = srv.submit(SIMPLE, {"pid": LATENCY_PID},
+                      deadline_s=time.perf_counter() + 0.02)
+    srv.drain()
+    tracked.append(late)
+    check(late.status == "dropped" and srv.stats.deadline_aborts == 1,
+          f"deadline abort missing: {late.status}, "
+          f"aborts={srv.stats.deadline_aborts}")
+
+    # ---- phase E: write containment — one bad mutation fails alone
+    w_ok = srv.submit_update("insert_vertex", "PERSON", {"id": 900_000})
+    w_bad = srv.submit_update("insert_edge", "NOT-AN-EDGE-TYPE", 0, 1)
+    srv.drain()
+    tracked += [w_ok, w_bad]
+    check(w_ok.status == "done" and w_bad.status == "failed",
+          f"write containment broken: {w_ok.status}/{w_bad.status}")
+
+    # ---- phase F: close() cancels the queued remainder
+    tail = srv.submit(SIMPLE, {"pid": 2})
+    tracked.append(tail)
+    srv.close()
+    check(tail.status == "cancelled", "queued request not cancelled at close")
+
+    # ---- zero limbo + exact conservation
+    terminal = {"done", "failed", "dropped", "cancelled"}
+    check(all(r.status in terminal for r in tracked),
+          f"limbo: { {r.status for r in tracked} - terminal }")
+    s = srv.stats.summary()
+    check(s["submitted"] == s["completed"] + s["failed"] + s["dropped"]
+          + s["cancelled"],
+          f"conservation broken: {s['submitted']} submitted vs "
+          f"{s['completed']}+{s['failed']}+{s['dropped']}+{s['cancelled']}")
+    check(s["failed"] == 3 and s["dropped"] == 1 and s["cancelled"] == 1
+          and s["worker_respawns"] == 0,
+          f"terminal counters off schedule: {s}")
+
+    # ---- parity: every successful read matches the fault-free oracle
+    for r in tracked:
+        if r.status != "done" or r.prepared is None:
+            continue
+        src = r.prepared.source
+        ref, _ = clean.run(src, params=r.params)
+        check(rows(r.table) == rows(ref),
+              f"row parity broken for pid={r.params['pid']}")
+
+    # ---- schedule match on the fault ledgers themselves
+    # A fires 6x on the primary (4-wave bisect: 3, escalation: 1; resubmit:
+    # 1 + escalation: 1) and 2x on the fallback rung; B 2x; C 3x; D 1x.
+    check(plan.fired == 12, f"primary ledger fired {plan.fired}, want 12")
+    check(fb_plan.fired == 2, f"fallback ledger fired {fb_plan.fired}, want 2")
+
+    print(f"chaos smoke OK: {len(tracked)} requests all terminal "
+          f"({s['completed']} done / {s['failed']} failed / "
+          f"{s['dropped']} dropped / {s['cancelled']} cancelled), "
+          f"retries={s['retries']} bisections={s['bisections']} "
+          f"quarantined={s['quarantined']} breaker=1 trip/3 probes/1 "
+          f"recovery, {plan.fired + fb_plan.fired} injected faults "
+          f"all accounted for")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,8 @@ python scripts/explain_smoke.py
 
 # contract lints (DESIGN.md §12.4): AST checks that the device backends'
 # data plane stays host-array-free, jit compiles / transfers hit their
-# ledgers, and serve.py holds its lock discipline — zero violations
+# ledgers, serve.py holds its lock discipline, and the serving path never
+# swallows a broad exception without recording it — zero violations
 echo "== contract lints =="
 python tools/lint_contracts.py --strict
 
@@ -70,6 +71,15 @@ python scripts/sharded_smoke.py
 # preserve row parity, bump the stats epoch and re-pin warmed plans
 echo "== mutation smoke =="
 python scripts/mutation_smoke.py
+
+# chaos gate (DESIGN.md §13): a seeded fault schedule (transient flakes,
+# a poison binding, fused-chain faults, a latency spike) injected into a
+# mixed read/write stream must leave zero requests in limbo, keep every
+# successful read row-identical to a fault-free run, isolate + quarantine
+# the poison binding, trip and then recover the degradation breaker, and
+# match the serve counters to the injected schedule exactly
+echo "== chaos smoke =="
+python scripts/chaos_smoke.py
 
 echo "== tier-1 tests =="
 # test_pipeline.py already ran (and failed fast) in the parity gate above

@@ -59,6 +59,94 @@ class PlanInvariantError(GOptError, AssertionError):
         super().__init__("\n".join(lines))
 
 
+class ExecError(GOptError, RuntimeError):
+    """Structured execution failure (DESIGN.md §13).
+
+    Classifies a failed operator/plan execution for the serving layer's
+    containment machinery: ``kind`` is ``"transient"`` (retry may succeed:
+    capacity overflow, injected flake, lost device), ``"permanent"`` (the
+    binding or plan is poison — retrying the same work cannot help), or
+    ``"deadline"`` (the request's budget expired mid-execution).  The
+    remaining fields carry the failure's context: the operator boundary it
+    surfaced at, the engine phase tag active at the time (``pattern`` /
+    ``tail`` / ``deliver``), the plan cache key, how many attempts were
+    made, and the underlying exception (also chained via ``__cause__``).
+    """
+
+    kind: str = "permanent"
+
+    def __init__(self, message: str, *, kind: str | None = None,
+                 operator: str | None = None, phase: str | None = None,
+                 plan=None, attempts: int = 1,
+                 cause: BaseException | None = None):
+        if kind is not None:
+            self.kind = kind
+        self.operator = operator
+        self.phase = phase
+        self.plan = plan
+        self.attempts = attempts
+        self.cause = cause
+        ctx = [f"kind={self.kind}"]
+        if operator:
+            ctx.append(f"op={operator}")
+        if phase:
+            ctx.append(f"phase={phase}")
+        if plan is not None:
+            # plan cache keys embed the whole normalized query; keep the
+            # message scannable, the full key stays on ``self.plan``
+            p = str(plan).replace("\n", " ")
+            ctx.append(f"plan={p[:60]}…" if len(p) > 60 else f"plan={p}")
+        if attempts != 1:
+            ctx.append(f"attempts={attempts}")
+        super().__init__(f"{message} [{', '.join(ctx)}]")
+        if cause is not None:
+            self.__cause__ = cause
+
+    @property
+    def transient(self) -> bool:
+        return self.kind == "transient"
+
+
+class TransientExecError(ExecError):
+    """An execution failure that a bounded retry may clear (capacity
+    overflow, flaky kernel dispatch, lost device)."""
+
+    kind = "transient"
+
+
+class PermanentExecError(ExecError):
+    """An execution failure retrying cannot fix: the binding or plan is
+    poison for this backend."""
+
+    kind = "permanent"
+
+
+class DeadlineExceeded(ExecError):
+    """A request's ``deadline_s`` expired mid-execution; the engine aborted
+    the tail cooperatively (checked between operators, DESIGN.md §13.4)."""
+
+    kind = "deadline"
+
+
+#: exception types that are transient by nature even when raised outside
+#: the structured taxonomy (OS-level hiccups, queue overflow).
+_TRANSIENT_TYPES = (TimeoutError, ConnectionError, InterruptedError)
+
+
+def classify_error(exc: BaseException) -> str:
+    """Map an arbitrary execution exception to an ``ExecError`` kind.
+
+    Structured errors carry their own ``kind``; OS-flavored hiccups are
+    transient; everything else defaults to permanent so unknown failures
+    never trigger a retry storm.
+    """
+    if isinstance(exc, ExecError):
+        return exc.kind
+    if isinstance(exc, _TRANSIENT_TYPES):
+        return "transient"
+    return "permanent"
+
+
 class ParamError(GOptError, LookupError):
     """A query-parameter problem, naming the offending parameters and the
     declared set."""

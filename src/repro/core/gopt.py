@@ -490,7 +490,8 @@ class GOpt:
                 params: dict | None = None,
                 chain_dispatch: bool = True,
                 sync_per_op: bool = False,
-                snapshot=None
+                snapshot=None,
+                deadline_s: float | None = None
                 ) -> tuple[Table, ExecStats]:
         if opt.invalid:
             return Table.empty(), ExecStats()
@@ -500,7 +501,7 @@ class GOpt:
         eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
                      max_rows=max_rows, backend=spec,
                      chain_dispatch=chain_dispatch, sync_per_op=sync_per_op,
-                     snapshot=snapshot)
+                     snapshot=snapshot, deadline_s=deadline_s)
         return eng.run(opt.logical, opt.physical, params=params)
 
     def execute_batch(self, opt: OptimizedQuery, bindings: list[dict | None],
@@ -509,7 +510,8 @@ class GOpt:
                       max_rows: int = 100_000_000,
                       backend: str | PhysicalSpec | None = None,
                       chain_dispatch: bool = True,
-                      snapshot=None
+                      snapshot=None,
+                      deadline_s: float | None = None
                       ) -> list[tuple[Table, ExecStats]]:
         """Vectorized sibling of ``execute``: one engine pattern pass for a
         whole binding batch (``Engine.run_batch``), with the relational
@@ -521,7 +523,8 @@ class GOpt:
         spec = self.spec if backend is None else get_spec(backend)
         eng = Engine(self.store, fuse_expand=fuse, trim_fields=trim_fields,
                      max_rows=max_rows, backend=spec,
-                     chain_dispatch=chain_dispatch, snapshot=snapshot)
+                     chain_dispatch=chain_dispatch, snapshot=snapshot,
+                     deadline_s=deadline_s)
         return eng.run_batch(opt.logical, opt.physical, bindings)
 
     def run(self, query: str | ir.LogicalPlan, params: dict | None = None,

@@ -221,6 +221,41 @@ class ExchangeStats:
         return out
 
 
+class FaultStats:
+    """Injected-fault ledger — the fourth sibling of ``TransferStats`` /
+    ``KernelStats`` / ``ExchangeStats``, owned by fault-wrapped operator
+    sets (``graphdb/faults.py``, DESIGN.md §13).
+
+    A ``FaultPlan`` wrapper records one event per injection it performs
+    (``kind`` in ``transient`` / ``permanent`` / ``capacity`` /
+    ``latency``) with the operator boundary it fired at.  Clean backends
+    never record and the summary stays empty, so the serving layer's
+    failure accounting can always read the ledger unconditionally."""
+
+    def __init__(self):
+        self.events: list[tuple[str, str, int]] = []   # (kind, op, n)
+
+    def record(self, kind: str, op: str, n: int = 1):
+        self.events.append((kind, op, int(n)))
+
+    def reset(self):
+        self.events.clear()
+
+    def mark(self) -> int:
+        return len(self.events)
+
+    def count(self, kind: str | None = None, op: str | None = None,
+              since: int = 0) -> int:
+        return sum(n for k, o, n in self.events[since:]
+                   if (kind is None or k == kind) and (op is None or o == op))
+
+    def summary(self, since: int = 0) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for k, o, n in self.events[since:]:
+            out[f"{k}:{o}"] = out.get(f"{k}:{o}", 0) + n
+        return out
+
+
 class OperatorSet:
     """Physical operator implementations bound to one ``GraphStore``.
 
@@ -254,6 +289,7 @@ class OperatorSet:
         self.transfer_stats = TransferStats()
         self.kernel_stats = KernelStats()
         self.exchange_stats = ExchangeStats()
+        self.fault_stats = FaultStats()
 
     def reset_ledgers(self):
         """Clear the instrumentation ledgers.  Operator sets are shared
@@ -264,6 +300,7 @@ class OperatorSet:
         self.transfer_stats.reset()
         self.kernel_stats.reset()
         self.exchange_stats.reset()
+        self.fault_stats.reset()
 
     # ------------------------------------------------- array primitives (v2)
     def asarray(self, values):

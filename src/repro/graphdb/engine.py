@@ -46,7 +46,7 @@ import time
 import numpy as np
 
 from repro.core import ir
-from repro.core.errors import ParamError
+from repro.core.errors import DeadlineExceeded, ExecError, ParamError
 from repro.core.pattern import Pattern, PatternEdge
 from repro.core.physical import (ExpandChainNode, ExpandNode, JoinNode,
                                  PlanNode, ScanNode)
@@ -141,6 +141,9 @@ class ExecStats:
     # batch tail fell back to the per-binding loop, {"chain_param": 1} when
     # a fused chain declined a slot value.  Empty on a fully fast-path run.
     fallbacks: dict = dataclasses.field(default_factory=dict)
+    # injected-fault summary ({"kind:op": n}) from the backend's FaultStats
+    # ledger (graphdb/faults.py); None when no wrapper injected anything
+    faults: dict | None = None
 
     def log(self, opname: str, rows: int, secs: float = 0.0):
         self.rows_produced += rows
@@ -156,11 +159,16 @@ class Engine:
                  trim_fields: bool = True, max_rows: int = 100_000_000,
                  backend: str | PhysicalSpec | OperatorSet = "numpy",
                  chain_dispatch: bool = True, sync_per_op: bool = False,
-                 snapshot=None):
+                 snapshot=None, deadline_s: float | None = None):
         self.store = store
         self.fuse_expand = fuse_expand
         self.trim_fields = trim_fields
         self.max_rows = max_rows
+        # absolute time.perf_counter() budget: checked cooperatively
+        # *between* operators (DESIGN.md §13.4) so an expired request
+        # aborts the tail with DeadlineExceeded instead of completing
+        # uselessly; None disables the checks
+        self.deadline_s = deadline_s
         # chain_dispatch=False keeps ExpandChainNodes on the per-hop loop
         # (the fused path's parity oracle); sync_per_op=True blocks on the
         # device after every operator so op_times are true device times
@@ -200,6 +208,27 @@ class Engine:
             self.ops.block_ready(tbl.cols)
         return time.perf_counter() - t0
 
+    def _offer_bindings(self, bound: list[dict]):
+        """Present this execution's parameter bindings to the operator set
+        before any work starts.  Plain backends ignore it; fault-injecting
+        wrappers (graphdb.faults) use it as the ``bind`` boundary — the one
+        place a *binding value* is visible below the engine, which is what
+        makes deterministic per-binding poison (and its bisection by the
+        serving layer) possible."""
+        hook = getattr(self.ops, "binding_boundary", None)
+        if hook is not None:
+            for b in bound:
+                hook(b)
+
+    def _check_deadline(self, label: str):
+        """Cooperative deadline check, called between operators — never
+        inside one, so compiled dispatches finish atomically."""
+        if (self.deadline_s is not None
+                and time.perf_counter() > self.deadline_s):
+            raise DeadlineExceeded(
+                f"deadline_s expired before {label}", operator=label,
+                phase=self.ops.transfer_stats.phase or None)
+
     # ================================================================ pattern
     def _check(self, n, label: str):
         if n > self.max_rows:
@@ -208,6 +237,8 @@ class Engine:
 
     @staticmethod
     def _annotate_blowup(exc: RuntimeError, label: str):
+        if isinstance(exc, ExecError):
+            raise exc        # structured failures keep their classification
         raise RuntimeError(f"{exc} in {label}") from None
 
     def _scan(self, pattern: Pattern, alias: str, stats: ExecStats) -> Table:
@@ -493,6 +524,7 @@ class Engine:
 
     def exec_pattern(self, pattern: Pattern, node: PlanNode,
                      stats: ExecStats) -> Table:
+        self._check_deadline(type(node).__name__)
         if isinstance(node, ScanNode):
             return self._scan(pattern, node.alias, stats)
         if isinstance(node, ExpandNode):
@@ -649,6 +681,7 @@ class Engine:
                           tbl.nrows)
         sizes = []
         for s in node.steps:
+            self._check_deadline(f"hop(+{s.alias})")
             if cur.nrows == 0:
                 sizes.append(0)
                 continue
@@ -833,15 +866,18 @@ class Engine:
         backend-native binding table with ``ops.to_host`` exactly once,
         here at delivery — never between plan steps."""
         self._params = self.bind_params(plan, params)
+        self._offer_bindings([self._params])
         stats = ExecStats()
         t0 = time.perf_counter()
         ops, pattern, node = self._plan_head(plan, pattern_plan)
         ts = self.ops.transfer_stats
         ks = self.ops.kernel_stats
         es = self.ops.exchange_stats
+        fs = self.ops.fault_stats
         mark = ts.mark()
         kmark = ks.mark()
         emark = es.mark()
+        fmark = fs.mark()
         ts.set_phase("pattern")
         try:
             tbl = self.exec_pattern(pattern, node, stats)
@@ -856,6 +892,7 @@ class Engine:
         stats.transfers = ts.summary(mark)
         stats.kernels = ks.summary(kmark)
         stats.exchanges = es.summary(emark) or None
+        stats.faults = fs.summary(fmark) or None
         return tbl, stats
 
     def run_batch(self, plan: ir.LogicalPlan,
@@ -874,11 +911,13 @@ class Engine:
         bound = [self.bind_params(plan, b) for b in bindings]
         if not bound:
             return []
+        self._offer_bindings(bound)
         ops, pattern, node = self._plan_head(plan, pattern_plan)
         ts = self.ops.transfer_stats
         mark = ts.mark()
         kmark = self.ops.kernel_stats.mark()
         emark = self.ops.exchange_stats.mark()
+        fmark = self.ops.fault_stats.mark()
         shared = ExecStats()
         t0 = time.perf_counter()
         self._batch = bound
@@ -901,16 +940,30 @@ class Engine:
         env = (ops, tbl, bound, deferred, shared, pattern_s,
                pattern_transfers, pattern_kernels, pattern_exchanges)
         reason = None
+        results = None
         if len(bound) > 1:
             if self._tail_stackable(ops[1:]):
                 try:
-                    return self._run_tails_stacked(*env)
+                    results = self._run_tails_stacked(*env)
+                except ExecError:
+                    # structured failures (deadline aborts, injected faults)
+                    # belong to the containment layer, not the loop fallback
+                    raise
                 except RuntimeError:
                     # fall back to the binding loop
                     reason = "stacked_tail_error"
             else:
                 reason = "tail_unstackable"
-        return self._run_tails_loop(*env, reason=reason)
+        if results is None:
+            results = self._run_tails_loop(*env, reason=reason)
+        # the batch shares one execution, so any injected-fault window
+        # describes the batch and is attributed to every binding (like the
+        # shared pattern phase's kernels/transfers)
+        fsum = self.ops.fault_stats.summary(fmark)
+        if fsum:
+            for _, st in results:
+                st.faults = dict(fsum)
+        return results
 
     @staticmethod
     def _tail_stackable(rel_ops) -> bool:
@@ -1108,6 +1161,7 @@ class Engine:
         ``__seg``-stacked batch table, row-identical per segment to running
         the plain operator on that segment alone.  The stack is segment-
         major throughout (every operator preserves or re-establishes it)."""
+        self._check_deadline(type(op).__name__)
         t0 = time.perf_counter()
         seg = tbl.cols["__seg"]
         if isinstance(op, ir.Select):
@@ -1168,6 +1222,7 @@ class Engine:
         raise RuntimeError(f"stacked tail: unsupported operator {op!r}")
 
     def _run_relational(self, tbl: Table, op, stats: ExecStats) -> Table:
+        self._check_deadline(type(op).__name__)
         t0 = time.perf_counter()
         if isinstance(op, ir.Select):
             if tbl.nrows:

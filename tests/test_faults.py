@@ -1,0 +1,302 @@
+"""Fault injection + containment (DESIGN.md §13).
+
+1. ``FaultPlan``: seeded deterministic schedules — same plan, same stream,
+   same injections; ``reset()`` replays exactly; rule validation.
+2. ``FaultyOperatorSet`` is a *conforming* wrapper: with no armed rules it
+   passes the OperatorSet-v2 conformance suite for numpy and jax, and the
+   inner ledgers (transfer/kernel/exchange) flow through while the fault
+   ledger is the wrapper's own.
+3. ``ExecError`` taxonomy + ``classify_error``.
+4. Cooperative engine deadlines: ``deadline_s`` aborts mid-execution with
+   a structured ``DeadlineExceeded``; a generous budget is a no-op.
+5. Serving containment: transient retries (exact schedule), poison-binding
+   bisection (healthy co-batched requests succeed), quarantine, the
+   degradation-ladder breaker (trip -> degraded -> probe -> recovery),
+   deadline aborts, worker respawn (crashed wave re-formed exactly once)
+   and ``close()`` cancellation — every request exactly one terminal state.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.errors import (DeadlineExceeded, ExecError, ParamError,
+                               PermanentExecError, TransientExecError,
+                               classify_error)
+from repro.core.gopt import GOpt
+from repro.core.physical_spec import FaultStats, validate_operator_set
+from repro.graphdb.faults import (FAULT_POINTS, FaultPlan, FaultRule,
+                                  FaultyOperatorSet, InjectedFault,
+                                  faulty_spec)
+from repro.graphdb.serve import ServeQuarantined
+
+SIMPLE = ("MATCH (p:PERSON)-[:KNOWS]->(q:PERSON) "
+          "WHERE p.id = $pid RETURN q.id AS friend")
+CHAIN = ("MATCH (p:PERSON)-[:KNOWS]->(q:PERSON)-[:LIKES]->(m:POST) "
+         "WHERE p.id = $pid RETURN q.id AS friend, m.id AS post")
+
+
+@pytest.fixture()
+def tiny_gopt(tiny_store):
+    return GOpt(tiny_store)
+
+
+# ------------------------------------------------------------------ FaultPlan
+
+def test_fault_plan_schedule_is_deterministic():
+    def trial():
+        plan = FaultPlan([FaultRule(op="expand", after=1, count=2),
+                          FaultRule(op="scan", p=0.5, count=None)], seed=11)
+        out = []
+        for _ in range(6):
+            out.append(plan.check("expand") is not None)
+            out.append(plan.check("scan") is not None)
+        return out, plan.fired
+    a, b = trial(), trial()
+    assert a == b
+    plan = FaultPlan([FaultRule(op="scan", p=0.5, count=None)], seed=11)
+    first = [plan.check("scan") is not None for _ in range(8)]
+    plan.reset()
+    assert [plan.check("scan") is not None for _ in range(8)] == first
+
+
+def test_fault_plan_after_count_window():
+    plan = FaultPlan([FaultRule(op="join", after=2, count=2)])
+    fired = [plan.check("join") is not None for _ in range(6)]
+    assert fired == [False, False, True, True, False, False]
+    assert plan.fired == 2
+
+
+def test_fault_rule_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultRule(kind="catastrophic")
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultRule(op="frobnicate")
+    assert "bind" in FAULT_POINTS and "chain" in FAULT_POINTS
+
+
+def test_value_matched_rules_need_explicit_op():
+    plan = FaultPlan([FaultRule(op="*", kind="permanent", count=None)])
+    # wildcards cover logical operators, not primitives / bind
+    assert plan.check("full", (5, 0), wildcard=False) is None
+    assert plan.check("expand") is not None
+
+
+# ------------------------------------------------------- conforming wrapper
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_faulty_wrapper_passes_conformance(tiny_store, backend):
+    spec = faulty_spec(backend, FaultPlan([]))
+    ops = spec.operators(tiny_store)
+    assert isinstance(ops, FaultyOperatorSet)
+    validate_operator_set(ops, conformance=True)
+
+
+def test_wrapper_ledgers_delegate_except_faults(tiny_store):
+    plan = FaultPlan([FaultRule(op="scan", kind="transient")])
+    ops = faulty_spec("numpy", plan).operators(tiny_store)
+    assert ops.transfer_stats is ops.inner.transfer_stats
+    assert isinstance(ops.fault_stats, FaultStats)
+    with pytest.raises(InjectedFault) as ei:
+        ops.scan("PERSON")
+    assert ei.value.transient
+    assert ops.fault_stats.summary() == {"transient:scan": 1}
+    ops.reset_ledgers()
+    assert ops.fault_stats.summary() == {}
+
+
+def test_injected_fault_carries_context(tiny_store):
+    plan = FaultPlan([FaultRule(op="scan", kind="permanent")])
+    ops = faulty_spec("numpy", plan).operators(tiny_store)
+    with pytest.raises(InjectedFault) as ei:
+        ops.scan("PERSON")
+    assert ei.value.kind == "permanent" and ei.value.operator == "scan"
+
+
+# ------------------------------------------------------------ error taxonomy
+
+def test_exec_error_taxonomy():
+    e = ExecError("boom", operator="expand", phase="pattern", plan="k")
+    assert e.kind == "permanent" and not e.transient
+    assert "op=expand" in str(e) and "phase=pattern" in str(e)
+    assert TransientExecError("x").transient
+    assert not PermanentExecError("x").transient
+    assert DeadlineExceeded("x").kind == "deadline"
+    assert isinstance(e, RuntimeError)
+
+
+def test_exec_error_truncates_plan_context():
+    e = ExecError("boom", plan="q" * 200)
+    assert len(str(e)) < 150 and e.plan == "q" * 200
+
+
+def test_classify_error():
+    assert classify_error(TransientExecError("x")) == "transient"
+    assert classify_error(DeadlineExceeded("x")) == "deadline"
+    assert classify_error(TimeoutError()) == "transient"
+    assert classify_error(ConnectionError()) == "transient"
+    assert classify_error(ValueError("x")) == "permanent"
+    assert classify_error(RuntimeError("x")) == "permanent"
+
+
+# --------------------------------------------------------- engine deadlines
+
+def test_deadline_aborts_mid_execution(tiny_gopt):
+    with pytest.raises(DeadlineExceeded) as ei:
+        tiny_gopt.run(SIMPLE, params={"pid": 1},
+                      deadline_s=time.perf_counter() - 1.0)
+    assert ei.value.kind == "deadline" and ei.value.operator
+
+
+def test_generous_deadline_is_noop(tiny_gopt):
+    tbl, _ = tiny_gopt.run(SIMPLE, params={"pid": 1},
+                           deadline_s=time.perf_counter() + 60.0)
+    ref, _ = tiny_gopt.run(SIMPLE, params={"pid": 1})
+    np.testing.assert_array_equal(np.asarray(tbl.cols["friend"]),
+                                  np.asarray(ref.cols["friend"]))
+
+
+def test_deadline_survives_engine_fallbacks(tiny_gopt):
+    # run_batch's stacked-tail fallback catches RuntimeError; the deadline
+    # (an ExecError subclass) must pass through, not get swallowed
+    pq = tiny_gopt.prepare(SIMPLE)
+    with pytest.raises(DeadlineExceeded):
+        pq.execute_many([{"pid": 1}, {"pid": 2}], batch=True,
+                        deadline_s=time.perf_counter() - 1.0)
+
+
+# ------------------------------------------------------- serving containment
+
+def test_transient_faults_retry_to_success(tiny_gopt):
+    plan = FaultPlan([FaultRule(op="expand", kind="transient", count=2)])
+    srv = tiny_gopt.serve(backend=faulty_spec("numpy", plan), overlap=False)
+    r = srv.submit(SIMPLE, {"pid": 3})
+    srv.drain()
+    srv.close()
+    assert r.status == "done" and r.error is None
+    assert srv.stats.retries == 2 and srv.stats.failed == 0
+    assert plan.fired == 2
+
+
+def test_poison_binding_is_bisected_and_quarantined(tiny_gopt):
+    rule = FaultRule(op="bind", kind="permanent", value=13, count=None)
+    srv = tiny_gopt.serve(
+        backend=faulty_spec("numpy", FaultPlan([rule])), overlap=False,
+        # the ladder's numpy rung must also see the poison, or a "poison"
+        # binding would quietly succeed there
+        fallback_spec=faulty_spec("numpy", FaultPlan([rule])),
+        quarantine_after=2, breaker_threshold=99)
+    reqs = [srv.submit(SIMPLE, {"pid": p}) for p in (10, 13, 20, 25)]
+    srv.drain()
+    assert [r.status for r in reqs] == ["done", "failed", "done", "done"]
+    assert reqs[1].error.kind == "permanent"
+    assert srv.stats.bisections == 2 and srv.stats.failed == 1
+    # healthy co-batched requests match a fault-free run
+    ref, _ = tiny_gopt.run(SIMPLE, params={"pid": 10})
+    np.testing.assert_array_equal(np.asarray(reqs[0].table.cols["friend"]),
+                                  np.asarray(ref.cols["friend"]))
+    # second failure of the same binding -> quarantined at admission
+    r2 = srv.submit(SIMPLE, {"pid": 13})
+    srv.drain()
+    assert r2.status == "failed"
+    with pytest.raises(ServeQuarantined):
+        srv.submit(SIMPLE, {"pid": 13})
+    assert srv.stats.quarantined == 1
+    # other bindings still admitted
+    r3 = srv.submit(SIMPLE, {"pid": 10})
+    srv.drain()
+    srv.close()
+    assert r3.status == "done"
+
+
+def test_breaker_ladder_trips_probes_and_recovers(gopt_small):
+    plan = FaultPlan([FaultRule(op="chain", kind="permanent", count=3)])
+    srv = gopt_small.serve(backend=faulty_spec("jax", plan), overlap=False,
+                           probe_after=2)
+    for i in range(14):
+        r = srv.submit(CHAIN, {"pid": i})
+        srv.drain()
+        assert r.status == "done", (i, r.status, r.error)
+    (key, b), = srv._breakers.items()
+    assert b["trips"] == 1 and b["probes"] == 3 and b["recoveries"] == 1
+    assert b["level"] == 0      # fully recovered to the fused rung
+    assert srv.stats.breaker_trips == 1
+    assert srv.stats.breaker_recoveries == 1
+    # the breaker state shows up in EXPLAIN's serve section
+    rep = srv.explain(CHAIN, params={"pid": 0})
+    srv.close()
+    assert rep.serve["breaker"]["trips"] == 1
+
+
+def test_latency_fault_plus_deadline_aborts(tiny_gopt):
+    plan = FaultPlan([FaultRule(op="bind", kind="latency", latency_s=0.06,
+                                value=5, count=1)])
+    srv = tiny_gopt.serve(backend=faulty_spec("numpy", plan), overlap=False)
+    r = srv.submit(SIMPLE, {"pid": 5},
+                   deadline_s=time.perf_counter() + 0.02)
+    srv.drain()
+    srv.close()
+    assert r.status == "dropped"
+    assert srv.stats.deadline_aborts == 1 and srv.stats.failed == 0
+
+
+def test_worker_crash_respawns_and_reforms_wave_once(tiny_gopt):
+    srv = tiny_gopt.serve(backend="numpy", overlap=True)
+    orig, crashes = srv._run_wave, {"n": 0}
+
+    def crashing(key, reqs):
+        if crashes["n"] == 0:
+            crashes["n"] += 1
+            raise MemoryError("simulated worker crash")
+        return orig(key, reqs)
+
+    srv._run_wave = crashing
+    reqs = [srv.submit(SIMPLE, {"pid": p}) for p in (1, 2, 3)]
+    srv.drain()
+    srv.close()
+    assert all(r.status == "done" for r in reqs)
+    assert all(r.respawned for r in reqs)
+    assert srv.stats.worker_respawns == 1 and srv.stats.failed == 0
+
+
+def test_second_crash_fails_the_wave(tiny_gopt):
+    srv = tiny_gopt.serve(backend="numpy", overlap=True)
+
+    def always_crashing(key, reqs):
+        raise MemoryError("boom")
+
+    srv._run_wave = always_crashing
+    r = srv.submit(SIMPLE, {"pid": 1})
+    srv.drain()
+    srv.close()
+    assert r.status == "failed" and r.error is not None
+    assert srv.stats.worker_respawns == 1          # re-formed exactly once
+    # a crash is not binding-attributable: no quarantine bookkeeping
+    assert srv._offenders == {}
+
+
+def test_uncontained_mode_raises_and_strands_nothing(tiny_gopt):
+    plan = FaultPlan([FaultRule(op="expand", kind="transient", count=1)])
+    srv = tiny_gopt.serve(backend=faulty_spec("numpy", plan),
+                          overlap=False, containment=False)
+    r = srv.submit(SIMPLE, {"pid": 1})
+    with pytest.raises(InjectedFault):
+        srv.drain()
+    srv.close()
+    assert r.status == "failed"        # still terminal, never limbo
+
+
+def test_write_containment_isolates_bad_mutation():
+    from repro.graphdb.delta import MutableGraphStore
+    from repro.graphdb.ldbc import generate_motivating
+    g = GOpt(MutableGraphStore(
+        generate_motivating(n_person=30, n_product=10, n_place=4)))
+    srv = g.serve(backend="numpy", overlap=False)
+    ok = srv.submit_update("insert_vertex", "PERSON", {"id": 777_000})
+    bad = srv.submit_update("insert_edge", "NOT-AN-EDGE-TYPE", 0, 1)
+    ok2 = srv.submit_update("insert_vertex", "PERSON", {"id": 777_001})
+    srv.drain()
+    srv.close()
+    assert ok.status == "done" and ok2.status == "done"
+    assert bad.status == "failed" and bad.error is not None
+    assert srv.stats.writes == 2 and srv.stats.failed == 1

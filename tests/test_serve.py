@@ -348,3 +348,102 @@ def test_mixed_backend_servers_isolated_ledgers(serve_gopt):
         == srv_np.stats.waves > 0
     assert sum(p["waves"] for p in srv_jx.stats.per_plan.values()) \
         == srv_jx.stats.waves > 0
+
+
+# --------------------------------------------------------- fault tolerance
+
+def test_submit_storm_every_request_terminal(serve_gopt):
+    """Concurrent submitters racing the serving loop: every admitted
+    request ends in exactly one terminal status and the conservation
+    equation holds (submitted = completed + failed + dropped + cancelled,
+    with overload rejections accounted separately)."""
+    import threading
+
+    srv = serve_gopt.serve(backend="numpy", max_wave=8, max_pending=64,
+                           overlap=True)
+    accepted, rejected = [], []
+    lock = threading.Lock()
+
+    def storm(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(40):
+            q = (SIMPLE, STRLIT)[int(rng.integers(0, 2))]
+            try:
+                r = srv.submit(q, {"pid": int(rng.integers(0, 12))})
+                with lock:
+                    accepted.append(r)
+            except ServeOverload:
+                with lock:
+                    rejected.append(1)
+            if rng.random() < 0.1:
+                time.sleep(0.001)
+
+    threads = [threading.Thread(target=storm, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    while any(t.is_alive() for t in threads) or srv.pending:
+        srv.step()
+    for t in threads:
+        t.join()
+    srv.drain()
+    srv.close()
+
+    terminal = {"done", "failed", "dropped", "cancelled"}
+    assert len(accepted) + len(rejected) == 160
+    assert all(r.status in terminal for r in accepted)
+    s = srv.stats.summary()
+    assert s["submitted"] == len(accepted)
+    assert s["rejected"] == len(rejected)
+    assert s["submitted"] == (s["completed"] + s["failed"] + s["dropped"]
+                              + s["cancelled"])
+    # this storm has no faults and no deadlines: everything completed
+    assert s["failed"] == s["dropped"] == s["cancelled"] == 0
+    ref = {p: serve_gopt.prepare(SIMPLE, backend="numpy").execute(
+        {"pid": p})[0] for p in range(12)}
+    for r in accepted:
+        if r.prepared.source == SIMPLE:
+            _table_eq(r.table, ref[r.params["pid"]], "storm parity")
+
+
+def test_close_cancels_queued_requests(serve_gopt):
+    srv = serve_gopt.serve(backend="numpy", overlap=False)
+    done = srv.submit(SIMPLE, {"pid": 1})
+    srv.drain()
+    queued = [srv.submit(SIMPLE, {"pid": p}) for p in (2, 3)]
+    srv.close()
+    assert done.status == "done"
+    assert all(r.status == "cancelled" for r in queued)
+    assert all(r.finish_s > 0 for r in queued)
+    assert srv.stats.cancelled == 2
+    assert srv.pending == 0
+    s = srv.stats.summary()
+    assert s["submitted"] == (s["completed"] + s["failed"] + s["dropped"]
+                              + s["cancelled"])
+
+
+def test_compact_counts_unwarmable_plans():
+    """The warm loop narrowly skips plans whose remembered sample binding
+    no longer binds (ParamError) — counted, not silently swallowed — and
+    anything else propagates instead of hiding behind the old bare
+    ``except Exception: continue``."""
+    from repro.graphdb.delta import MutableGraphStore
+    gopt = GOpt(MutableGraphStore(generate_ldbc(sf=0.05, seed=7)))
+    gopt.store.insert_vertex("PERSON", {"id": 800_000})   # give compact work
+    srv = gopt.serve(backend="numpy", overlap=False, hot_plans=2)
+    for p in range(4):
+        srv.submit(SIMPLE, {"pid": p})
+    srv.drain()
+    key = next(iter(srv._plans))
+    srv._samples[key] = None                     # sample no longer binds
+    ev = srv.compact()
+    assert ev["warm_skips"] == 1
+    assert ev["repinned_plans"] == 0
+    # a non-ParamError failure in the warm loop must escape
+    for p in range(4):
+        srv.submit(SIMPLE, {"pid": p})
+    srv.drain()
+    srv._samples[key] = {"pid": 0}
+    srv.exec_kw = dict(srv.exec_kw, not_an_exec_kwarg=1)
+    with pytest.raises(TypeError):
+        srv.compact()
+    srv.close()

@@ -23,6 +23,15 @@ R3  lock discipline — in ``graphdb/serve.py``, every admission-side call
     the wave path, outside the lock) must never touch admission-side
     mutable state (``self._queues`` / ``self._pending`` / ``self._rid``).
 
+R4  containment discipline — in the serving path (``graphdb/serve.py``,
+    ``graphdb/engine.py``), a function with a broad handler (``except
+    Exception`` or bare ``except:``) must route the failure somewhere
+    observable: terminal request accounting (``_mark_failed`` /
+    ``_fail_crashed``), a stats/ledger attribute, or a recorded fallback.
+    A broad handler that silently swallows (the pre-containment
+    ``except Exception: continue``) leaves requests in limbo and failures
+    invisible to EXPLAIN.
+
 Exit status: 0 when clean; with ``--strict``, 1 on any violation (the CI
 gate).  Violations print as ``path:line: R<n> message``.
 """
@@ -84,7 +93,18 @@ LOCKED_CALLS = ("prepare", "touch_plan")       # self.gopt.<name>( sites
 ADMISSION_STATE = frozenset({"_queues", "_pending", "_rid"})
 # worker-side methods: run on the wave path, must not reach admission state
 WORKER_METHODS = frozenset({"_run_wave", "_run_write_wave", "_update_hotness",
-                            "_set_pinned", "_chain_specs"})
+                            "_set_pinned", "_chain_specs", "_exec_group",
+                            "_contained_exec", "_level_kw", "_mark_deadline",
+                            "_mark_failed", "_breaker", "_breaker_pick",
+                            "_breaker_report"})
+
+# ------------------------------------------------------------------ R4 config
+CONTAINMENT_FILES = ("graphdb/serve.py", "graphdb/engine.py")
+# attributes/calls that make a broad handler's failure observable
+R4_SINKS = frozenset({"stats", "fault_stats", "transfer_stats",
+                      "kernel_stats", "fallbacks", "record",
+                      "_mark_failed", "_fail_crashed", "_mark_deadline",
+                      "_contained_exec"})
 
 
 def _qualname(stack: list[str]) -> str:
@@ -238,6 +258,48 @@ def check_serve_locks(violations: list):
 
 
 # --------------------------------------------------------------------------
+# R4: broad handlers in the serving path must route failures observably
+# --------------------------------------------------------------------------
+
+def _is_broad_handler(h: ast.ExceptHandler) -> bool:
+    if h.type is None:
+        return True                                       # bare except:
+    names = []
+    t = h.type
+    for n in (t.elts if isinstance(t, ast.Tuple) else [t]):
+        if isinstance(n, ast.Name):
+            names.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            names.append(n.attr)
+    return any(n in ("Exception", "BaseException") for n in names)
+
+
+def check_containment(violations: list):
+    for rel in CONTAINMENT_FILES:
+        path = SRC / rel
+        tree = ast.parse(path.read_text())
+        for stack, scope in _iter_funcs(tree):
+            if not isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            handlers = [h for n in _own_statements(scope)
+                        if isinstance(n, ast.Try)
+                        for h in n.handlers if _is_broad_handler(h)]
+            if not handlers:
+                continue
+            sinks = any(isinstance(n, ast.Attribute) and n.attr in R4_SINKS
+                        for n in _own_statements(scope))
+            reraises = any(isinstance(n, ast.Raise)
+                           for h in handlers for n in ast.walk(h))
+            if not sinks and not reraises:
+                violations.append(
+                    (rel, handlers[0].lineno,
+                     f"R4 {_qualname(stack)!r} catches broad exceptions "
+                     f"without recording the failure (must mark requests "
+                     f"failed, record on a stats ledger, or re-raise — "
+                     f"silent swallows leave requests in limbo)"))
+
+
+# --------------------------------------------------------------------------
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -249,10 +311,12 @@ def main(argv=None) -> int:
     check_host_arrays(violations)
     check_ledgers(violations)
     check_serve_locks(violations)
+    check_containment(violations)
 
     for rel, line, msg in sorted(violations):
         print(f"src/repro/{rel}:{line}: {msg}")
-    n_files = len(DATA_PLANE) + len(COMPILED_BACKENDS) + 1
+    n_files = (len(DATA_PLANE) + len(COMPILED_BACKENDS) + 1
+               + len(CONTAINMENT_FILES))
     print(f"lint_contracts: {len(violations)} violation(s) across "
           f"{n_files} checked module(s)")
     return 1 if (args.strict and violations) else 0
